@@ -1,0 +1,2 @@
+"""Benchmark harness -- one module per paper table/figure + the dry-run
+roofline reporter. Entry point: python -m benchmarks.run"""

@@ -1,0 +1,81 @@
+"""Kernel microbenchmarks: wall-clock of the XLA lowerings (CPU) and HBM
+byte accounting of the Pallas kernel contracts (Table IV workload shapes).
+
+Wall-clock on CPU measures the *jnp reference paths* (interpret-mode
+Pallas is emulation, not a perf path); the derived columns report the
+kernel-contract HBM bytes -- the quantity that determines TPU decode/
+serving speedup (DESIGN.md Tier 1).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nm
+
+try:
+    from .cycle_model import WORKLOADS
+except ImportError:
+    from cycle_model import WORKLOADS
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(workloads=("BERT-L1", "GPT-L1")) -> List[dict]:
+    rows = []
+    for name in workloads:
+        m, n, k = WORKLOADS[name]
+        m = min(m, 512)
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (m, k), jnp.float32).astype(jnp.bfloat16)
+        w = jax.random.normal(key, (k, n), jnp.float32).astype(jnp.bfloat16)
+
+        dense = jax.jit(lambda x, w: x @ w)
+        t_dense = _time(dense, x, w)
+        dense_bytes = nm.dense_bytes(k, n)
+
+        for sp_n in (2, 1):
+            pruned, _ = nm.prune_nm(w, sp_n, 4)
+            c = nm.compress_nm(pruned, sp_n, 4)
+            pm = nm.pack_meta(c.meta)
+
+            @jax.jit
+            def spmm(x, v, pm):
+                meta = nm.unpack_meta(pm)
+                wd = nm.decompress(v, meta, sp_n, 4)
+                return x @ wd
+
+            t_sp = _time(spmm, x, c.values, pm)
+            cb = nm.storage_bytes(c)
+            rows.append({
+                "name": f"{name}/{sp_n}:4",
+                "us_dense": t_dense, "us_spmm_xla": t_sp,
+                "weight_bytes_dense": dense_bytes,
+                "weight_bytes_compressed": cb,
+                "hbm_reduction": dense_bytes / cb,
+            })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"kernel_{r['name']},us_dense={r['us_dense']:.0f},"
+              f"us_spmm_xla={r['us_spmm_xla']:.0f},"
+              f"weight_bytes={r['weight_bytes_dense']}->"
+              f"{r['weight_bytes_compressed']},"
+              f"hbm_reduction={r['hbm_reduction']:.2f}x")
+    return None
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Roofline table from the dry-run results (experiments/dryrun/*.json).
+
+Per (arch x shape) single-pod cell: the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS = 6·N·D (train) / 2·N_active·tokens
+(decode/prefill fwd), and the useful-compute ratio MODEL/HLO.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Optional
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+PEAK_FLOPS = 197e12
+N_DEV_SINGLE = 256
+
+
+def model_flops(meta: dict) -> float:
+    """Analytic useful FLOPs per device per step."""
+    n_active = meta["active_params"]
+    if meta["kind"] == "train":
+        tokens = meta["seq_len"] * meta["global_batch"]
+        return 6.0 * n_active * tokens / meta["n_devices"]
+    if meta["kind"] == "prefill":
+        tokens = meta["seq_len"] * meta["global_batch"]
+        return 2.0 * n_active * tokens / meta["n_devices"]
+    tokens = meta["global_batch"]  # decode: one token per sequence
+    return 2.0 * n_active * tokens / meta["n_devices"]
+
+
+def load(mesh: str = "pod1") -> List[dict]:
+    rows = []
+    for fn in sorted(RESULTS_DIR.glob(f"*__{mesh}.json")):
+        rows.append(json.loads(fn.read_text()))
+    return rows
+
+
+def main(mesh: str = "pod1") -> Optional[List[dict]]:
+    rows = load(mesh)
+    if not rows:
+        print("roofline,NO_RESULTS (run: python -m repro.launch.dryrun --all)")
+        return None
+    hdr = ("cell,compute_s,memory_s,collective_s,bound,"
+           "model_flops_frac_of_peak,useful_ratio")
+    print(hdr)
+    for r in rows:
+        cell = f"{r['arch']}__{r['shape']}"
+        if r.get("status") == "skip":
+            print(f"{cell},skip({r['reason']})")
+            continue
+        if r.get("status") != "ok" or "roofline" not in r:
+            print(f"{cell},ERROR")
+            continue
+        rf = r["roofline"]
+        mf = model_flops(r)
+        hlo_f = r["hlo_cost"]["flops"]
+        bound_s = rf["step_s_lower_bound"]
+        # roofline fraction: useful model FLOPs at the achievable step time
+        frac = mf / bound_s / PEAK_FLOPS
+        print(f"{cell},{rf['compute_s']:.3f},{rf['memory_s']:.3f},"
+              f"{rf['collective_s']:.3f},{rf['bound']},"
+              f"{frac*100:.2f}%,{mf/hlo_f:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+  E1 fig13  cycle-model engine sweep      (paper Fig. 13 / Table III)
+  E2 fig15  unstructured via row-wise N:M (paper Fig. 15)
+  E3 fig3   vector-vs-matrix roofline     (paper Fig. 3)
+  E4 fig4   instruction counts            (paper Fig. 4)
+  E5 kernels  Table-IV-shape kernel contracts + XLA wall-clock
+  E7 roofline  dry-run-driven roofline table (reads experiments/dryrun)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig13,...]
+"""
+
+import argparse
+import sys
+import time
+
+
+def _section(name):
+    print(f"### {name}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import cycle_model, fig3_roofline, fig4_instr_counts
+    from . import fig15_unstructured, kernel_bench, roofline
+
+    jobs = [
+        ("fig13_cycle_model", cycle_model.main),
+        ("fig15_unstructured", fig15_unstructured.main),
+        ("fig3_roofline", fig3_roofline.main),
+        ("fig4_instr_counts", fig4_instr_counts.main),
+        ("kernels", kernel_bench.main),
+        ("roofline", roofline.main),
+    ]
+    for name, fn in jobs:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        _section(name)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness robust
+            print(f"{name},ERROR,{e}", file=sys.stderr)
+            raise
+        print(f"{name}_wall_s,{time.time()-t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: build a tiny LM, train a few steps, decode a continuation.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, TokenDataset
+from repro.models import decode_step, init_caches, make_train_step
+from repro.models.lm import init_train_state
+
+
+def main():
+    cfg = get_smoke_config("internlm2_1_8b")
+    print(f"model: {cfg.name} (reduced) ~{cfg.param_count()/1e6:.1f}M params")
+
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg)
+    ds = TokenDataset(DataConfig(seq_len=64, global_batch=8,
+                                 vocab_size=cfg.vocab_size))
+    step = jax.jit(make_train_step(cfg, lr=3e-3))
+    for i in range(20):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        params, opt, loss = step(params, opt, batch, jnp.int32(i))
+        if i % 5 == 0 or i == 19:
+            print(f"step {i:3d} loss {float(loss):.3f}")
+
+    # greedy decode 16 tokens from a prompt
+    prompt = jnp.asarray([[1, 7, 3, 12]], jnp.int32)
+    caches = init_caches(cfg, 1, 64)
+    tok = prompt[:, :1]
+    out = []
+    sstep = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))
+    for i in range(20):
+        logits, caches = sstep(params, caches, tok, jnp.int32(i))
+        tok = (prompt[:, i + 1 : i + 2] if i + 1 < prompt.shape[1]
+               else jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32))
+        out.append(int(tok[0, 0]))
+    print("generated:", out)
+
+
+if __name__ == "__main__":
+    main()

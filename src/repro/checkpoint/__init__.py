@@ -1,0 +1,3 @@
+"""Checkpointing."""
+
+from .store import latest_step, restore, save

@@ -1,0 +1,138 @@
+"""Fault-tolerant checkpoint store (no external deps).
+
+- params/opt-state/data-cursor serialized as flattened npz + a JSON
+  manifest carrying the treedef, step, and mesh metadata.
+- **atomic**: written to ``<dir>/tmp-<step>`` then os.rename'd -- a crash
+  mid-write never corrupts the latest checkpoint.
+- **keep-k** garbage collection.
+- **elastic restore**: arrays are saved with their full logical shapes, so
+  ``restore`` can place them onto ANY mesh (different DP/TP than the run
+  that saved them) by passing target shardings.
+- async mode: the save runs on a background thread (training continues).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "###"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(
+    ckpt_dir: str | Path,
+    step: int,
+    tree: Any,
+    *,
+    extra: Optional[dict] = None,
+    keep: int = 3,
+    async_save: bool = False,
+) -> threading.Thread | None:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    # snapshot to host memory synchronously (consistent view) ...
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+
+    def _write():
+        tmp = ckpt_dir / f"tmp-{step}"
+        final = ckpt_dir / f"step-{step:010d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        # npz can't serialize ml_dtypes (bfloat16 etc.): store a same-width
+        # integer view + the true dtype in the manifest
+        arrays, dtypes = {}, {}
+        for k, v in flat.items():
+            kk = k.replace("/", _SEP)
+            dtypes[kk] = str(v.dtype)
+            if v.dtype.kind not in "fiub" or str(v.dtype) == "bfloat16":
+                v = v.view(np.dtype(f"u{v.dtype.itemsize}"))
+            arrays[kk] = v
+        np.savez(tmp / "arrays.npz", **arrays)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "keys": list(flat.keys()),
+            "dtypes": dtypes,
+            "extra": extra or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+        _gc(ckpt_dir, keep)
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(ckpt_dir.glob("step-*"))
+    for old in steps[:-keep]:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(ckpt_dir.glob("step-*"))
+    if not steps:
+        return None
+    return int(steps[-1].name.split("-")[1])
+
+
+def restore(
+    ckpt_dir: str | Path,
+    step: int,
+    template: Any,
+    *,
+    shardings: Any = None,
+) -> tuple[Any, dict]:
+    """Restore into the structure of ``template``; if ``shardings`` is
+    given, place each array with jax.device_put onto the (possibly new)
+    mesh -- elastic re-sharding on resume."""
+    d = Path(ckpt_dir) / f"step-{step:010d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    arrays = np.load(d / "arrays.npz")
+    dtypes = manifest.get("dtypes", {})
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    flat_sh = jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    for i, (path, leaf) in enumerate(paths):
+        key = jax.tree_util.keystr(path).replace("/", _SEP)
+        arr = arrays[key]
+        true_dt = dtypes.get(key)
+        if true_dt and str(arr.dtype) != true_dt:
+            import ml_dtypes  # jax dependency; provides bfloat16 et al.
+
+            arr = arr.view(np.dtype(getattr(ml_dtypes, true_dt, true_dt)))
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if flat_sh is not None:
+            leaves.append(jax.device_put(arr, flat_sh[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves
+    )
+    return tree, manifest.get("extra", {})

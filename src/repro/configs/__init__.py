@@ -1,0 +1,58 @@
+"""Assigned architecture configs (+ the paper's own GEMM workloads).
+
+``get_config(arch_id)`` returns the full-size ModelConfig;
+``get_smoke_config(arch_id)`` a reduced same-family config for CPU tests.
+``SHAPES`` are the four assigned input-shape cells; ``cell_supported``
+encodes the assignment's skip rules (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+ARCH_IDS = (
+    "jamba_1_5_large_398b",
+    "gemma3_1b",
+    "starcoder2_3b",
+    "mistral_large_123b",
+    "internlm2_1_8b",
+    "qwen3_moe_235b_a22b",
+    "dbrx_132b",
+    "mamba2_2_7b",
+    "hubert_xlarge",
+    "phi_3_vision_4_2b",
+)
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+# archs allowed to run long_500k (sub-quadratic / local-dominant)
+_LONG_OK = {"jamba_1_5_large_398b", "mamba2_2_7b", "gemma3_1b"}
+# encoder-only archs have no decode step
+_ENCODER = {"hubert_xlarge"}
+
+
+def cell_supported(arch_id: str, shape_name: str) -> Tuple[bool, str]:
+    """(supported, reason-if-not) per the assignment's skip rules."""
+    if arch_id in _ENCODER and shape_name in ("decode_32k", "long_500k"):
+        return False, "encoder-only: no decode step"
+    if shape_name == "long_500k" and arch_id not in _LONG_OK:
+        return False, "pure full-attention arch: long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.SMOKE_CONFIG

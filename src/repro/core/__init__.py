@@ -1,0 +1,28 @@
+"""Core N:M structured sparsity library (the paper's primary contribution).
+
+- ``nm``: compress/decompress + 2-bit metadata packing (treg/mreg adaptation)
+- ``rowwise``: unstructured -> row-wise N:M lossless cover (paper §III-D/V-E)
+- ``ste``: SR-STE sparse training
+- ``sparse_linear``: the user-facing projection with 4 execution modes
+"""
+
+from . import nm, rowwise, ste, sparse_linear
+from .nm import (
+    NMCompressed,
+    compress_nm,
+    decompress,
+    decompress_c,
+    nm_mask,
+    pack_meta,
+    prune_nm,
+    unpack_meta,
+)
+from .rowwise import (
+    RowwiseCompressed,
+    rowwise_compress,
+    rowwise_cover_stats,
+    rowwise_matmul_ref,
+    rowwise_tiers,
+)
+from .sparse_linear import SparsityConfig, apply_linear, convert_to_serving, init_linear
+from .ste import srste_prune

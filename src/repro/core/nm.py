@@ -1,0 +1,180 @@
+"""N:M structured sparsity: pruning, compression, metadata packing.
+
+Conventions
+-----------
+Weights are stored ``(K, O)`` with the contraction (reduction) dimension
+first, matching ``y = x @ w``.  N:M sparsity is along K: within every block
+of ``m`` consecutive K-rows, each output channel ``o`` keeps at most ``n``
+nonzeros.  This is the transpose of the paper's ``A (rows, K)`` layout —
+the paper's "row" (of the sparse operand) is our output channel.
+
+Compressed format (the treg/mreg adaptation, DESIGN.md §2)
+----------------------------------------------------------
+``values``: ``(K * n / m, O)``, same dtype as the dense weight — only the
+kept entries, block-major along K (paper: treg holding nonzeros of the
+*effective* tile).
+
+``meta``: ``(K * n / m, O)`` uint8 with entries in ``[0, m)`` — the
+in-block position of each kept value (paper: mreg, 2 bits per nonzero for
+m=4).  ``pack_meta`` packs 4 consecutive K_c-rows into one byte so HBM /
+storage accounting matches the paper's 2-bit budget.
+
+Within a block the kept indices are strictly increasing, and padding (for
+blocks with fewer than ``n`` nonzeros) re-uses the smallest unused indices
+with value 0, keeping the format canonical and ``decompress`` collision-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "NMCompressed",
+    "prune_nm",
+    "nm_mask",
+    "compress_nm",
+    "decompress",
+    "decompress_c",
+    "pack_meta",
+    "unpack_meta",
+    "storage_bytes",
+    "dense_bytes",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NMCompressed:
+    """Compressed N:M sparse matrix (values + 2-bit-per-entry metadata)."""
+
+    values: jax.Array  # (K_c, O) = (K*n/m, O)
+    meta: jax.Array    # (K_c, O) uint8, entries in [0, m)
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def k_compressed(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def k_effective(self) -> int:
+        return self.values.shape[0] * self.m // self.n
+
+    @property
+    def out_features(self) -> int:
+        return self.values.shape[1]
+
+
+def _block_view(w: jax.Array, m: int) -> jax.Array:
+    """(K, O) -> (K//m, m, O)."""
+    k, o = w.shape
+    if k % m:
+        raise ValueError(f"K={k} not divisible by m={m}")
+    return w.reshape(k // m, m, o)
+
+
+def nm_mask(w: jax.Array, n: int, m: int) -> jax.Array:
+    """Boolean keep-mask implementing magnitude top-n per m-block (per column)."""
+    blocks = _block_view(w, m)                      # (B, m, O)
+    mag = jnp.abs(blocks)
+    # rank positions by magnitude (descending), stable on ties by index
+    order = jnp.argsort(-mag, axis=1, stable=True)  # (B, m, O)
+    ranks = jnp.argsort(order, axis=1, stable=True)  # rank of each slot
+    mask = ranks < n
+    return mask.reshape(w.shape)
+
+
+def prune_nm(w: jax.Array, n: int, m: int) -> Tuple[jax.Array, jax.Array]:
+    """Magnitude-prune ``w`` to N:M along K. Returns (pruned, mask)."""
+    mask = nm_mask(w, n, m)
+    return w * mask.astype(w.dtype), mask
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def compress_nm(w: jax.Array, n: int, m: int) -> NMCompressed:
+    """Compress an (already) N:M sparse ``(K, O)`` matrix.
+
+    Lossless when ``w`` satisfies the N:M property (e.g. output of
+    ``prune_nm``); otherwise keeps the top-n by magnitude per block
+    (i.e. compress = prune + pack).
+    """
+    blocks = _block_view(w, m)                      # (B, m, O)
+    mag = jnp.abs(blocks)
+    order = jnp.argsort(-mag, axis=1, stable=True)  # descending magnitude
+    keep = order[:, :n, :]                          # (B, n, O) in-block idx
+    # canonicalize: sort kept indices ascending within the block
+    keep = jnp.sort(keep, axis=1)
+    vals = jnp.take_along_axis(blocks, keep, axis=1)  # (B, n, O)
+    kc = blocks.shape[0] * n
+    values = vals.reshape(kc, w.shape[1])
+    meta = keep.reshape(kc, w.shape[1]).astype(jnp.uint8)
+    return NMCompressed(values=values, meta=meta, n=n, m=m)
+
+
+def _decompress(values: jax.Array, meta: jax.Array, n: int, m: int) -> jax.Array:
+    """Expand compressed ``(K_c, O)`` values/meta to dense ``(K_eff, O)``.
+
+    This is the pure-jnp semantics of what the ``nm_spmm`` Pallas kernel
+    does in VMEM (the M:1-mux adaptation): scatter each kept value into its
+    in-block slot via a one-hot compare.
+    """
+    kc, o = values.shape
+    b = kc // n
+    vals = values.reshape(b, n, o)
+    idx = meta.reshape(b, n, o).astype(jnp.int32)
+    onehot = idx[:, :, None, :] == jnp.arange(m, dtype=jnp.int32)[None, None, :, None]
+    dense = jnp.sum(vals[:, :, None, :] * onehot.astype(values.dtype), axis=1)
+    return dense.reshape(b * m, o)
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def decompress(values: jax.Array, meta: jax.Array, n: int, m: int) -> jax.Array:
+    return _decompress(values, meta, n, m)
+
+
+def decompress_c(c: NMCompressed) -> jax.Array:
+    return decompress(c.values, c.meta, c.n, c.m)
+
+
+def pack_meta(meta: jax.Array) -> jax.Array:
+    """Pack uint8 2-bit indices 4-per-byte along axis 0 (K_c rows).
+
+    ``meta`` must have ``K_c % 4 == 0`` (pad upstream if needed).  Matches
+    the paper's mreg budget: 2 bits per nonzero.
+    """
+    kc, o = meta.shape
+    if kc % 4:
+        raise ValueError(f"K_c={kc} not divisible by 4 for packing")
+    m4 = meta.reshape(kc // 4, 4, o).astype(jnp.uint32)
+    shifts = (jnp.arange(4, dtype=jnp.uint32) * 2)[None, :, None]
+    return jnp.sum(m4 << shifts, axis=1).astype(jnp.uint8)
+
+
+def unpack_meta(packed: jax.Array) -> jax.Array:
+    """Inverse of ``pack_meta``: (K_c/4, O) uint8 -> (K_c, O) uint8 in [0,4)."""
+    kp, o = packed.shape
+    p = packed.astype(jnp.uint32)[:, None, :]
+    shifts = (jnp.arange(4, dtype=jnp.uint32) * 2)[None, :, None]
+    un = (p >> shifts) & 0x3
+    return un.reshape(kp * 4, o).astype(jnp.uint8)
+
+
+def storage_bytes(c: NMCompressed, packed: bool = True) -> int:
+    """HBM bytes of the compressed representation (values + metadata)."""
+    vb = int(np.prod(c.values.shape)) * c.values.dtype.itemsize
+    bits_per_idx = max(1, int(np.ceil(np.log2(c.m))))
+    if packed:
+        mb = int(np.ceil(int(np.prod(c.meta.shape)) * bits_per_idx / 8))
+    else:
+        mb = int(np.prod(c.meta.shape)) * c.meta.dtype.itemsize
+    return vb + mb
+
+
+def dense_bytes(k: int, o: int, dtype=jnp.bfloat16) -> int:
+    return k * o * jnp.dtype(dtype).itemsize

@@ -1,0 +1,180 @@
+"""Unstructured -> row-wise N:M transformation (paper §III-D, §V-E).
+
+Given an unstructured sparse weight ``(K, O)`` (sparsity along K per output
+channel), pick for each output channel the smallest N in ``tiers`` such that
+*every* M-block of that channel has at most N nonzeros — a **lossless**
+cover: all nonzeros of the unstructured matrix survive.
+
+The paper's "pseudo row-wise" requirement (consecutive groups of rows with
+the same sparsity, via DMA reordering) becomes a channel permutation here:
+``group_channels`` sorts channels by tier so each tier forms a contiguous
+segment that dispatches to one ``nm_spmm`` kernel call with its own N
+(the TILE_SPMM_R adaptation), and the output is un-permuted afterwards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nm
+
+__all__ = [
+    "rowwise_tiers",
+    "rowwise_cover_stats",
+    "RowwiseCompressed",
+    "rowwise_compress",
+    "rowwise_matmul_ref",
+    "rowwise_storage_bytes",
+    "effective_macs_fraction",
+]
+
+
+def rowwise_tiers(
+    w: jax.Array, m: int = 4, tiers: Sequence[int] = (1, 2, 4)
+) -> jax.Array:
+    """Per-output-channel smallest covering N. Returns int32 ``(O,)``."""
+    k, o = w.shape
+    blocks = (w.reshape(k // m, m, o) != 0).sum(axis=1)  # (B, O) nnz per block
+    worst = blocks.max(axis=0)                           # (O,) max nnz/block
+    tier_arr = jnp.asarray(sorted(tiers), dtype=jnp.int32)
+    # smallest tier >= worst
+    ge = tier_arr[None, :] >= worst[:, None].astype(jnp.int32)
+    first = jnp.argmax(ge, axis=1)
+    return tier_arr[first]
+
+
+def rowwise_cover_stats(
+    w: jax.Array, m: int = 4, tiers: Sequence[int] = (1, 2, 4)
+) -> Dict[int, float]:
+    """Fraction of channels landing in each tier (for Fig. 15-style analysis)."""
+    t = np.asarray(rowwise_tiers(w, m, tiers))
+    return {int(n): float((t == n).mean()) for n in sorted(tiers)}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RowwiseCompressed:
+    """Channel-permuted, tier-segmented compressed representation."""
+
+    # one NMCompressed per tier, channels permuted tier-major
+    segments: Tuple[nm.NMCompressed, ...]
+    perm: jax.Array        # (O,) original channel index of permuted position
+    inv_perm: jax.Array    # (O,) permuted position of original channel
+    tier_sizes: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    tiers: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+
+def rowwise_compress(
+    w: jax.Array, m: int = 4, tiers: Sequence[int] = (1, 2, 4)
+) -> RowwiseCompressed:
+    """Lossless row-wise N:M compression of an unstructured-sparse ``w``.
+
+    Not jittable (tier segment sizes are data-dependent) — compression is an
+    offline step, exactly as in the paper ("DNN compression is done offline").
+    """
+    tiers = tuple(sorted(tiers))
+    t = np.asarray(rowwise_tiers(w, m, tiers))
+    order = np.argsort(t, kind="stable")
+    perm = jnp.asarray(order, dtype=jnp.int32)
+    inv = np.empty_like(order)
+    inv[order] = np.arange(len(order))
+    segments = []
+    sizes = []
+    w_np = w[:, perm]
+    start = 0
+    for n in tiers:
+        cnt = int((t == n).sum())
+        sizes.append(cnt)
+        if cnt == 0:
+            segments.append(None)
+            start += cnt
+            continue
+        seg = w_np[:, start : start + cnt]
+        segments.append(nm.compress_nm(seg, n, m))
+        start += cnt
+    return RowwiseCompressed(
+        segments=tuple(s for s in segments),
+        perm=perm,
+        inv_perm=jnp.asarray(inv, dtype=jnp.int32),
+        tier_sizes=tuple(sizes),
+        tiers=tiers,
+        m=m,
+    )
+
+
+def rowwise_matmul_ref(x: jax.Array, rc: RowwiseCompressed) -> jax.Array:
+    """Oracle: y = x @ w for the row-wise compressed w (per-tier dispatch)."""
+    outs = []
+    for n, size, seg in zip(rc.tiers, rc.tier_sizes, rc.segments):
+        if size == 0 or seg is None:
+            continue
+        w_seg = nm.decompress_c(seg)
+        outs.append(x @ w_seg.astype(x.dtype))
+    y_perm = jnp.concatenate(outs, axis=-1)
+    return y_perm[..., rc.inv_perm]
+
+
+def rowwise_matmul_kernels(
+    x: jax.Array, rc: RowwiseCompressed, *, interpret: bool = True,
+    block_pad: int = 128,
+) -> jax.Array:
+    """TILE_SPMM_R adaptation: per-tier dispatch into the ``nm_spmm``
+    Pallas kernel (one call per N:4 tier, channels pre-grouped by the
+    pseudo-row-wise permutation), output un-permuted.
+
+    Channel segments are zero-padded to ``block_pad`` lanes so every call
+    is MXU-aligned; padding columns are dropped on the way out.
+    """
+    from repro.core import nm as _nm
+    from repro.kernels.nm_spmm.kernel import nm_spmm
+
+    outs = []
+    for n, size, seg in zip(rc.tiers, rc.tier_sizes, rc.segments):
+        if size == 0 or seg is None:
+            continue
+        vals, meta = seg.values, seg.meta
+        o = vals.shape[1]
+        pad = (-o) % block_pad
+        if pad:
+            vals = jnp.pad(vals, ((0, 0), (0, pad)))
+            meta = jnp.pad(meta, ((0, 0), (0, pad)))
+        pm = _nm.pack_meta(meta)
+        y = nm_spmm(
+            x.astype(vals.dtype), vals, pm, n,
+            block_b=min(128, x.shape[0]),
+            block_o=min(block_pad, vals.shape[1]),
+            block_ke=min(512, x.shape[1]),
+            interpret=interpret,
+        )
+        outs.append(y[:, :o])
+    y_perm = jnp.concatenate(outs, axis=-1)
+    return y_perm[..., rc.inv_perm]
+
+
+def rowwise_storage_bytes(rc: RowwiseCompressed) -> int:
+    total = 0
+    for size, seg in zip(rc.tier_sizes, rc.segments):
+        if size and seg is not None:
+            total += nm.storage_bytes(seg)
+    # + per-channel tier tag: 2 bits per channel (paper: <=8B per tile row meta)
+    total += int(np.ceil(len(np.asarray(rc.perm)) * 2 / 8))
+    return total
+
+
+def effective_macs_fraction(
+    w: jax.Array, m: int = 4, tiers: Sequence[int] = (1, 2, 4)
+) -> float:
+    """Fraction of dense MACs that remain after row-wise N:M covering.
+
+    This is the compute-skip ratio a VEGETA-S engine achieves on the
+    transformed matrix (drives the Fig. 15 speedup model).
+    """
+    t = np.asarray(rowwise_tiers(w, m, tiers)).astype(np.float64)
+    return float(t.mean() / m)

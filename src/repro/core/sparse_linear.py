@@ -1,0 +1,144 @@
+"""SparseLinear: the framework's first-class N:M sparse projection.
+
+Execution modes (cfg.mode):
+  dense            y = x @ w                       (4:4 baseline, TILE_GEMM)
+  masked           y = x @ srste_prune(w)          (N:M training w/ SR-STE)
+  compressed       y = x @ dec(values, meta)       (Tier-1 serve: HBM win;
+                                                    the nm_spmm kernel path,
+                                                    paper TILE_SPMM_{U,V})
+  gather           y = gather_k(x) @ values        (Tier-2 serve: FLOP win;
+                                                    lane-aligned metadata,
+                                                    beyond-paper, DESIGN §2)
+
+The jnp formulations here are what the full models lower for the dry-run
+(so XLA cost analysis sees the byte/FLOP reductions); the Pallas kernels in
+``repro.kernels`` implement the same contracts tile-by-tile in VMEM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import nm
+from .ste import srste_prune
+
+__all__ = ["SparsityConfig", "init_linear", "apply_linear", "convert_to_serving"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Sparsity spec for one (family of) projection(s)."""
+
+    n: int = 4
+    m: int = 4
+    mode: str = "dense"          # dense | masked | compressed | gather
+    granularity: str = "layer"   # network | layer | tile | row (docs/accounting)
+    srste_lam: float = 2e-4
+    # distribution of the linear: True = ZeRO-style weight all-gather at
+    # use-site (right for training); False = partial matmul + activation
+    # all-reduce (right for tiny-batch decode -- see EXPERIMENTS §Perf)
+    fsdp_gather: bool = True
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.mode != "dense" and self.n < self.m
+
+    def density(self) -> float:
+        return 1.0 if not self.is_sparse else self.n / self.m
+
+
+def init_linear(
+    key: jax.Array, k: int, o: int, cfg: SparsityConfig, dtype=jnp.bfloat16,
+    scale: Optional[float] = None,
+) -> Dict[str, Any]:
+    """Initialize parameters for one linear. Layout depends on mode."""
+    if scale is None:
+        scale = k ** -0.5
+    w = jax.random.normal(key, (k, o), dtype=jnp.float32) * scale
+    w = w.astype(dtype)
+    if cfg.mode in ("dense", "masked") or not cfg.is_sparse:
+        return {"w": w}
+    if cfg.mode == "compressed":
+        pruned, _ = nm.prune_nm(w, cfg.n, cfg.m)
+        c = nm.compress_nm(pruned, cfg.n, cfg.m)
+        return {"values": c.values, "meta_packed": nm.pack_meta(c.meta)}
+    if cfg.mode == "gather":
+        # lane-aligned: one metadata column shared across all O channels
+        kc = k * cfg.n // cfg.m
+        # deterministic spread pattern; training substrate refines it
+        base = jnp.arange(kc, dtype=jnp.int32) % cfg.m
+        idx = jnp.sort(base.reshape(-1, cfg.n), axis=1).reshape(kc)
+        vals = jax.random.normal(key, (kc, o), dtype=jnp.float32) * scale
+        return {"values": vals.astype(dtype), "gather_idx": idx.astype(jnp.int32)}
+    raise ValueError(f"unknown mode {cfg.mode}")
+
+
+def apply_linear(
+    params: Dict[str, Any], x: jax.Array, cfg: SparsityConfig,
+    gather: Optional[str] = None,
+) -> jax.Array:
+    """y = x @ W with the mode's lowering. x: (..., K) -> (..., O).
+
+    ``gather`` ("col" | "row" | None) pins the weight sharding at use-site
+    to model-axis-only, forcing the FSDP all-gather of the (small) weight
+    instead of an activation all-reduce over the data axis (ZeRO-3
+    semantics; its VJP is the matching grad reduce-scatter).
+    """
+    from repro.models.pjit_utils import constrain  # local: avoid cycle
+
+    def _g(w):
+        if not cfg.fsdp_gather:
+            return w
+        if gather == "col":
+            return constrain(w, None, "model")
+        if gather == "row":
+            return constrain(w, "model", None)
+        return w
+
+    if "w" in params:
+        w = params["w"]
+        if cfg.mode == "masked" and cfg.is_sparse:
+            w = srste_prune(w, cfg.n, cfg.m, cfg.srste_lam)
+        return x @ _g(w).astype(x.dtype)
+    if "meta_packed" in params:
+        meta = nm.unpack_meta(params["meta_packed"])
+        w = nm.decompress(_g(params["values"]), meta, cfg.n, cfg.m)
+        return x @ w.astype(x.dtype)
+    if "gather_idx" in params:
+        idx = params["gather_idx"]
+        kc = idx.shape[0]
+        blk = (jnp.arange(kc, dtype=jnp.int32) // cfg.n) * cfg.m
+        x_g = jnp.take(x, blk + idx, axis=-1)
+        return x_g @ _g(params["values"]).astype(x.dtype)
+    raise ValueError(f"unrecognized linear params: {list(params)}")
+
+
+def convert_to_serving(
+    params: Dict[str, Any], cfg: SparsityConfig, target_mode: str = "compressed"
+) -> Dict[str, Any]:
+    """Offline conversion: dense/masked trained weights -> serving layout."""
+    if "w" not in params:
+        return params
+    w = params["w"]
+    if not cfg.is_sparse or target_mode == "dense":
+        return {"w": w}
+    pruned, _ = nm.prune_nm(w, cfg.n, cfg.m)
+    if target_mode == "compressed":
+        c = nm.compress_nm(pruned, cfg.n, cfg.m)
+        return {"values": c.values, "meta_packed": nm.pack_meta(c.meta)}
+    if target_mode == "gather":
+        # lane-aligned conversion: vote a shared in-block index set per block
+        k, o = w.shape
+        blocks = jnp.abs(w).reshape(k // cfg.m, cfg.m, o).sum(axis=-1)  # (B, m)
+        order = jnp.argsort(-blocks, axis=1, stable=True)[:, : cfg.n]
+        keep = jnp.sort(order, axis=1)                                  # (B, n)
+        idx = keep.reshape(-1).astype(jnp.int32)                        # (K_c,)
+        kc = idx.shape[0]
+        blk = (jnp.arange(kc, dtype=jnp.int32) // cfg.n) * cfg.m
+        vals = w.reshape(k, o)[blk + idx, :]
+        return {"values": vals, "gather_idx": idx}
+    raise ValueError(f"unknown target {target_mode}")

@@ -1,0 +1,41 @@
+"""Sparse training: SR-STE (Zhou et al. [54]) for learning N:M networks.
+
+``srste_prune(w, n, m, lam)`` prunes to N:M in the forward pass; the
+backward pass is a straight-through estimator plus the SR-STE decay term
+``lam * (1 - mask) * w`` that pushes pruned weights toward zero, so the
+mask stabilizes during training.  This is the substrate the paper leans on
+for "layer-wise N:M shows better accuracy" ([51], [54]).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .nm import nm_mask
+
+__all__ = ["srste_prune"]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def srste_prune(w: jax.Array, n: int, m: int, lam: float = 2e-4) -> jax.Array:
+    mask = nm_mask(w, n, m)
+    return w * mask.astype(w.dtype)
+
+
+def _fwd(w, n, m, lam):
+    mask = nm_mask(w, n, m)
+    return w * mask.astype(w.dtype), (w, mask)
+
+
+def _bwd(n, m, lam, res, g):
+    w, mask = res
+    maskf = mask.astype(g.dtype)
+    # straight-through (full g) + sparse-refined decay on the pruned complement
+    grad = g + lam * (1.0 - maskf) * w.astype(g.dtype)
+    return (grad.astype(w.dtype),)
+
+
+srste_prune.defvjp(_fwd, _bwd)

@@ -1,0 +1,3 @@
+"""Data pipeline."""
+
+from .pipeline import DataConfig, TokenDataset, make_pipeline

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+- ``tile_gemm``: dense blocked GEMM (TILE_GEMM / VEGETA-D baseline)
+- ``nm_spmm``: Tier-1 N:M SPMM, in-VMEM decompress (TILE_SPMM_{U,V})
+- ``nm_spmm_gather``: Tier-2 lane-aligned reduced-K SPMM (beyond paper)
+- ``flash_attention``: chunked online-softmax attention
+
+All validated against ``ref.py`` oracles in interpret mode (CPU); on-TPU
+execution uses the same ``pallas_call`` with ``interpret=False``.
+"""

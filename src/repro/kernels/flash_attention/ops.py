@@ -1,0 +1,31 @@
+"""Jitted public wrapper for flash attention with GQA support."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention_op(
+    q, k, v, *, causal=True, block_q=256, block_k=256, interpret=False,
+):
+    """q: (B, Hq, T, D); k, v: (B, Hkv, T, D) with Hq % Hkv == 0."""
+    b, hq, t, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    out = flash_attention(
+        q.reshape(b * hq, t, d),
+        k.reshape(b * hq, t, d),
+        v.reshape(b * hq, t, d),
+        causal=causal, block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.reshape(b, hq, t, d)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash_attention."""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True, scale=None):
+    bh, tq, d = q.shape
+    tk = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((tq, tk), bool), k=tk - tq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,123 @@
+"""N:M structured-sparse GEMM Pallas kernel — TILE_SPMM_{U,V,T} adaptation.
+
+Computes ``Y (B, O) = X (B, K_eff) @ dec(V, meta) (K_eff, O)`` where the
+weight is stored *compressed*: ``V (K_c, O)`` keeps only the N nonzeros per
+M=4 block of K, and ``meta_packed (K_c/4, O) uint8`` carries four 2-bit
+in-block indices per byte (the mreg adaptation).
+
+TPU mapping of the paper's SPE input-mux (DESIGN.md §2, Tier 1):
+  * the dense weight tile **never exists in HBM** — HBM traffic for the
+    sparse operand is N/M of dense (+ 2-bit metadata);
+  * the M:1 mux becomes a VPU one-hot select producing the expanded
+    ``(BK_eff, BO)`` tile in VMEM, ~N compare+select ops per expanded
+    element, amortized over the MXU's BB-deep matmul;
+  * the fp32 accumulator tile lives in VMEM across the K grid — the
+    "output forwarding" equivalent (no C round-trip between accumulating
+    instructions).
+
+Only reshapes that preserve the trailing (lane) dimension are used, so the
+body lowers on Mosaic as well as in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _expand_rows4(a: jax.Array) -> jax.Array:
+    """(R, C) -> (4R, C), each row repeated 4x (lane dim preserved)."""
+    r, c = a.shape
+    return jnp.broadcast_to(a[:, None, :], (r, 4, c)).reshape(r * 4, c)
+
+
+def _unpack_meta_tile(pm: jax.Array) -> jax.Array:
+    """(R/4, C) uint8 packed -> (R, C) int32 indices in [0, 4)."""
+    r4, c = pm.shape
+    p = _expand_rows4(pm.astype(jnp.int32))
+    sh = (jax.lax.broadcasted_iota(jnp.int32, (4 * r4, c), 0) % 4) * 2
+    return (p >> sh) & 3
+
+
+def _decompress_tile(v: jax.Array, idx: jax.Array, n: int) -> jax.Array:
+    """Expand (BKc, BO) values/indices -> (BKc*4/n, BO) dense weight tile.
+
+    The in-VMEM "M:1 mux": slot j of each block receives the value whose
+    2-bit index equals j.  Indices are unique within a block, so the sum
+    over the N kept slots has at most one nonzero term per position and is
+    exact in bf16.
+    """
+    bkc, bo = v.shape
+    nb = bkc // n
+    bke = nb * 4
+    j_pat = jax.lax.broadcasted_iota(jnp.int32, (bke, bo), 0) % 4
+    v3 = v.reshape(nb, n, bo)
+    i3 = idx.reshape(nb, n, bo)
+    out = jnp.zeros((bke, bo), v.dtype)
+    for s in range(n):
+        vs = _expand_rows4(v3[:, s, :])
+        ix = _expand_rows4(i3[:, s, :])
+        out = out + jnp.where(ix == j_pat, vs, jnp.zeros_like(vs))
+    return out
+
+
+def _spmm_kernel(x_ref, v_ref, pm_ref, o_ref, acc_ref, *, n: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = _unpack_meta_tile(pm_ref[...])
+    w = _decompress_tile(v_ref[...], idx, n)
+    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def nm_spmm(
+    x: jax.Array,
+    values: jax.Array,
+    meta_packed: jax.Array,
+    n: int,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = X @ dec(values, meta).  M is fixed at 4 (paper's detailed design).
+
+    x: (B, K_eff) -- K_eff = K_c * 4 / n
+    values: (K_c, O), meta_packed: (K_c/4, O) uint8
+    """
+    b, ke = x.shape
+    kc, o = values.shape
+    assert ke * n == kc * 4, (x.shape, values.shape, n)
+    assert meta_packed.shape == (kc // 4, o), meta_packed.shape
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    assert block_kc % 4 == 0, "block_ke*n/4 must be a multiple of 4 for packing"
+    nk = ke // block_ke
+    return pl.pallas_call(
+        lambda xr, vr, pr, orf, acc: _spmm_kernel(xr, vr, pr, orf, acc, n=n, nk=nk),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=[
+            pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, values, meta_packed)

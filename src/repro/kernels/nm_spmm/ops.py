@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the N:M SPMM kernel (TILE_SPMM_{U,V})."""
+
+from functools import partial
+
+import jax
+
+from .kernel import nm_spmm
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n", "block_b", "block_o", "block_ke", "interpret"),
+)
+def nm_spmm_op(
+    x, values, meta_packed, *, n, block_b=128, block_o=128, block_ke=512,
+    interpret=False,
+):
+    return nm_spmm(
+        x, values, meta_packed, n,
+        block_b=block_b, block_o=block_o, block_ke=block_ke, interpret=interpret,
+    )

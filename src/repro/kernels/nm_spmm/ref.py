@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for nm_spmm: decompress then dense matmul."""
+
+import jax.numpy as jnp
+
+from repro.core import nm
+
+
+def nm_spmm_ref(x, values, meta_packed, n, out_dtype=jnp.float32):
+    meta = nm.unpack_meta(meta_packed)
+    w = nm.decompress(values, meta, n, 4)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)

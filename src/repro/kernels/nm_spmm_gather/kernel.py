@@ -1,0 +1,96 @@
+"""Lane-aligned N:M SPMM with a *reduced* contraction dim — Tier 2 (beyond paper).
+
+When the 2-bit metadata is shared across all output channels of a weight
+tile ("lane-aligned" / vector-wise N:M, Zhu et al. [55]), the activation
+can be gathered once per compressed K position and the matmul runs at
+``K_c = K_eff * N / M``: the MXU does **N/M of the dense FLOPs** — the
+TPU-native realization of "map only nonzeros onto the MACs".
+
+Computes ``Y_t (O, B) = Vᵀ · X_g`` from
+  x_t: (K_eff, B)   activations, K-major layout (gather along sublanes)
+  values: (K_c, O)  compressed weights
+  idx: (K_c, 1) int32 shared in-block indices
+
+The sublane gather is ≤4 compare+selects per compressed row (the input
+selector of the paper's Fig. 8 moved from silicon to the VPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(xt_ref, v_ref, idx_ref, o_ref, acc_ref, *, n: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xt = xt_ref[...]                     # (BKe, BB)
+    bke, bb = xt.shape
+    nb = bke // 4
+    x3 = xt.reshape(nb, 4, bb)           # candidates per block
+    idx = idx_ref[...]                   # (BKc, 1)
+    i3 = idx.reshape(nb, n, 1)
+    slices = []
+    for s in range(n):
+        i_s = i3[:, s, :]                # (nb, 1)
+        acc = jnp.zeros((nb, bb), xt.dtype)
+        for j in range(4):
+            acc = acc + jnp.where(i_s == j, x3[:, j, :], jnp.zeros_like(acc))
+        slices.append(acc)
+    # interleave s-slices back to block-major compressed order (BKc, BB)
+    x_g = jnp.stack(slices, axis=1).reshape(nb * n, bb)
+    # (BKc, BO)^T contract (BKc, BB) -> (BO, BB): reduced-K MXU matmul
+    acc_ref[...] += jax.lax.dot_general(
+        v_ref[...], x_g,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def nm_spmm_gather(
+    x_t: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    n: int,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y_t (O, B) = dec(values, idx)ᵀ @ X.  M fixed at 4."""
+    ke, b = x_t.shape
+    kc, o = values.shape
+    assert ke * n == kc * 4, (x_t.shape, values.shape, n)
+    assert idx.shape == (kc, 1), idx.shape
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    nk = ke // block_ke
+    return pl.pallas_call(
+        lambda xr, vr, ir, orf, acc: _gather_kernel(xr, vr, ir, orf, acc, n=n, nk=nk),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=[
+            pl.BlockSpec((block_ke, block_b), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_kc, 1), lambda i, j, kk: (kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_o, block_b), lambda i, j, kk: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((o, b), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_o, block_b), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_t, values, idx)

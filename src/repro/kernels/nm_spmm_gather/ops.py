@@ -1,0 +1,28 @@
+"""Jitted public wrapper: standard (B, K) activations in, (B, O) out.
+
+The internal kernel works on K-major (transposed) activations so the
+metadata-driven gather lands on the sublane dim; on TPU a production
+deployment keeps activations in this layout across layers to avoid the
+transposes (layout note recorded in DESIGN.md §2).
+"""
+
+from functools import partial
+
+import jax
+
+from .kernel import nm_spmm_gather
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n", "block_b", "block_o", "block_ke", "interpret"),
+)
+def nm_spmm_gather_op(
+    x, values, idx, *, n, block_b=128, block_o=128, block_ke=512,
+    interpret=False,
+):
+    y_t = nm_spmm_gather(
+        x.T, values, idx.reshape(-1, 1), n,
+        block_b=block_b, block_o=block_o, block_ke=block_ke, interpret=interpret,
+    )
+    return y_t.T

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for nm_spmm_gather (lane-aligned reduced-K SPMM)."""
+
+import jax.numpy as jnp
+
+
+def nm_spmm_gather_ref(x, values, idx, n, out_dtype=jnp.float32):
+    """x: (B, K_eff); values: (K_c, O); idx: (K_c,) int32.  Returns (B, O)."""
+    kc = values.shape[0]
+    blk = (jnp.arange(kc, dtype=jnp.int32) // n) * 4
+    x_g = jnp.take(x, blk + idx.reshape(-1), axis=-1)   # (B, K_c)
+    return jnp.dot(
+        x_g, values, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

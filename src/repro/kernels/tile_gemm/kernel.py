@@ -1,0 +1,63 @@
+"""Dense tile GEMM Pallas kernel — the TILE_GEMM / VEGETA-D baseline.
+
+C (B, O) fp32 += X (B, K) bf16 @ W (K, O) bf16, blocked for VMEM with an
+fp32 accumulator tile held in VMEM across the K grid (the "output
+forwarding" adaptation: the C tile never round-trips to HBM between
+accumulating steps — see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tile_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    b, k = x.shape
+    k2, o = w.shape
+    assert k == k2, (x.shape, w.shape)
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_k = min(block_k, k)
+    assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
+    nk = k // block_k
+    return pl.pallas_call(
+        lambda xr, wr, orf, acc: _gemm_kernel(xr, wr, orf, acc, nk=nk),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)

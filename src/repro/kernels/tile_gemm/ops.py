@@ -1,0 +1,14 @@
+"""Jitted public wrapper for the dense tile GEMM kernel."""
+
+from functools import partial
+
+import jax
+
+from .kernel import tile_gemm
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_o", "block_k", "interpret"))
+def tile_gemm_op(x, w, *, block_b=128, block_o=128, block_k=512, interpret=False):
+    return tile_gemm(
+        x, w, block_b=block_b, block_o=block_o, block_k=block_k, interpret=interpret
+    )

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for tile_gemm."""
+
+import jax.numpy as jnp
+
+
+def tile_gemm_ref(x, w, out_dtype=jnp.float32):
+    return jnp.dot(
+        x, w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_supported, get_config
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch.hlo_cost import analyze as hlo_cost_analyze
+from repro.launch.mesh import make_axis_env, make_production_mesh
+from repro.launch.shardings import ShardingRules
+from repro.models import (
+    init_params,
+    input_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models.pjit_utils import use_axis_env
+from repro.optim.adamw import init_adamw
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool):
+    """Build shardings + lower the step function for one cell. Returns
+    (lowered, n_devices, meta)."""
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    env = make_axis_env(mesh)
+    rules = ShardingRules(env, cfg)
+    n_dev = mesh.size
+    specs = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    p_shardings = rules.tree_shardings(params_shapes)
+
+    with use_axis_env(env):
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(init_adamw, params_shapes)
+            o_shardings = rules.tree_shardings(opt_shapes)
+            b_shardings = rules.batch_spec(specs["batch"], shape.global_batch)
+            step_fn = make_train_step(cfg)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, o_shardings, b_shardings,
+                              NamedSharding(mesh, P())),
+            )
+            lowered = jitted.lower(
+                params_shapes, opt_shapes, specs["batch"],
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+        elif shape.kind == "prefill":
+            b_shardings = rules.batch_spec(specs["batch"], shape.global_batch)
+            step_fn = make_prefill_step(cfg)
+            jitted = jax.jit(step_fn, in_shardings=(p_shardings, b_shardings))
+            lowered = jitted.lower(params_shapes, specs["batch"])
+        else:  # decode
+            c_shardings = rules.cache_shardings(specs["caches"], shape.global_batch)
+            tok_sh = rules.batch_spec(
+                {"t": specs["tokens"]}, shape.global_batch)["t"]
+            step_fn = make_decode_step(cfg)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, c_shardings, tok_sh,
+                              NamedSharding(mesh, P())),
+            )
+            lowered = jitted.lower(
+                params_shapes, specs["caches"], specs["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+    meta = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "n_devices": n_dev,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+    }
+    return lowered, n_dev, meta
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
+    ok, reason = cell_supported(arch_id, shape_name)
+    if not ok:
+        return {
+            "arch": arch_id, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "skip", "reason": reason,
+        }
+    t0 = time.time()
+    lowered, n_dev, meta = lower_cell(arch_id, shape_name, multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    result = dict(meta)
+    result.update({"status": "ok", "lower_s": round(t_lower, 1),
+                   "compile_s": round(t_compile, 1)})
+    try:
+        mem = compiled.memory_analysis()
+        result["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+        print("memory_analysis:", result["memory_analysis"], flush=True)
+    except Exception as e:  # CPU backend may not implement it
+        result["memory_analysis"] = {"error": str(e)[:200]}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        result["cost_analysis"] = {
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+            "transcendentals": float(cost.get("transcendentals", -1.0)),
+        }
+        print("cost_analysis:", result["cost_analysis"], flush=True)
+    except Exception as e:
+        result["cost_analysis"] = {"error": str(e)[:200]}
+
+    try:
+        hlo = compiled.as_text()
+        result["hlo_bytes"] = len(hlo)
+        # while-trip-aware per-device cost (XLA's analysis counts loop
+        # bodies once -- see hlo_cost docstring)
+        cost = hlo_cost_analyze(hlo, n_dev)
+        result["hlo_cost"] = {k: float(v) for k, v in cost.items()}
+        print("hlo_cost:", {k: f"{v:.3e}" for k, v in cost.items()
+                            if not k.startswith("coll_") or v}, flush=True)
+        result["roofline"] = roofline_terms(
+            cost["flops"], cost["bytes"], cost["coll_total"]
+        )
+        print("roofline:", result["roofline"], flush=True)
+    except Exception as e:
+        result["hlo_cost"] = {"error": traceback.format_exc()[-1000:]}
+    return result
+
+
+def _cell_filename(arch, shape, multi_pod):
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="iterate every (arch x shape x mesh) via subprocesses")
+    ap.add_argument("--missing-only", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    fn = outdir / _cell_filename(arch, shape, mp)
+                    if args.missing_only and fn.exists():
+                        ok_prev = json.loads(fn.read_text()).get("status") in ("ok", "skip")
+                        if ok_prev:
+                            continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--out", str(outdir)]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    print(f"=== {arch} x {shape} x {'2x16x16' if mp else '16x16'}",
+                          flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, mp))
+        print(f"done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape
+    try:
+        res = run_cell(args.arch, args.shape, args.multi_pod)
+    except Exception:
+        res = {
+            "arch": args.arch, "shape": args.shape,
+            "mesh": "2x16x16" if args.multi_pod else "16x16",
+            "status": "error", "error": traceback.format_exc()[-4000:],
+        }
+    fn = outdir / _cell_filename(args.arch, args.shape, args.multi_pod)
+    fn.write_text(json.dumps(res, indent=2))
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("error",)}, indent=2)[:2000])
+    if res["status"] == "error":
+        print(res["error"][-2000:], file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

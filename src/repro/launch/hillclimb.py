@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init)
+
+"""Perf hillclimbing: re-lower a dry-run cell under named config variants
+and report the roofline-term deltas (EXPERIMENTS.md §Perf methodology:
+hypothesis -> change -> re-lower -> measure).
+
+Usage:
+  python -m repro.launch.hillclimb --arch mistral_large_123b \
+      --shape train_4k --variant p_bf16
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.core.sparse_linear import SparsityConfig
+from repro.launch.hlo_analysis import roofline_terms
+from repro.launch.hlo_cost import analyze as hlo_cost_analyze
+from repro.launch.mesh import make_axis_env, make_production_mesh
+from repro.launch.shardings import ShardingRules
+from repro.models import (
+    init_params, input_specs, make_decode_step, make_prefill_step,
+    make_train_step,
+)
+from repro.models.pjit_utils import use_axis_env
+from repro.optim.adamw import init_adamw
+
+PERF_DIR = Path(__file__).resolve().parents[3] / "experiments" / "perf"
+
+
+# ---------------------------------------------------------------- variants
+def v_baseline(cfg):
+    return cfg
+
+
+def v_p_bf16(cfg):
+    """Store attention probabilities in bf16 (halves score-tensor HBM)."""
+    return dataclasses.replace(cfg, attn_p_bf16=True)
+
+
+def v_remat_full(cfg):
+    """Full remat: trade HBM for recompute."""
+    return dataclasses.replace(cfg, remat_policy="full")
+
+
+def v_remat_none(cfg):
+    """No remat: save everything (memory ceiling probe)."""
+    return dataclasses.replace(cfg, remat_policy="none")
+
+
+def v_attn_chunk_4k(cfg):
+    """Bigger KV chunk: fewer scan iterations, same totals (control)."""
+    return dataclasses.replace(cfg, attn_chunk=4096)
+
+
+def v_no_zero_gather(cfg):
+    """Decode: partial matmul + tiny activation all-reduce instead of
+    ZeRO weight all-gather (wins when batch is tiny)."""
+    return dataclasses.replace(
+        cfg, sparsity=dataclasses.replace(cfg.sparsity, fsdp_gather=False))
+
+
+def v_sparse_compressed(cfg):
+    """Paper Tier-1: 2:4 compressed weights (XLA path: decompress+matmul)."""
+    return cfg.with_sparsity(dataclasses.replace(
+        cfg.sparsity, n=2, m=4, mode="compressed"))
+
+
+def v_sparse_compressed_14(cfg):
+    return cfg.with_sparsity(dataclasses.replace(
+        cfg.sparsity, n=1, m=4, mode="compressed"))
+
+
+def v_sparse_gather(cfg):
+    """Beyond-paper Tier-2: lane-aligned 2:4, reduced-K matmul."""
+    return cfg.with_sparsity(dataclasses.replace(
+        cfg.sparsity, n=2, m=4, mode="gather"))
+
+
+def v_sparse_gather_14(cfg):
+    return cfg.with_sparsity(dataclasses.replace(
+        cfg.sparsity, n=1, m=4, mode="gather"))
+
+
+def v_sparse_gather_nozero(cfg):
+    cfg = v_sparse_gather(cfg)
+    return v_no_zero_gather(cfg)
+
+
+def v_compressed_nozero(cfg):
+    cfg = v_sparse_compressed(cfg)
+    return v_no_zero_gather(cfg)
+
+
+def v_scores_bf16(cfg):
+    """Attention scores AND probs in bf16 (flash kernels keep these in
+    VMEM registers; materializing them bf16 is the XLA-level analogue)."""
+    return dataclasses.replace(cfg, attn_scores_bf16=True, attn_p_bf16=True)
+
+
+def v_best_train(cfg):
+    """Stack the confirmed train-side wins: full remat + bf16 scores."""
+    return dataclasses.replace(v_scores_bf16(cfg), remat_policy="full")
+
+
+VARIANTS = {
+    "baseline": v_baseline,
+    "p_bf16": v_p_bf16,
+    "scores_bf16": v_scores_bf16,
+    "best_train": v_best_train,
+    "remat_full": v_remat_full,
+    "remat_none": v_remat_none,
+    "attn_chunk_4k": v_attn_chunk_4k,
+    "no_zero_gather": v_no_zero_gather,
+    "sparse_compressed": v_sparse_compressed,
+    "sparse_compressed_14": v_sparse_compressed_14,
+    "sparse_gather": v_sparse_gather,
+    "sparse_gather_14": v_sparse_gather_14,
+    "sparse_gather_nozero": v_sparse_gather_nozero,
+    "compressed_nozero": v_compressed_nozero,
+}
+
+
+def run_variant(arch: str, shape_name: str, variant: str) -> dict:
+    cfg = VARIANTS[variant](get_config(arch))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    env = make_axis_env(mesh)
+    rules = ShardingRules(env, cfg)
+    specs = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    p_sh = rules.tree_shardings(params_shapes)
+    t0 = time.time()
+    with use_axis_env(env):
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(init_adamw, params_shapes)
+            f = jax.jit(make_train_step(cfg), in_shardings=(
+                p_sh, rules.tree_shardings(opt_shapes),
+                rules.batch_spec(specs["batch"], shape.global_batch),
+                NamedSharding(mesh, P())))
+            lowered = f.lower(params_shapes, opt_shapes, specs["batch"],
+                              jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.kind == "prefill":
+            f = jax.jit(make_prefill_step(cfg), in_shardings=(
+                p_sh, rules.batch_spec(specs["batch"], shape.global_batch)))
+            lowered = f.lower(params_shapes, specs["batch"])
+        else:
+            c_sh = rules.cache_shardings(specs["caches"], shape.global_batch)
+            tok_sh = rules.batch_spec({"t": specs["tokens"]},
+                                      shape.global_batch)["t"]
+            f = jax.jit(make_decode_step(cfg), in_shardings=(
+                p_sh, c_sh, tok_sh, NamedSharding(mesh, P())))
+            lowered = f.lower(params_shapes, specs["caches"], specs["tokens"],
+                              jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+    cost = hlo_cost_analyze(compiled.as_text(), mesh.size)
+    rf = roofline_terms(cost["flops"], cost["bytes"], cost["coll_total"])
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "hlo_cost": {k: float(v) for k, v in cost.items()},
+        "roofline": rf, "wall_s": round(time.time() - t0, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    args = ap.parse_args()
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    try:
+        res = run_variant(args.arch, args.shape, args.variant)
+    except Exception:
+        res = {"arch": args.arch, "shape": args.shape, "variant": args.variant,
+               "status": "error", "error": traceback.format_exc()[-3000:]}
+    fn = PERF_DIR / f"{args.arch}__{args.shape}__{args.variant}.json"
+    fn.write_text(json.dumps(res, indent=2))
+    rf = res.get("roofline", {})
+    print(json.dumps({k: v for k, v in res.items() if k != "error"}, indent=2))
+    if "error" in res:
+        print(res["error"][-1500:])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

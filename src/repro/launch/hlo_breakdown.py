@@ -1,0 +1,84 @@
+"""Per-op byte/flop breakdown of a compiled module (profiling aid for the
+§Perf loop): walks the call graph with while-trip multipliers and tallies
+traffic by (opcode, shape), top-N.
+
+Usage: python -m repro.launch.hlo_breakdown <hlo.txt> [n_devices]
+"""
+
+from __future__ import annotations
+
+import collections
+import re
+import sys
+from typing import Dict
+
+from .hlo_cost import (
+    _BODY_RE, _CALLS_RE, _COND_RE, _OPERANDS_RE, _TRIP_RE, _type_bytes,
+    HloCost, parse_module,
+)
+
+
+def breakdown(text: str, n_devices: int, top: int = 25) -> list:
+    hc = HloCost(text, n_devices)
+    comps, entry = hc.comps, hc.entry
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]; i += 1
+        m = mult[name]
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            subs = []
+            if ins.opcode == "while":
+                mt = _TRIP_RE.search(ins.rest)
+                trip = int(mt.group(1)) if mt else 1
+                mb, mc = _BODY_RE.search(ins.rest), _COND_RE.search(ins.rest)
+                if mb:
+                    subs.append((mb.group(1), trip))
+                if mc:
+                    subs.append((mc.group(1), trip))
+            elif ins.opcode in ("fusion", "call"):
+                mm = _CALLS_RE.search(ins.rest)
+                if mm:
+                    subs.append((mm.group(1), 1))
+            for s, k in subs:
+                mult[s] = mult.get(s, 0.0) + m * k
+                if s not in seen:
+                    seen.add(s)
+                    order.append(s)
+
+    tally = collections.Counter()
+    for name, m in mult.items():
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode in ("parameter", "get-tuple-element", "tuple",
+                              "constant", "bitcast", "while", "iota",
+                              "optimization-barrier"):
+                continue
+            b = _type_bytes(ins.type_str)
+            if ins.opcode == "fusion":
+                arg = ins.rest.split("),")[0]
+                for op_ in _OPERANDS_RE.findall(arg):
+                    t = comp.symbols.get(op_)
+                    if t:
+                        b += _type_bytes(t)
+            key = (ins.opcode, ins.type_str[:48])
+            tally[key] += m * b
+    return tally.most_common(top)
+
+
+def main():
+    fn = sys.argv[1]
+    n = int(sys.argv[2]) if len(sys.argv) > 2 else 256
+    for (op, shape), b in breakdown(open(fn).read(), n):
+        print(f"{b/1e9:10.1f} GB  {op:22s} {shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Kept as functions (not module constants) so importing never touches jax
+device state; the dry-run sets XLA_FLAGS before any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models.pjit_utils import AxisEnv
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_axis_env(mesh: Mesh) -> AxisEnv:
+    names = mesh.axis_names
+    if "pod" in names:
+        return AxisEnv(mesh=mesh, batch_axes=("pod", "data"), model_axis="model")
+    return AxisEnv(mesh=mesh, batch_axes=("data",), model_axis="model")
+
+
+def make_debug_mesh(data: int = 2, model: int = 4) -> Mesh:
+    """Small mesh for CI-scale multi-device tests (subprocess-only)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,93 @@
+"""Production serving launcher: continuous-batching decode loop.
+
+    python -m repro.launch.serve --arch internlm2_1_8b --smoke \
+        [--sparsity 2:4 --mode compressed] [--requests 16]
+
+Weights can live in any SparseLinear serving layout (dense | compressed |
+gather); the compressed layouts are exactly what `kernels/nm_spmm*`
+consume on TPU (Tier-1/Tier-2, DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sparsity", default=None)
+    ap.add_argument("--mode", default="compressed",
+                    choices=["dense", "compressed", "gather"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.core.sparse_linear import SparsityConfig
+    from repro.models import decode_step, init_caches, init_params
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.sparsity:
+        n, m = map(int, args.sparsity.split(":"))
+        cfg = cfg.with_sparsity(SparsityConfig(n=n, m=m, mode=args.mode))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    print(f"serving {cfg.name}: {nbytes/1e6:.1f} MB weights "
+          f"({args.sparsity or 'dense'}/{args.mode})")
+
+    caches = init_caches(cfg, args.batch, args.max_len)
+    step = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))
+    rng = jax.random.PRNGKey(1)
+    pending = [
+        list(jax.random.randint(jax.random.fold_in(rng, i), (3,), 1,
+                                cfg.vocab_size))
+        for i in range(args.requests)
+    ]
+    slots = [None] * args.batch
+    done = 0
+    t0 = time.perf_counter()
+    pos = 0
+    while done < args.requests and pos < args.max_len - 1:
+        for s in range(args.batch):
+            if slots[s] is None and pending:
+                slots[s] = {"prompt": [int(x) for x in pending.pop(0)],
+                            "i": 0, "out": []}
+        feed = []
+        for s in range(args.batch):
+            a = slots[s]
+            if a is None:
+                feed.append(0)
+            elif a["i"] < len(a["prompt"]):
+                feed.append(a["prompt"][a["i"]])
+            else:
+                feed.append(a["out"][-1])
+        logits, caches = step(params, caches,
+                              jnp.asarray(feed, jnp.int32)[:, None],
+                              jnp.int32(pos))
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+        for s in range(args.batch):
+            a = slots[s]
+            if a is None:
+                continue
+            a["i"] += 1
+            if a["i"] >= len(a["prompt"]):
+                a["out"].append(int(nxt[s]))
+            if len(a["out"]) >= args.new_tokens:
+                done += 1
+                slots[s] = None
+        pos += 1
+    dt = time.perf_counter() - t0
+    print(f"served {done}/{args.requests} requests in {dt:.1f}s "
+          f"({pos * args.batch / dt:.1f} slot-tokens/s)")
+
+
+if __name__ == "__main__":
+    main()

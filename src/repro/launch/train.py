@@ -1,0 +1,68 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch internlm2_1_8b --steps 100 \
+        [--smoke] [--sparsity 2:4] [--mode masked] [--devices N]
+
+On a real TPU pod each host runs this same entry point (jax.distributed
+initializes from the TPU environment); on CPU it drives the single-device
+or forced-multi-device path.  The mesh is (data, model) or
+(pod, data, model) from ``mesh.make_production_mesh`` scaled down to the
+available device count.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--sparsity", default=None, help="e.g. 2:4 or 1:4")
+    ap.add_argument("--mode", default="masked",
+                    choices=["masked", "dense"])
+    ap.add_argument("--run-dir", default="/tmp/repro_run")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--data", default=None, help="token file (int32 mmap)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force host-platform device count (CPU testing)")
+    args = ap.parse_args()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.core.sparse_linear import SparsityConfig
+    from repro.data import DataConfig
+    from repro.train import TrainerConfig, train
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.sparsity:
+        n, m = map(int, args.sparsity.split(":"))
+        cfg = cfg.with_sparsity(SparsityConfig(n=n, m=m, mode=args.mode))
+    print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params) on "
+          f"{jax.device_count()} device(s); sparsity={args.sparsity or 'dense'}")
+    tc = TrainerConfig(
+        run_dir=args.run_dir, total_steps=args.steps,
+        ckpt_every=max(args.steps // 4, 10),
+        grad_compress=args.grad_compress,
+        host_id=jax.process_index(), num_hosts=jax.process_count(),
+    )
+    dc = DataConfig(seq_len=args.seq_len, global_batch=args.global_batch,
+                    vocab_size=cfg.vocab_size, path=args.data,
+                    host_id=jax.process_index(), num_hosts=jax.process_count())
+    out = train(cfg, tc, dc,
+                on_step=lambda s, l: print(f"step {s} loss {l:.4f}", flush=True))
+    print(f"final loss {out['final_loss']:.4f} after {out['steps_done']} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Model zoo: unified stack covering dense / MoE / SSM / hybrid /
+encoder-only / VLM-backbone families (see transformer.build_layout)."""
+
+from .config import ModelConfig, ShapeConfig
+from .lm import (
+    input_specs,
+    lm_loss,
+    make_decode_step,
+    make_loss_fn,
+    make_prefill_step,
+    make_train_step,
+)
+from .transformer import (
+    build_layout,
+    decode_step,
+    forward,
+    init_caches,
+    init_params,
+    layout_num_layers,
+)

@@ -1,0 +1,302 @@
+"""Attention: GQA + RoPE, chunked (flash-equivalent) full attention, banded
+local (sliding-window) attention, and single-token decode against a cache.
+
+The jnp chunked formulations are the lowering/dry-run path (O(T·chunk)
+memory); `repro.kernels.flash_attention` is the TPU hot-spot kernel with
+identical semantics (validated in tests).  All projections are
+`SparseLinear`s — the paper's N:M feature applies to QKVO.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_linear import SparsityConfig, apply_linear, init_linear
+
+from .config import ModelConfig
+from .layers import apply_rope
+from .pjit_utils import constrain
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d, sp, dt = cfg.d_model, cfg.sparsity, cfg.jnp_dtype
+    return {
+        "wq": init_linear(ks[0], d, cfg.attn_dim, sp, dt),
+        "wk": init_linear(ks[1], d, cfg.kv_dim, sp, dt),
+        "wv": init_linear(ks[2], d, cfg.kv_dim, sp, dt),
+        "wo": init_linear(ks[3], cfg.attn_dim, d, sp, dt, scale=cfg.attn_dim**-0.5),
+    }
+
+
+def _project_qkv(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    b, t, _ = x.shape
+    sp = cfg.sparsity
+    q = apply_linear(p["wq"], x, sp, gather="col").reshape(b, t, cfg.num_heads, cfg.head_dim)
+    k = apply_linear(p["wk"], x, sp, gather="col").reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = apply_linear(p["wv"], x, sp, gather="col").reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped(q: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, T, H, D) -> (B, Hkv, G, T, D) without materializing repeats."""
+    b, t, h, d = q.shape
+    g = h // cfg.num_kv_heads
+    return q.reshape(b, t, cfg.num_kv_heads, g, d).transpose(0, 2, 3, 1, 4)
+
+
+def _attn_fwd_impl(q, k, v, causal: bool, chunk: int, q_offset: int,
+                   p_bf16: bool = False, s_bf16: bool = False):
+    """Online-softmax forward. Returns (out_f32, lse)."""
+    b, hkv, g, tq, d = q.shape
+    tk = k.shape[1]
+    chunk = min(chunk, tk)
+    assert tk % chunk == 0
+    nk = tk // chunk
+    scale = d**-0.5
+    # bf16 operands + fp32 accumulation: MXU-native mixed precision
+    qf = q * jnp.asarray(scale, q.dtype)
+    kc = k.transpose(0, 2, 1, 3).reshape(b, hkv, nk, chunk, d)
+    vc = v.transpose(0, 2, 1, 3).reshape(b, hkv, nk, chunk, d)
+    q_pos = q_offset + jnp.arange(tq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qf, kj,
+            preferred_element_type=jnp.bfloat16 if s_bf16 else jnp.float32,
+        )  # (B,Hkv,G,Tq,chunk)
+        if causal:
+            k_pos = j * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True).astype(jnp.float32))
+        p = jnp.exp(s - m_new.astype(s.dtype))
+        if p_bf16 and p.dtype != jnp.bfloat16:
+            # halve score-tensor HBM traffic; sums stay fp32
+            p = p.astype(jnp.bfloat16)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+        acc = acc * alpha + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, tq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, tq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, tq, d), jnp.float32)
+    kc_t = kc.transpose(2, 0, 1, 3, 4)
+    vc_t = vc.transpose(2, 0, 1, 3, 4)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc_t, vc_t, jnp.arange(nk))
+    )
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    lse = m + jnp.log(l_safe)
+    # cast to the input dtype HERE: a f32 attention output becomes a saved
+    # f32 (B,T,d)-sized residual per layer (measured: the largest single
+    # byte dominator in 88-layer train cells -- EXPERIMENTS §Perf)
+    return (acc / l_safe).astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def chunked_attention(q, k, v, causal: bool, chunk: int, q_offset: int = 0,
+                      p_bf16: bool = False, s_bf16: bool = False):
+    """Flash-equivalent attention with a recompute-from-LSE backward
+    (custom VJP): nothing per-chunk is saved for AD -- the residuals are
+    just (q, k, v, o, lse), exactly like FlashAttention's backward.
+
+    q: (B, Hkv, G, Tq, D); k, v: (B, Tk, Hkv, D) -> (B, Hkv, G, Tq, D) f32.
+    """
+    out, _ = _attn_fwd_impl(q, k, v, causal, chunk, q_offset, p_bf16, s_bf16)
+    return out
+
+
+def _attn_fwd(q, k, v, causal, chunk, q_offset, p_bf16, s_bf16):
+    out, lse = _attn_fwd_impl(q, k, v, causal, chunk, q_offset, p_bf16, s_bf16)
+    return out, (q, k, v, out, lse)
+
+
+def _attn_bwd(causal, chunk, q_offset, p_bf16, s_bf16, res, dout):
+    q, k, v, out, lse = res
+    b, hkv, g, tq, d = q.shape
+    tk = k.shape[1]
+    chunk = min(chunk, tk)
+    nk = tk // chunk
+    scale = d**-0.5
+    q_pos = q_offset + jnp.arange(tq)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1, keepdims=True)                  # (B,Hkv,G,Tq,1)
+    do_b = dout.astype(q.dtype)
+    kc = k.transpose(0, 2, 1, 3).reshape(b, hkv, nk, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.transpose(0, 2, 1, 3).reshape(b, hkv, nk, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    def body(dq_acc, inp):
+        kj, vj, j = inp
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", q * jnp.asarray(scale, q.dtype), kj,
+            preferred_element_type=jnp.bfloat16 if s_bf16 else jnp.float32,
+        )
+        if causal:
+            k_pos = j * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, jnp.asarray(NEG_INF, s.dtype))
+        p = jnp.exp(s - lse.astype(s.dtype))                  # exact probs
+        if p_bf16 and p.dtype != jnp.bfloat16:
+            p = p.astype(jnp.bfloat16)
+        pb = p.astype(v.dtype)
+        dv_j = jnp.einsum("bhgqk,bhgqd->bhkd", pb, do_b,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_b, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p.astype(jnp.float32) * (dp - delta) * scale      # (B,Hkv,G,Tq,chunk)
+        dsb = ds.astype(q.dtype)
+        dq_acc = dq_acc + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", dsb, kj, preferred_element_type=jnp.float32)
+        dk_j = jnp.einsum("bhgqk,bhgqd->bhkd", dsb, q,
+                          preferred_element_type=jnp.float32)
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, hkv, g, tq, d), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (kc, vc, jnp.arange(nk)))
+    dk = dk_c.transpose(1, 0, 3, 2, 4).reshape(b, tk, hkv, d)
+    dv = dv_c.transpose(1, 0, 3, 2, 4).reshape(b, tk, hkv, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+chunked_attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+def local_attention(
+    q: jax.Array,    # (B, Hkv, G, T, D)
+    k: jax.Array,    # (B, T, Hkv, D)
+    v: jax.Array,
+    *,
+    window: int,
+) -> jax.Array:
+    """Banded causal attention: position t attends to (t-window, t].
+
+    O(T * window) FLOPs/memory via Q-chunked dynamic slices of a
+    left-padded KV — the honest cost model for gemma3-style local layers.
+    """
+    b, hkv, g, t, d = q.shape
+    cq = min(window, t)
+    assert t % cq == 0
+    nq = t // cq
+    span = window + cq
+    scale = d**-0.5
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    qc = q.reshape(b, hkv, g, nq, cq, d).transpose(3, 0, 1, 2, 4, 5)
+
+    def body(i, qi):
+        ks = jax.lax.dynamic_slice_in_dim(kp, i * cq, span, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(vp, i * cq, span, axis=1)
+        s = jnp.einsum(
+            "bhgqd,bkhd->bhgqk", qi * jnp.asarray(scale, qi.dtype), ks,
+            preferred_element_type=jnp.float32,
+        )
+        q_pos = i * cq + jnp.arange(cq)
+        k_pos = i * cq - window + jnp.arange(span)
+        delta = q_pos[:, None] - k_pos[None, :]
+        mask = (delta >= 0) & (delta < window) & (k_pos[None, :] >= 0)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vs.dtype), vs,
+            preferred_element_type=jnp.float32,
+        )
+
+    out = jax.lax.map(lambda args: body(*args), (jnp.arange(nq), qc))
+    return out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, t, d)
+
+
+def attention_block(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    is_global: bool = True,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full attention sub-layer for train/prefill. x: (B, T, d)."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    qg = _grouped(q, cfg)
+    if is_global or cfg.window <= 0 or cfg.window >= t:
+        o = chunked_attention(qg, k, v, cfg.causal, cfg.attn_chunk, 0,
+                              cfg.attn_p_bf16, cfg.attn_scores_bf16)
+    else:
+        o = local_attention(qg, k, v, window=cfg.window)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, t, cfg.attn_dim)
+    o = o.astype(x.dtype)
+    return apply_linear(p["wo"], o, cfg.sparsity, gather="row")
+
+
+# ------------------------------------------------------------------ decode
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, local: bool = False
+) -> Dict[str, jax.Array]:
+    s = min(cfg.window, max_len) if (local and cfg.window > 0) else max_len
+    shape = (batch, s, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.jnp_dtype),
+        "v": jnp.zeros(shape, cfg.jnp_dtype),
+    }
+
+
+def decode_attention_block(
+    p: Params,
+    x: jax.Array,            # (B, 1, d)
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,          # scalar int32: index of the new token
+    cfg: ModelConfig,
+    *,
+    is_global: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b = x.shape[0]
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions.reshape(1))
+    s_cache = cache["k"].shape[1]
+    local = is_global is False and cfg.window > 0
+    slot = (pos % s_cache) if local else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    new_cache = {"k": k, "v": v}
+
+    qg = _grouped(q, cfg)                           # (B, Hkv, G, 1, D)
+    scale = cfg.head_dim**-0.5
+    # bf16 operands + fp32 accumulation: upcasting the cache here would
+    # materialize f32 copies of the whole KV stack inside the layer loop
+    # (measured 10x the decode memory term -- EXPERIMENTS §Perf)
+    s = jnp.einsum(
+        "bhgqd,bkhd->bhgqk", qg * jnp.asarray(scale, qg.dtype), k,
+        preferred_element_type=jnp.float32,
+    )
+    j = jnp.arange(s_cache)
+    if local:
+        # ring buffer: entry j holds position p_j = pos - ((pos - j) % W)
+        p_j = pos - ((pos - j) % s_cache)
+        valid = (p_j >= 0) & (p_j <= pos) & (pos - p_j < s_cache)
+    else:
+        valid = j <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bkhd->bhgqd", pr.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, cfg.attn_dim).astype(x.dtype)
+    return apply_linear(p["wo"], o, cfg.sparsity, gather="row"), new_cache

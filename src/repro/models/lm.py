@@ -1,0 +1,119 @@
+"""Task heads: loss, train_step / serve_step factories, input specs.
+
+``make_train_step`` returns the pjit-able update function used by both the
+trainer and the multi-pod dry-run; ``make_decode_step`` is the serving
+analogue (one new token against a KV/SSM cache).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import adamw_update
+
+from .config import ModelConfig, ShapeConfig
+from .transformer import decode_step, forward, init_caches, init_params
+
+Params = Dict[str, Any]
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over positions with label >= 0. logits f32-upcast inside."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (logz - gold) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    if cfg.frontend == "audio_frames":
+        logits = forward(params, cfg, embeds=batch["frames"])
+        return softmax_xent(logits, batch["labels"])
+    if cfg.frontend == "vision_patches":
+        logits = forward(params, cfg, tokens=batch["tokens"], embeds=batch["patches"])
+        # only text positions carry labels; image positions are masked out
+        text_logits = logits[:, cfg.num_patches :, :]
+        return softmax_xent(text_logits[:, :-1], batch["tokens"][:, 1:])
+    logits = forward(params, cfg, tokens=batch["tokens"])
+    return softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4, weight_decay: float = 0.1):
+    def train_step(params, opt_state, batch, step):
+        loss, grads = jax.value_and_grad(lm_loss)(params, batch, cfg)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, step, lr=lr, weight_decay=weight_decay
+        )
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_loss_fn(cfg: ModelConfig):
+    return lambda params, batch: lm_loss(params, batch, cfg)
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        if cfg.frontend == "audio_frames":
+            return forward(params, cfg, embeds=batch["frames"])
+        if cfg.frontend == "vision_patches":
+            return forward(params, cfg, tokens=batch["tokens"], embeds=batch["patches"])
+        return forward(params, cfg, tokens=batch["tokens"])
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, caches, tokens, pos):
+        return decode_step(params, caches, tokens, pos, cfg)
+
+    return serve_step
+
+
+# ------------------------------------------------------------------ specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one shape cell.
+
+    No device allocation — the dry-run lowers against these.  For decode
+    cells, ``caches`` covers a KV history of ``shape.seq_len`` and
+    ``tokens`` is the single new token.
+    """
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio_frames":
+            batch = {
+                "frames": sds((b, t, cfg.d_model), cfg.jnp_dtype),
+                "labels": sds((b, t), i32),
+            }
+        elif cfg.frontend == "vision_patches":
+            batch = {
+                "tokens": sds((b, t - cfg.num_patches), i32),
+                "patches": sds((b, cfg.num_patches, cfg.d_model), cfg.jnp_dtype),
+            }
+        else:
+            batch = {"tokens": sds((b, t), i32), "labels": sds((b, t), i32)}
+        return {"batch": batch}
+    # decode: one new token at position t-1 with history t
+    caches = jax.eval_shape(lambda: init_caches(cfg, b, t))
+    return {
+        "caches": caches,
+        "tokens": sds((b, 1), i32),
+        "pos": sds((), i32),
+    }
+
+
+def init_train_state(key, cfg: ModelConfig):
+    from repro.optim.adamw import init_adamw
+
+    params = init_params(key, cfg)
+    return params, init_adamw(params)

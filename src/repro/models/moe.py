@@ -1,0 +1,197 @@
+"""Mixture-of-Experts with expert parallelism on the model axis.
+
+Default path (distributed): ``shard_map`` over the model axis — experts
+are sharded E/|model| per rank, every rank routes the full local token
+set, gathers a *capacity* of tokens per local expert, runs the expert FFN
+(dense, N:M-sparsifiable), scatter-adds weighted outputs, and a single
+``psum`` over the model axis combines contributions — the same collective
+footprint as the Megatron-TP all-reduce it replaces.
+
+Single-device path (no AxisEnv): identical routing math, loop over all
+experts via ``lax.scan`` on stacked weights.
+
+Capacity semantics: per-(data-shard, expert) top-C selection (Switch-style
+local dispatch) — tokens over capacity are dropped, standard for
+capacity-factor MoE.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.sparse_linear import SparsityConfig, apply_linear, init_linear
+
+from .config import ModelConfig
+from .pjit_utils import axis_env
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    sp, dt = cfg.sparsity, cfg.jnp_dtype
+
+    def stack(k, kin, kout, scale):
+        keys = jax.random.split(k, e)
+        return jax.vmap(
+            lambda kk: init_linear(kk, kin, kout, sp, dt, scale=scale)
+        )(keys)
+
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * d**-0.5),
+        "w_in": stack(ks[1], d, ff, d**-0.5),
+        "w_out": stack(ks[3], ff, d, ff**-0.5),
+    }
+    if cfg.act == "swiglu":
+        p["w_gate"] = stack(ks[2], d, ff, d**-0.5)
+    return p
+
+
+def _expert_ffn(wp: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = apply_linear(wp["w_in"], x, cfg.sparsity)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(apply_linear(wp["w_gate"], x, cfg.sparsity)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return apply_linear(wp["w_out"], h, cfg.sparsity)
+
+
+def _route(router: jax.Array, xf: jax.Array, cfg: ModelConfig):
+    """xf: (Tloc, d) -> combine weights (Tloc, E) (zero for unrouted)."""
+    logits = (xf.astype(jnp.float32)) @ router          # (T, E)
+    gates, ids = jax.lax.top_k(logits, cfg.top_k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    full = jnp.zeros_like(logits)
+    full = jnp.put_along_axis(full, ids, gates, axis=-1, inplace=False)
+    return full                                          # (T, E)
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens * cfg.top_k / cfg.num_experts * cfg.moe_capacity_factor))
+    return min(tokens, max(8, c))
+
+
+def _moe_local(p: Params, x: jax.Array, cfg: ModelConfig, n_local: int) -> jax.Array:
+    """Experts stacked (n_local, ...). x: (B, T, d) -> (B, T, d)."""
+    b, t, d = x.shape
+    xf = x.reshape(b * t, d)
+    weights = _route(p["router"], xf, cfg)               # (T, E) [global E]
+    cap = _capacity(b * t, cfg)
+
+    def expert_body(carry, inp):
+        wp, w_e = inp                                    # w_e: (T,) combine wts
+        acc = carry
+        score = jnp.where(w_e > 0, w_e, -jnp.inf)
+        top_w, top_idx = jax.lax.top_k(score, cap)       # (cap,)
+        keep = top_w > 0
+        x_e = jnp.take(xf, top_idx, axis=0)              # (cap, d)
+        y_e = _expert_ffn(wp, x_e, cfg)
+        y_e = y_e * (jnp.where(keep, top_w, 0.0)[:, None]).astype(y_e.dtype)
+        acc = acc.at[top_idx].add(y_e)
+        return acc, None
+
+    # weights columns for the local experts only (offset handled by caller
+    # slicing p["router"]-aligned weight matrix — here full when local=E)
+    w_cols = weights[:, :n_local].T                      # (n_local, T)
+    experts = {k: v for k, v in p.items() if k != "router"}
+    acc0 = jnp.zeros_like(xf)
+    acc, _ = jax.lax.scan(expert_body, acc0, (experts, w_cols))
+    return acc.reshape(b, t, d)
+
+
+def _moe_shardmap(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    env = axis_env()
+    mesh = env.mesh
+    model = env.model_axis
+    batch_phys = env.physical("batch")
+    e_local = cfg.num_experts // mesh.shape[model]
+
+    experts = {k: v for k, v in p.items() if k != "router"}
+
+    def local_fn(router, experts_loc, x_loc, psum_axes):
+        b, t, d = x_loc.shape
+        xf = x_loc.reshape(b * t, d)
+        weights = _route(router, xf, cfg)                # (T, E) full routing
+        rank = jax.lax.axis_index(model)
+        w_local = jax.lax.dynamic_slice_in_dim(
+            weights, rank * e_local, e_local, axis=1
+        )                                                # (T, e_local)
+        cap = _capacity(b * t, cfg)
+
+        def expert_body(acc, inp):
+            wp, w_e = inp
+            score = jnp.where(w_e > 0, w_e, -jnp.inf)
+            top_w, top_idx = jax.lax.top_k(score, cap)
+            keep = top_w > 0
+            x_e = jnp.take(xf, top_idx, axis=0)
+            y_e = _expert_ffn(wp, x_e, cfg)
+            y_e = y_e * (jnp.where(keep, top_w, 0.0)[:, None]).astype(y_e.dtype)
+            return acc.at[top_idx].add(y_e), None
+
+        acc0 = jnp.zeros_like(xf)
+        acc, _ = jax.lax.scan(expert_body, acc0, (experts_loc, w_local.T))
+        acc = jax.lax.psum(acc, psum_axes)
+        return acc.reshape(b, t, d)
+
+    # decode with tiny batches (e.g. long_500k, B=1): replicate the batch
+    # over the data axes instead of sharding it
+    bp = batch_phys if isinstance(batch_phys, tuple) else (batch_phys,)
+    dp_total = 1
+    for a in bp:
+        dp_total *= mesh.shape[a]
+    replicated = x.shape[0] % dp_total != 0
+    x_spec = P() if replicated else P(batch_phys)
+
+    def _ff_dim_divisible() -> bool:
+        for k, sub in experts.items():
+            for v in jax.tree.leaves(sub):
+                dim = v.shape[-2] if k == "w_out" else v.shape[-1]
+                if dim % dp_total != 0:
+                    return False
+        return True
+
+    ff_ok = replicated and _ff_dim_divisible()
+    if ff_ok:
+        # 2D expert sharding for replicated-token decode: keep the FSDP
+        # (d_ff over the batch axes) shard LOCAL -- each rank computes an
+        # ff-partial for its expert slice and one psum over (model + batch
+        # axes) combines; no per-layer expert all-gather (EXPERIMENTS
+        # §Perf hillclimb 2).
+        def espec(key):
+            if key == "w_out":
+                return P(model, batch_phys, None)
+            return P(model, None, batch_phys)
+
+        expert_specs = {
+            k: jax.tree.map(lambda _, k=k: espec(k), sub)
+            for k, sub in experts.items()
+        }
+        psum_axes = (model,) + bp
+    else:
+        expert_specs = jax.tree.map(lambda _: P(model), experts)
+        psum_axes = (model,)
+
+    def wrapped(router, experts_loc, x_loc):
+        return local_fn(router, experts_loc, x_loc, psum_axes)
+
+    return shard_map(
+        wrapped,
+        mesh=mesh,
+        in_specs=(P(), expert_specs, x_spec),
+        out_specs=x_spec,
+        check_rep=False,
+    )(p["router"], experts, x)
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    env = axis_env()
+    if env is None:
+        return _moe_local(p, x, cfg, cfg.num_experts)
+    return _moe_shardmap(p, x, cfg)

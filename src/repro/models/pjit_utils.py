@@ -1,0 +1,66 @@
+"""Mesh-context plumbing so model code is mesh-agnostic.
+
+The launcher installs an ``AxisEnv`` (mesh + logical->physical axis map);
+model code calls ``constrain(x, *logical_axes)`` and ``axis_env()``.
+When no env is installed (CPU smoke tests, examples) everything no-ops
+and MoE/collectives take their single-device paths.
+
+Logical axes: "batch" (data parallel; maps to ("pod","data") or ("data",)),
+"model" (TP/EP/SP), None (replicated).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisEnv:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]   # e.g. ("pod", "data") or ("data",)
+    model_axis: str = "model"
+
+    def physical(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "batch":
+            return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+        if logical == "model":
+            return self.model_axis
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *logical) -> P:
+        return P(*(self.physical(a) for a in logical))
+
+    def sharding(self, *logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+def axis_env() -> Optional[AxisEnv]:
+    return getattr(_state, "env", None)
+
+
+@contextlib.contextmanager
+def use_axis_env(env: Optional[AxisEnv]):
+    prev = getattr(_state, "env", None)
+    _state.env = env
+    try:
+        yield
+    finally:
+        _state.env = prev
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint on logical axes; no-op without an env."""
+    env = axis_env()
+    if env is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, env.sharding(*logical))

@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked training/prefill scan
+and O(1) single-token decode.  ngroups=1 (B/C shared across heads).
+
+Projections are `SparseLinear`s (N:M applies — DESIGN.md §5: mamba2 is
+attention-free but fully GEMM-dominated).  Heads shard on the model axis;
+B/C projections are small and replicated.
+
+The depthwise causal conv (width 4) is expressed as a sum of shifts, which
+lowers cleanly under GSPMD (no conv collectives).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_linear import apply_linear, init_linear
+
+from .config import ModelConfig
+from .pjit_utils import constrain
+
+Params = Dict[str, Any]
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d, di, g, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    sp, dt = cfg.sparsity, cfg.jnp_dtype
+    conv_ch = di + 2 * g
+    return {
+        "wz": init_linear(ks[0], d, di, sp, dt),
+        "wx": init_linear(ks[1], d, di, sp, dt),
+        "wB": (jax.random.normal(ks[2], (d, g), jnp.float32) * d**-0.5).astype(dt),
+        "wC": (jax.random.normal(ks[3], (d, g), jnp.float32) * d**-0.5).astype(dt),
+        "wdt": (jax.random.normal(ks[4], (d, nh), jnp.float32) * d**-0.5).astype(dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   * cfg.ssm_conv**-0.5).astype(dt),
+        "w_out": init_linear(ks[6], di, d, sp, dt, scale=di**-0.5),
+    }
+
+
+def _causal_conv(xbc: jax.Array, conv_w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. xbc: (B, T, C); conv_w: (W, C)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    t = xbc.shape[1]
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(w):
+        out = out + pad[:, i : i + t, :].astype(jnp.float32) * conv_w[i].astype(
+            jnp.float32
+        )
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def _ssd_scan(
+    x: jax.Array,     # (B, T, nh, hd)
+    dt: jax.Array,    # (B, T, nh) softplus'd
+    A: jax.Array,     # (nh,) negative
+    Bm: jax.Array,    # (B, T, ds)
+    Cm: jax.Array,    # (B, T, ds)
+    chunk: int,
+    h0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: intra-chunk quadratic term + inter-chunk state scan.
+
+    Returns (y (B,T,nh,hd), final_state (B,nh,hd,ds)).
+    """
+    b, t, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    nc = t // chunk
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = Bm.reshape(b, nc, chunk, ds).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, chunk, ds).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]                     # (B,nc,Q,nh) <= 0
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+    seg_end = cum[:, :, -1:, :]                           # (B,nc,1,nh)
+
+    # intra-chunk: y_i += sum_{j<=i} C_i.B_j * exp(cum_i - cum_j) * dt_j * x_j
+    scores = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)        # (B,nc,Q,Q)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Q,Q,nh)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]         # (B,nc,Q,nh,hd)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, xdt)
+
+    # per-chunk outgoing state: S_c = sum_j exp(seg_end - cum_j) dt_j B_j x_j
+    w_out = jnp.exp(seg_end - cum)                        # (B,nc,Q,nh)
+    S = jnp.einsum("bcjs,bcjh,bcjhp->bchsp", Bc, w_out * dtc, xc.astype(jnp.float32))
+
+    # scan chunk states: S_run_c = exp(seg_end_{c-1}) S_run_{c-1} + S_{c-1}
+    seg = jnp.exp(seg_end[:, :, 0, :])                    # (B,nc,nh)
+
+    def body(carry, inp):
+        s_prev = carry
+        s_c, g = inp                                      # g: (B,nh)
+        s_new = s_prev * g[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, ds, hd), jnp.float32)
+    final, s_run = jax.lax.scan(
+        body, h0, (S.transpose(1, 0, 2, 3, 4), seg.transpose(1, 0, 2))
+    )
+    s_run = s_run.transpose(1, 0, 2, 3, 4)                # (B,nc,nh,ds,hd)
+
+    # inter-chunk: y_i += (C_i . S_run_c) * exp(cum_i)
+    y_inter = jnp.einsum(
+        "bcis,bchsp,bcih->bcihp", Cc, s_run, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(b, t, nh, hd)
+    return y, final
+
+
+def mamba_block(
+    p: Params, x: jax.Array, cfg: ModelConfig, chunk: int = 128
+) -> jax.Array:
+    """Training/prefill forward. x: (B, T, d) -> (B, T, d)."""
+    b, t, d = x.shape
+    sp = cfg.sparsity
+    di, g, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = apply_linear(p["wz"], x, sp, gather="col")                      # (B,T,di)
+    xin = apply_linear(p["wx"], x, sp, gather="col")
+    Bm = x @ constrain(p["wB"], None, None).astype(x.dtype)
+    Cm = x @ constrain(p["wC"], None, None).astype(x.dtype)
+    dt_raw = x @ constrain(p["wdt"], None, "model").astype(x.dtype)
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"])
+    xin, Bm, Cm = jnp.split(xbc, [di, di + g], axis=-1)
+    xin = constrain(xin, "batch", None, "model")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = _ssd_scan(
+        xin.reshape(b, t, nh, hd), dt, A,
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32), chunk,
+    )
+    y = y + xin.reshape(b, t, nh, hd).astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype) * jax.nn.silu(z)
+    return apply_linear(p["w_out"], y, sp, gather="row")
+
+
+# ------------------------------------------------------------------ decode
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), cfg.jnp_dtype),
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+        ),
+    }
+
+
+def decode_mamba_block(
+    p: Params, x: jax.Array, cache: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step. x: (B, 1, d)."""
+    b = x.shape[0]
+    sp = cfg.sparsity
+    di, g, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = apply_linear(p["wz"], x, sp, gather="col")[:, 0]
+    xin = apply_linear(p["wx"], x, sp, gather="col")[:, 0]
+    Bm = (x @ constrain(p["wB"], None, None).astype(x.dtype))[:, 0]
+    Cm = (x @ constrain(p["wC"], None, None).astype(x.dtype))[:, 0]
+    dt_raw = (x @ constrain(p["wdt"], None, "model").astype(x.dtype))[:, 0]
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)         # (B, C)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,W,C)
+    conv = jnp.einsum(
+        "bwc,wc->bc", hist.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+    )
+    conv = jax.nn.silu(conv).astype(x.dtype)
+    xin, Bm, Cm = conv[:, :di], conv[:, di : di + g], conv[:, di + g :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                   # (B,nh)
+    xh = xin.reshape(b, nh, hd).astype(jnp.float32)
+    upd = jnp.einsum("bs,bh,bhp->bhsp", Bm.astype(jnp.float32), dt, xh)
+    state = cache["state"] * a[:, :, None, None] + upd    # (B,nh,ds,hd)
+    y = jnp.einsum("bs,bhsp->bhp", Cm.astype(jnp.float32), state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype) * jax.nn.silu(z)[:, None]
+    out = apply_linear(p["w_out"], y, sp, gather="row")
+    return out, {"conv": hist[:, 1:, :], "state": state}

@@ -1,0 +1,3 @@
+"""Optimizers and distributed-optimization tricks (no external deps)."""
+from .adamw import adamw_update, init_adamw
+from .schedule import cosine_warmup

@@ -1,0 +1,13 @@
+"""LR schedules."""
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    frac = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup_steps, warm, cos)

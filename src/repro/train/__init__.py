@@ -1,0 +1,3 @@
+"""Training loop + fault tolerance."""
+
+from .trainer import TrainerConfig, train

@@ -1,0 +1,69 @@
+"""Straggler / hang mitigation for multi-host runs.
+
+Each host heartbeats a small file ("host-<i>") with (step, wall time);
+the watchdog thread flags hosts whose last heartbeat lags the median by
+``straggle_factor`` x the median step time (log + callback -- on a real
+cluster the callback triggers the controller to evict/restart the slow
+host; here it feeds the trainer's metrics and tests)."""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Callable, List, Optional
+
+
+class Watchdog:
+    def __init__(
+        self,
+        run_dir: str | Path,
+        host_id: int,
+        num_hosts: int,
+        *,
+        straggle_factor: float = 3.0,
+        on_straggler: Optional[Callable[[List[int]], None]] = None,
+    ):
+        self.dir = Path(run_dir) / "heartbeats"
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.factor = straggle_factor
+        self.on_straggler = on_straggler
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.stragglers: List[int] = []
+
+    def beat(self, step: int):
+        f = self.dir / f"host-{self.host_id}"
+        f.write_text(json.dumps({"step": step, "t": time.time()}))
+
+    def _scan(self):
+        beats = {}
+        for f in self.dir.glob("host-*"):
+            try:
+                beats[int(f.name.split("-")[1])] = json.loads(f.read_text())
+            except (ValueError, json.JSONDecodeError):
+                continue
+        if len(beats) < 2:
+            return
+        steps = sorted(b["step"] for b in beats.values())
+        median = steps[len(steps) // 2]
+        lagging = [h for h, b in beats.items() if median - b["step"] >= self.factor]
+        if lagging and lagging != self.stragglers:
+            self.stragglers = lagging
+            if self.on_straggler:
+                self.on_straggler(lagging)
+
+    def start(self, interval: float = 5.0):
+        def loop():
+            while not self._stop.is_set():
+                self._scan()
+                self._stop.wait(interval)
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()

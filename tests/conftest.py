@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+# must see the single real CPU device.  Multi-device tests spawn
+# subprocesses with their own XLA_FLAGS (see test_dryrun_small.py).
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # for `import benchmarks.*` in cross-checks

@@ -1,0 +1,97 @@
+"""Benchmark-harness validation: the cycle model and transform analysis
+reproduce the paper's claims within stated tolerances."""
+
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.cycle_model import (
+    ENGINES, WORKLOADS, run_fig13, simulate_kernel, summarize_speedups,
+)
+from benchmarks.fig15_unstructured import covered_fraction, run as run_fig15, summarize
+from benchmarks.fig3_roofline import run as run_fig3
+from benchmarks.fig4_instr_counts import run as run_fig4
+
+
+def test_engine_geometry_table3():
+    e = ENGINES["VEGETA-S-2-2"]
+    assert (e.n_rows, e.n_cols) == (16, 8)
+    e = ENGINES["VEGETA-S-16-2"]
+    assert (e.n_rows, e.n_cols) == (16, 1)
+    e = ENGINES["RASA-SM"]
+    assert (e.n_rows, e.n_cols) == (32, 16)
+    e = ENGINES["TMUL-like"]
+    assert (e.n_rows, e.n_cols) == (32, 1)
+
+
+def test_fig13_headline_speedups_within_band():
+    """Paper: 1.09x / 2.20x / 3.74x for 4:4 / 2:4 / 1:4 vs RASA-DM.
+    Cycle-model reproduction must land within 15% (we do not model the
+    OoO core front-end that MacSim includes)."""
+    sp = summarize_speedups(run_fig13())
+    for key, claim in (("4:4", 1.09), ("2:4", 2.20), ("1:4", 3.74)):
+        assert abs(sp[key] - claim) / claim < 0.15, (key, sp[key], claim)
+
+
+def test_dense_engines_sparsity_blind():
+    for n in (1, 2, 4):
+        c = simulate_kernel(ENGINES["RASA-DM"], 512, 512, 2048, weight_n=n)
+        c4 = simulate_kernel(ENGINES["RASA-DM"], 512, 512, 2048, weight_n=4)
+        assert c == c4
+
+
+def test_stc_accelerates_only_2_4():
+    e = ENGINES["STC-like"]
+    c4 = simulate_kernel(e, 512, 512, 2048, weight_n=4)
+    c2 = simulate_kernel(e, 512, 512, 2048, weight_n=2)
+    c1 = simulate_kernel(e, 512, 512, 2048, weight_n=1)
+    assert c2 < c4 and c1 == c2  # 1:4 no better than 2:4 on STC
+
+
+def test_output_forwarding_never_slower():
+    for w in WORKLOADS.values():
+        for n in (1, 2, 4):
+            c = simulate_kernel(ENGINES["VEGETA-S-16-2"], *w, weight_n=n)
+            cof = simulate_kernel(ENGINES["VEGETA-S-16-2-OF"], *w, weight_n=n)
+            assert cof <= c
+
+
+def test_fig15_row_wise_matches_paper():
+    """Paper: row-wise 2.36x @90%, 3.28x @95%."""
+    s = summarize(run_fig15())
+    assert abs(s["row"][0.9] - 2.36) / 2.36 < 0.10, s["row"]
+    assert abs(s["row"][0.95] - 3.28) / 3.28 < 0.10, s["row"]
+    # granularity ordering: layer <= tile <= row (finer covers tighter)
+    for d in (0.8, 0.9, 0.95):
+        assert s["layer"][d] <= s["tile"][d] + 1e-9 <= s["row"][d] + 1e-9
+
+
+def test_fig15_cover_lossless_property():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(256, 64)) * (rng.random((256, 64)) < 0.1)
+    frac = covered_fraction(w, "row")
+    assert frac >= (w != 0).mean()  # cover can't beat true density
+
+
+def test_fig3_qualitative_claims():
+    rows = run_fig3()
+    d = {(r["engine"], r["density"]): r["eff_gflops"] for r in rows}
+    # dense == sparse at 100% density
+    assert d[("dense-matrix", 1.0)] == d[("sparse-matrix", 1.0)]
+    # sparse matrix >> dense matrix at low density
+    assert d[("sparse-matrix", 0.0625)] > 2 * d[("dense-matrix", 0.0625)]
+    # vector -> matrix as density drops (memory-bound convergence, paper:
+    # "at extremely low density ... vector performs similar to matrix")
+    r3 = d[("sparse-vector", 0.03125)] / d[("sparse-matrix", 0.03125)]
+    r05 = d[("sparse-vector", 0.005)] / d[("sparse-matrix", 0.005)]
+    assert r05 > r3 and r05 > 0.75, (r3, r05)
+
+
+def test_fig4_matrix_needs_fewer_instructions():
+    for r in run_fig4():
+        assert r["ratio"] > 50  # paper: orders of magnitude fewer

@@ -1,0 +1,92 @@
+"""Unit + property tests for the N:M core (compress/decompress/pack)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nm
+
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+@pytest.mark.parametrize("shape", [(16, 16), (64, 48), (128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_compress_roundtrip(n, shape, dtype):
+    w = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32).astype(dtype)
+    pruned, mask = nm.prune_nm(w, n, 4)
+    c = nm.compress_nm(pruned, n, 4)
+    d = nm.decompress_c(c)
+    assert d.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(d, np.float32), np.asarray(pruned, np.float32))
+
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_prune_property(n):
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    pruned, mask = nm.prune_nm(w, n, 4)
+    blocks = np.asarray(pruned).reshape(16, 4, 32)
+    nnz = (blocks != 0).sum(axis=1)
+    assert (nnz <= n).all()
+    # magnitude top-n: kept values are the n largest per block
+    wb = np.abs(np.asarray(w).reshape(16, 4, 32))
+    kept = np.abs(blocks) > 0
+    for b in range(16):
+        for o in range(32):
+            thresh = np.sort(wb[b, :, o])[-n]
+            assert (wb[b, kept[b, :, o], o] >= thresh - 1e-7).all()
+
+
+def test_meta_pack_roundtrip():
+    meta = jax.random.randint(jax.random.PRNGKey(2), (64, 32), 0, 4).astype(jnp.uint8)
+    packed = nm.pack_meta(meta)
+    assert packed.shape == (16, 32)
+    un = nm.unpack_meta(packed)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(meta))
+
+
+def test_storage_accounting():
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 128), jnp.float32).astype(jnp.bfloat16)
+    # values: n/4 of dense bf16 bytes; metadata: 2 bits per kept value
+    # = (n/4)*K*O*2bits = K*O*n/16 bytes vs dense 2*K*O bytes -> n/32 ratio
+    for n, expect_ratio in [(1, 0.25 + 1 / 32), (2, 0.5 + 2 / 32)]:
+        pruned, _ = nm.prune_nm(w, n, 4)
+        c = nm.compress_nm(pruned, n, 4)
+        dense = nm.dense_bytes(256, 128, jnp.bfloat16)
+        ratio = nm.storage_bytes(c) / dense
+        assert abs(ratio - expect_ratio) < 1e-6, (n, ratio, expect_ratio)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kb=st.integers(1, 8),
+    o=st.integers(1, 6),
+    n=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_hypothesis(kb, o, n, seed):
+    """Property: compress∘decompress == identity on any N:M-pruned matrix."""
+    k, ocols = kb * 16, o * 8
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, ocols))
+    pruned, _ = nm.prune_nm(w, n, 4)
+    c = nm.compress_nm(pruned, n, 4)
+    d = nm.decompress_c(c)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(pruned), rtol=0, atol=0)
+    # metadata is canonical: strictly increasing within blocks
+    meta = np.asarray(c.meta).reshape(-1, n, ocols)
+    if n > 1:
+        assert (np.diff(meta, axis=1) > 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    density=st.floats(0.01, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_matrix_lossless(density, seed):
+    """Any matrix that already satisfies N:M compresses losslessly."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(64, 32)) * (rng.random((64, 32)) < density)
+    w2, _ = nm.prune_nm(jnp.asarray(w, jnp.float32), 2, 4)
+    c = nm.compress_nm(w2, 2, 4)
+    np.testing.assert_array_equal(np.asarray(nm.decompress_c(c)), np.asarray(w2))

@@ -1,0 +1,70 @@
+"""Unit tests for the while-trip-aware HLO cost analyzer on a hand-written
+module (fast + deterministic; the vs-analytic validation lives in
+test_dryrun_small.py)."""
+
+from repro.launch.hlo_cost import analyze, parse_module
+
+HLO = """\
+HloModule test_module
+
+%dot_comp (a: bf16[8,16], b: bf16[16,4]) -> f32[8,4] {
+  %a = bf16[8,16]{1,0} parameter(0)
+  %b = bf16[16,4]{1,0} parameter(1)
+  ROOT %dot.1 = f32[8,4]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%body (p: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+  %p = (s32[], f32[8,4]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,4]{1,0} get-tuple-element(%p), index=1
+  %c1 = s32[] constant(1)
+  %iv2 = s32[] add(%iv, %c1)
+  %a2 = bf16[8,16]{1,0} convert(%x)
+  %b2 = bf16[16,4]{1,0} constant(0)
+  %d = f32[8,4]{1,0} dot(%a2, %b2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,4]{1,0} all-reduce(%d), replica_groups=[16,16]<=[256], to_apply=%dot_comp
+  ROOT %t = (s32[], f32[8,4]) tuple(%iv2, %ar)
+}
+
+%cond (p: (s32[], f32[8,4])) -> pred[] {
+  %p = (s32[], f32[8,4]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(10)
+  ROOT %cmp = pred[] compare(%iv, %lim), direction=LT
+}
+
+ENTRY %main (x: f32[8,4]) -> f32[8,4] {
+  %x = f32[8,4]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[8,4]) tuple(%c0, %x)
+  %w = (s32[], f32[8,4]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_module_structure():
+    comps, entry = parse_module(HLO)
+    assert entry == "main"
+    assert set(comps) >= {"main", "body", "cond", "dot_comp"}
+    assert any(i.opcode == "while" for i in comps["main"].instrs)
+
+
+def test_while_trip_multiplication():
+    cost = analyze(HLO, 256)
+    # one dot of 2*8*4*16 = 1024 flops per iteration x 10 trips
+    assert cost["flops"] == 1024 * 10, cost["flops"]
+
+
+def test_collective_ring_model():
+    cost = analyze(HLO, 256)
+    # all-reduce f32[8,4] = 128B, group 16: 2*128*(15/16) = 240 B x 10
+    assert abs(cost["coll_all-reduce"] - 240 * 10) < 1e-6
+    assert cost["coll_total"] == cost["coll_all-reduce"]
+
+
+def test_trip_count_fallback_from_condition():
+    # strip the backend_config -> the analyzer must read constant(10)
+    hlo2 = HLO.replace(', backend_config={"known_trip_count":{"n":"10"}}', "")
+    cost = analyze(hlo2, 256)
+    assert cost["flops"] == 1024 * 10, cost["flops"]

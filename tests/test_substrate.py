@@ -1,0 +1,153 @@
+"""Substrate tests: data pipeline, checkpoint store, optimizer, schedule,
+gradient compression, straggler watchdog."""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.data import DataConfig, TokenDataset, make_pipeline
+from repro.optim.adamw import adamw_update, global_norm, init_adamw
+from repro.optim.compress import compress_decompress, init_error_feedback
+from repro.optim.schedule import cosine_warmup
+from repro.train.watchdog import Watchdog
+
+
+# ------------------------------------------------------------------ data
+def test_data_deterministic_and_restartable():
+    cfg = DataConfig(seq_len=16, global_batch=8, vocab_size=100, seed=3)
+    ds = TokenDataset(cfg)
+    b1 = ds.batch_at(7)
+    b2 = ds.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 16)
+    assert (b1["tokens"] < 100).all() and (b1["tokens"] >= 0).all()
+    # shifted labels
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    full = TokenDataset(DataConfig(seq_len=8, global_batch=8, vocab_size=50, seed=1))
+    parts = [
+        TokenDataset(DataConfig(seq_len=8, global_batch=8, vocab_size=50, seed=1,
+                                host_id=h, num_hosts=4)).batch_at(0)["tokens"]
+        for h in range(4)
+    ]
+    assert all(p.shape == (2, 8) for p in parts)
+
+
+def test_data_mmap_file(tmp_path):
+    arr = np.arange(10_000, dtype=np.int32) % 128
+    f = tmp_path / "toks.bin"
+    arr.tofile(f)
+    ds = TokenDataset(DataConfig(seq_len=32, global_batch=4, vocab_size=128,
+                                 path=str(f)))
+    b = ds.batch_at(0)
+    assert b["tokens"].shape == (4, 32)
+    # consecutive positions from the file
+    assert ((b["labels"] - b["tokens"]) % 128 == 1).all()
+
+
+def test_pipeline_prefetch():
+    it = make_pipeline(DataConfig(seq_len=8, global_batch=4, vocab_size=64))
+    b0 = next(it)
+    b1 = next(it)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    it.close()
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    for step in (1, 2, 3, 4):
+        save(tmp_path, step, tree, extra={"step": step}, keep=2)
+    assert latest_step(tmp_path) == 4
+    # keep-k GC
+    kept = sorted(p.name for p in tmp_path.glob("step-*"))
+    assert len(kept) == 2
+    got, extra = restore(tmp_path, 4, tree)
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+    assert got["b"]["c"].dtype == jnp.bfloat16
+    assert extra["step"] == 4
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A leftover tmp dir from a crashed writer never shadows a real ckpt."""
+    tree = {"a": jnp.zeros((2,))}
+    save(tmp_path, 5, tree)
+    (tmp_path / "tmp-6").mkdir()   # simulated crash mid-write
+    assert latest_step(tmp_path) == 5
+
+
+# --------------------------------------------------------------- optimizer
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_adamw(params)
+    target = jnp.array([1.0, 2.0])
+
+    for step in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state = adamw_update(params, g, state, jnp.int32(step),
+                                     lr=5e-2, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((3,))}
+    state = init_adamw(params)
+    g = {"w": jnp.array([1e6, 0.0, 0.0])}
+    p2, _ = adamw_update(params, g, state, jnp.int32(0), lr=1.0, clip_norm=1.0,
+                         weight_decay=0.0)
+    assert float(jnp.abs(p2["w"]).max()) < 5.0  # clipped, not 1e6-scaled
+
+
+def test_schedule_shape():
+    lr0 = float(cosine_warmup(0, peak_lr=1.0, warmup_steps=10, total_steps=100))
+    lr10 = float(cosine_warmup(10, peak_lr=1.0, warmup_steps=10, total_steps=100))
+    lr100 = float(cosine_warmup(100, peak_lr=1.0, warmup_steps=10, total_steps=100))
+    assert lr0 == 0.0 and abs(lr10 - 1.0) < 1e-6 and lr100 < 0.15
+
+
+# -------------------------------------------------------------- compression
+def test_compression_error_feedback_unbiased():
+    """EF compression: cumulative compressed sum tracks the true sum."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (256,))}
+    err = init_error_feedback(g)
+    total_true = np.zeros(256)
+    total_comp = np.zeros(256)
+    for i in range(50):
+        gi = {"w": jax.random.normal(jax.random.PRNGKey(i), (256,))}
+        deq, err = compress_decompress(gi, err)
+        total_true += np.asarray(gi["w"])
+        total_comp += np.asarray(deq["w"])
+    # error feedback keeps the residual bounded (not growing with steps)
+    resid = np.abs(total_true - total_comp).max()
+    one_step_q = float(jnp.abs(g["w"]).max()) / 127
+    assert resid < 10 * one_step_q, resid
+
+
+def test_compression_wire_dtype():
+    g = {"w": jnp.ones((64,), jnp.float32)}
+    err = init_error_feedback(g)
+    deq, err2 = compress_decompress(g, err)
+    np.testing.assert_allclose(np.asarray(deq["w"]), 1.0, rtol=1e-2)
+
+
+# ---------------------------------------------------------------- watchdog
+def test_watchdog_flags_straggler(tmp_path):
+    flagged = []
+    wds = [Watchdog(tmp_path, h, 3, straggle_factor=3.0,
+                    on_straggler=lambda s: flagged.append(s)) for h in range(3)]
+    for step in range(10):
+        wds[0].beat(step)
+        wds[1].beat(step)
+        wds[2].beat(min(step, 2))  # host 2 stuck at step 2
+    wds[0]._scan()
+    assert flagged and flagged[-1] == [2]
