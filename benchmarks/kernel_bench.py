@@ -1,10 +1,13 @@
-"""Kernel microbenchmarks: wall-clock of the XLA lowerings (CPU) and HBM
-byte accounting of the Pallas kernel contracts (Table IV workload shapes).
+"""Kernel microbenchmarks via the dispatch engine (Table IV workload shapes).
 
-Wall-clock on CPU measures the *jnp reference paths* (interpret-mode
-Pallas is emulation, not a perf path); the derived columns report the
-kernel-contract HBM bytes -- the quantity that determines TPU decode/
-serving speedup (DESIGN.md Tier 1).
+Every matmul goes through ``repro.kernels.dispatch.sparse_matmul`` — the
+same entry point the models use — so the timed path IS the served path.
+On CPU the engine resolves to the jnp reference lowerings (interpret-mode
+Pallas is emulation, not a perf path); on TPU the same harness times the
+Mosaic kernels.  Each row also reports the registry's kernel selection
+and fitted/tuned block sizes for the kernel backend, plus the HBM byte
+accounting of the compressed contracts — the quantity that determines
+TPU decode/serving speedup (DESIGN.md Tier 1).
 """
 
 from __future__ import annotations
@@ -16,6 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import nm
+from repro.core.sparse_linear import SparsityConfig
+from repro.kernels import dispatch as kdispatch
+from repro.kernels.registry import detect_backend
 
 try:
     from .cycle_model import WORKLOADS
@@ -24,11 +30,23 @@ except ImportError:
 
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _kernel_plan(params, x_shape, cfg, dtype) -> str:
+    """What the registry would run for this problem on a kernel backend."""
+    backend = detect_backend()
+    probe = kdispatch.DispatchConfig(
+        backend=backend if backend == "tpu" else "interpret")
+    d = kdispatch.plan_for(params, x_shape, cfg, dtype=dtype, dispatch=probe)
+    if not d.uses_kernel:
+        return "jnp-only"
+    bb, bke, bo = d.blocks
+    return f"{d.kernel}(b{bb}/ke{bke}/o{bo})"
 
 
 def run(workloads=("BERT-L1", "GPT-L1")) -> List[dict]:
@@ -40,26 +58,27 @@ def run(workloads=("BERT-L1", "GPT-L1")) -> List[dict]:
         x = jax.random.normal(key, (m, k), jnp.float32).astype(jnp.bfloat16)
         w = jax.random.normal(key, (k, n), jnp.float32).astype(jnp.bfloat16)
 
-        dense = jax.jit(lambda x, w: x @ w)
+        cfg_d = SparsityConfig(mode="dense")
+        dense = jax.jit(
+            lambda x, w: kdispatch.sparse_matmul(x, {"w": w}, cfg_d))
         t_dense = _time(dense, x, w)
         dense_bytes = nm.dense_bytes(k, n)
 
         for sp_n in (2, 1):
+            cfg_s = SparsityConfig(n=sp_n, m=4, mode="compressed")
             pruned, _ = nm.prune_nm(w, sp_n, 4)
             c = nm.compress_nm(pruned, sp_n, 4)
-            pm = nm.pack_meta(c.meta)
+            params = {"values": c.values, "meta_packed": nm.pack_meta(c.meta)}
 
-            @jax.jit
-            def spmm(x, v, pm):
-                meta = nm.unpack_meta(pm)
-                wd = nm.decompress(v, meta, sp_n, 4)
-                return x @ wd
-
-            t_sp = _time(spmm, x, c.values, pm)
+            spmm = jax.jit(
+                lambda x, v, pm, cfg_s=cfg_s: kdispatch.sparse_matmul(
+                    x, {"values": v, "meta_packed": pm}, cfg_s))
+            t_sp = _time(spmm, x, params["values"], params["meta_packed"])
             cb = nm.storage_bytes(c)
             rows.append({
                 "name": f"{name}/{sp_n}:4",
-                "us_dense": t_dense, "us_spmm_xla": t_sp,
+                "us_dense": t_dense, "us_spmm_engine": t_sp,
+                "dispatch": _kernel_plan(params, (m, k), cfg_s, x.dtype),
                 "weight_bytes_dense": dense_bytes,
                 "weight_bytes_compressed": cb,
                 "hbm_reduction": dense_bytes / cb,
@@ -68,9 +87,11 @@ def run(workloads=("BERT-L1", "GPT-L1")) -> List[dict]:
 
 
 def main():
+    print(f"kernel_backend,{detect_backend()}")
     for r in run():
         print(f"kernel_{r['name']},us_dense={r['us_dense']:.0f},"
-              f"us_spmm_xla={r['us_spmm_xla']:.0f},"
+              f"us_spmm_engine={r['us_spmm_engine']:.0f},"
+              f"dispatch={r['dispatch']},"
               f"weight_bytes={r['weight_bytes_dense']}->"
               f"{r['weight_bytes_compressed']},"
               f"hbm_reduction={r['hbm_reduction']:.2f}x")

@@ -2,8 +2,10 @@
 
 A miniature continuous-batching server: requests with different prompt
 lengths join a running decode batch; weights live in the compressed
-(values + packed 2-bit metadata) layout the whole time — the layout the
-``kernels/nm_spmm`` Pallas kernel consumes on TPU.
+(values + packed 2-bit metadata) layout the whole time.  Every projection
+lowers through the kernel dispatch engine: on TPU the registry resolves
+the layout to the ``kernels/nm_spmm`` Pallas kernel, on CPU the jnp
+reference path runs (force kernels with REPRO_KERNEL_BACKEND=interpret).
 
 Run: PYTHONPATH=src python examples/serve_compressed.py
 """
@@ -16,6 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core.sparse_linear import SparsityConfig
+from repro.kernels import dispatch as kdispatch
+from repro.launch.serve import _dispatch_report
 from repro.models import decode_step, init_caches, init_params
 
 MAX_LEN = 64
@@ -29,6 +33,10 @@ def main():
     n_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
     print(f"serving {cfg.name} (reduced) with 2:4-compressed weights "
           f"({n_bytes/1e6:.2f} MB resident)")
+    print("dispatch engine plan:")
+    for line in _dispatch_report(params, BATCH, cfg.sparsity,
+                                 kdispatch.current_dispatch()):
+        print(line)
 
     caches = init_caches(cfg, BATCH, MAX_LEN)
     sstep = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))

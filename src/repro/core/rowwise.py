@@ -125,16 +125,22 @@ def rowwise_matmul_kernels(
     x: jax.Array, rc: RowwiseCompressed, *, interpret: bool = True,
     block_pad: int = 128,
 ) -> jax.Array:
-    """TILE_SPMM_R adaptation: per-tier dispatch into the ``nm_spmm``
-    Pallas kernel (one call per N:4 tier, channels pre-grouped by the
-    pseudo-row-wise permutation), output un-permuted.
+    """TILE_SPMM_R adaptation: per-tier dispatch through the kernel
+    dispatch engine (one ``sparse_matmul`` per N:4 tier, channels
+    pre-grouped by the pseudo-row-wise permutation), output un-permuted.
 
-    Channel segments are zero-padded to ``block_pad`` lanes so every call
-    is MXU-aligned; padding columns are dropped on the way out.
+    Each tier segment is a plain compressed SparseLinear layout, so the
+    registry resolves it to the ``nm_spmm`` kernel exactly as it does for
+    whole compressed layers — row-wise is tier-segmented dispatch, not a
+    separate engine.  Channel segments are zero-padded to ``block_pad``
+    lanes so every call is MXU-aligned; padding columns are dropped on
+    the way out.
     """
     from repro.core import nm as _nm
-    from repro.kernels.nm_spmm.kernel import nm_spmm
+    from repro.core.sparse_linear import SparsityConfig
+    from repro.kernels.dispatch import DispatchConfig, sparse_matmul
 
+    dcfg = DispatchConfig(backend="interpret" if interpret else "auto")
     outs = []
     for n, size, seg in zip(rc.tiers, rc.tier_sizes, rc.segments):
         if size == 0 or seg is None:
@@ -145,14 +151,9 @@ def rowwise_matmul_kernels(
         if pad:
             vals = jnp.pad(vals, ((0, 0), (0, pad)))
             meta = jnp.pad(meta, ((0, 0), (0, pad)))
-        pm = _nm.pack_meta(meta)
-        y = nm_spmm(
-            x.astype(vals.dtype), vals, pm, n,
-            block_b=min(128, x.shape[0]),
-            block_o=min(block_pad, vals.shape[1]),
-            block_ke=min(512, x.shape[1]),
-            interpret=interpret,
-        )
+        params = {"values": vals, "meta_packed": _nm.pack_meta(meta)}
+        cfg = SparsityConfig(n=n, m=rc.m, mode="compressed")
+        y = sparse_matmul(x.astype(vals.dtype), params, cfg, dispatch=dcfg)
         outs.append(y[:, :o])
     y_perm = jnp.concatenate(outs, axis=-1)
     return y_perm[..., rc.inv_perm]

@@ -24,7 +24,6 @@ import jax
 import jax.numpy as jnp
 
 from . import nm
-from .ste import srste_prune
 
 __all__ = ["SparsityConfig", "init_linear", "apply_linear", "convert_to_serving"]
 
@@ -83,12 +82,20 @@ def apply_linear(
 ) -> jax.Array:
     """y = x @ W with the mode's lowering. x: (..., K) -> (..., O).
 
+    All four modes route through the kernel dispatch engine
+    (``repro.kernels.dispatch.sparse_matmul``): on TPU (or with the
+    interpret backend forced) the registry picks the matching Pallas
+    kernel (``tile_gemm`` | ``nm_spmm`` | ``nm_spmm_gather``); under
+    ``jax.grad``, under an installed mesh env, or when no kernel fits,
+    the engine lowers the documented jnp reference formulation instead.
+
     ``gather`` ("col" | "row" | None) pins the weight sharding at use-site
     to model-axis-only, forcing the FSDP all-gather of the (small) weight
     instead of an activation all-reduce over the data axis (ZeRO-3
     semantics; its VJP is the matching grad reduce-scatter).
     """
-    from repro.models.pjit_utils import constrain  # local: avoid cycle
+    from repro.kernels.dispatch import sparse_matmul  # local: avoid cycle
+    from repro.models.pjit_utils import constrain     # local: avoid cycle
 
     def _g(w):
         if not cfg.fsdp_gather:
@@ -99,22 +106,7 @@ def apply_linear(
             return constrain(w, "model", None)
         return w
 
-    if "w" in params:
-        w = params["w"]
-        if cfg.mode == "masked" and cfg.is_sparse:
-            w = srste_prune(w, cfg.n, cfg.m, cfg.srste_lam)
-        return x @ _g(w).astype(x.dtype)
-    if "meta_packed" in params:
-        meta = nm.unpack_meta(params["meta_packed"])
-        w = nm.decompress(_g(params["values"]), meta, cfg.n, cfg.m)
-        return x @ w.astype(x.dtype)
-    if "gather_idx" in params:
-        idx = params["gather_idx"]
-        kc = idx.shape[0]
-        blk = (jnp.arange(kc, dtype=jnp.int32) // cfg.n) * cfg.m
-        x_g = jnp.take(x, blk + idx, axis=-1)
-        return x_g @ _g(params["values"]).astype(x.dtype)
-    raise ValueError(f"unrecognized linear params: {list(params)}")
+    return sparse_matmul(x, params, cfg, constrain_fn=_g)
 
 
 def convert_to_serving(

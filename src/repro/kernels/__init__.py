@@ -7,4 +7,20 @@
 
 All validated against ``ref.py`` oracles in interpret mode (CPU); on-TPU
 execution uses the same ``pallas_call`` with ``interpret=False``.
+
+The kernels are not called directly by models: the **dispatch engine**
+(``registry`` + ``dispatch``) is the single entry point — it maps
+``(mode, shape, N:M, dtype, backend)`` to a kernel (or to the jnp
+reference formulation) and owns block-size autotuning (``autotune``).
 """
+
+from repro.kernels.dispatch import (  # noqa: F401
+    DispatchConfig,
+    DispatchDecision,
+    describe,
+    plan,
+    plan_for,
+    sparse_matmul,
+    use_dispatch,
+)
+from repro.kernels.registry import detect_backend, select  # noqa: F401

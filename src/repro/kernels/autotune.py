@@ -1,0 +1,141 @@
+"""Block-size autotuner for the dispatch engine.
+
+Per-(kernel, problem, backend) best block sizes, resolved in three layers:
+
+1. an in-process cache (dict) — hot path, no I/O;
+2. a JSON store under ``experiments/autotune/`` (one file per backend) so
+   tuned blocks survive process restarts and can feed BENCH trajectories;
+3. live timing of the kernel over its legal block candidates (``tune``),
+   which then populates both layers.
+
+Keys are deterministic strings (shape/sparsity/dtype), so a tuned entry on
+one host applies to any run of the same problem on the same backend.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+__all__ = [
+    "cache_key",
+    "lookup",
+    "record",
+    "tune",
+    "clear_memory_cache",
+    "store_path",
+]
+
+Blocks = Tuple[int, int, int]
+
+_ENV_DIR = "REPRO_AUTOTUNE_DIR"
+_DEFAULT_DIR = os.path.join("experiments", "autotune")
+
+# (backend) -> {key: [bb, bke, bo]}; None = not yet loaded from disk
+_MEM: Dict[str, Optional[Dict[str, list]]] = {}
+
+
+def cache_key(kernel: str, b: int, ke: int, o: int, n: int, m: int, dtype) -> str:
+    return f"{kernel}/b{b}_ke{ke}_o{o}_n{n}m{m}_{jax.numpy.dtype(dtype).name}"
+
+
+def store_path(backend: str) -> str:
+    base = os.environ.get(_ENV_DIR, _DEFAULT_DIR)
+    return os.path.join(base, f"{backend}.json")
+
+
+def _load(backend: str) -> Dict[str, list]:
+    cached = _MEM.get(backend)
+    if cached is not None:
+        return cached
+    path = store_path(backend)
+    table: Dict[str, list] = {}
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        if isinstance(raw, dict):
+            table = {
+                k: v for k, v in raw.items()
+                if isinstance(v, list) and len(v) == 3
+            }
+    except (OSError, ValueError):
+        pass  # missing or corrupt store — start fresh
+    _MEM[backend] = table
+    return table
+
+
+def _save(backend: str) -> None:
+    table = _MEM.get(backend) or {}
+    path = store_path(backend)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    # atomic replace so a crashed run can't corrupt the store
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(table, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+def lookup(backend: str, key: str) -> Optional[Blocks]:
+    hit = _load(backend).get(key)
+    return tuple(hit) if hit else None
+
+
+def record(backend: str, key: str, blocks: Blocks, persist: bool = True) -> None:
+    _load(backend)[key] = list(blocks)
+    if persist:
+        _save(backend)
+
+
+def tune(
+    runner: Callable[[Blocks], jax.Array],
+    candidates: Sequence[Blocks],
+    *,
+    backend: str,
+    key: str,
+    iters: int = 3,
+    persist: bool = True,
+) -> Optional[Blocks]:
+    """Time ``runner`` over each legal candidate; cache and return the best.
+
+    ``runner(blocks)`` must execute the kernel end-to-end (it is called
+    once for warm-up/compile, then ``iters`` times under the clock).
+    Returns ``None`` — and records nothing — when every candidate failed,
+    so a broken kernel/problem pair never poisons the cache and the
+    caller can fall back.
+    """
+    hit = lookup(backend, key)
+    if hit is not None:
+        return hit
+    assert candidates, "tune() requires at least one legal candidate"
+    best, best_t = None, float("inf")
+    for blocks in candidates:
+        try:
+            jax.block_until_ready(runner(blocks))  # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(runner(blocks))
+            dt = (time.perf_counter() - t0) / iters
+        except Exception:
+            continue  # candidate failed to compile/run — skip it
+        if dt < best_t:
+            best, best_t = blocks, dt
+    if best is None:
+        return None
+    record(backend, key, best, persist=persist)
+    return tuple(best)
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process layer (tests; the JSON store is untouched)."""
+    _MEM.clear()

@@ -1,0 +1,28 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+briefly shipped both); pinning the repo to one spelling breaks on the
+other side of the rename.  Every kernel goes through
+:func:`tpu_compiler_params` instead of naming the class directly.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+
+def tpu_compiler_params(*, dimension_semantics=None, **kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``.
+
+    Returns ``None`` (i.e. "no params") if this JAX exposes neither
+    spelling, which keeps interpret-mode CPU runs working on any version.
+    """
+    if _COMPILER_PARAMS_CLS is None:
+        return None
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return _COMPILER_PARAMS_CLS(**kwargs)

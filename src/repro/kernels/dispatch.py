@@ -1,0 +1,480 @@
+"""Unified sparse-GEMM dispatch engine — one entry point for every mode.
+
+This is the software realization of the paper's vertically-integrated
+engine: models, the serving launcher, examples, and benchmarks all call
+:func:`sparse_matmul`, and ONE dispatch layer decides — per (mode, shape,
+N:M, dtype, backend) — whether the matmul runs on a Pallas kernel
+(``tile_gemm`` for dense 4:4, ``nm_spmm`` for Tier-1 compressed,
+``nm_spmm_gather`` for Tier-2 lane-aligned) or on the documented pure-jnp
+reference formulation.
+
+The jnp formulations remain first-class: they are the semantics the
+kernels are tested against, and they are what the engine uses whenever
+kernels don't apply — under ``jax.grad`` (the Pallas bodies carry no VJP
+rules), under an installed mesh/sharding env (XLA owns the collective
+layout), on CPU by default (interpret-mode Pallas is emulation, not perf),
+or when a shape fails a kernel's tiling constraints.
+
+Block sizes come from the autotuner (in-process cache + JSON store under
+``experiments/autotune/``) when enabled, else from per-problem fitting.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.interpreters import ad
+
+from repro.core import nm
+from repro.core.ste import srste_prune
+from repro.kernels import autotune, registry
+from repro.kernels.registry import KernelEntry, largest_fitting_block
+
+__all__ = [
+    "DispatchConfig",
+    "DispatchDecision",
+    "sparse_matmul",
+    "plan",
+    "describe",
+    "use_dispatch",
+    "current_dispatch",
+    "input_features",
+    "iter_linear_leaves",
+    "plan_for",
+    "pretune",
+    "JNP_REFERENCE",
+]
+
+JNP_REFERENCE = "jnp-reference"
+
+Blocks = Tuple[int, int, int]  # (block_b, block_ke, block_o)
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Engine-wide knobs; override per call-site or via ``use_dispatch``."""
+
+    backend: str = "auto"          # auto | tpu | interpret | jnp
+    autotune: bool = False         # time block candidates on first sight
+    blocks: Optional[Blocks] = None  # hard override (block_b, block_ke, block_o)
+    persist_autotune: bool = True  # write tuned blocks to the JSON store
+
+
+_DEFAULT = DispatchConfig()
+
+
+def current_dispatch() -> DispatchConfig:
+    return _DEFAULT
+
+
+@contextlib.contextmanager
+def use_dispatch(**overrides):
+    """Temporarily override the engine defaults (tests, serving flags)."""
+    global _DEFAULT
+    prev = _DEFAULT
+    _DEFAULT = dataclasses.replace(prev, **overrides)
+    try:
+        yield _DEFAULT
+    finally:
+        _DEFAULT = prev
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchDecision:
+    """What the engine chose for one problem, and why.
+
+    ``blocks_source`` is the structured origin of ``blocks`` —
+    "none" (jnp reference), "fitted" (per-problem default fitting),
+    "tuned" (autotune cache hit), or "pinned" (config override).  Logic
+    branches on it; ``reason`` is display text only.
+    """
+
+    mode: str
+    backend: str
+    kernel: str                    # registry entry name or JNP_REFERENCE
+    blocks: Optional[Blocks]
+    reason: str
+    blocks_source: str = "none"    # none | fitted | tuned | pinned
+
+    @property
+    def uses_kernel(self) -> bool:
+        return self.kernel != JNP_REFERENCE
+
+
+def describe(d: DispatchDecision) -> str:
+    if not d.uses_kernel:
+        return f"{d.mode}: {JNP_REFERENCE} ({d.reason})"
+    bb, bke, bo = d.blocks
+    return (f"{d.mode}: {d.kernel}[{d.backend}] "
+            f"blocks=(b={bb},ke={bke},o={bo}) ({d.reason})")
+
+
+# ---------------------------------------------------------------------------
+# jnp reference formulations (the engine's always-available fallback tier)
+# ---------------------------------------------------------------------------
+
+def _jnp_dense(x2, params, cfg, g):
+    w = params["w"]
+    if cfg.mode == "masked" and cfg.is_sparse:
+        w = srste_prune(w, cfg.n, cfg.m, cfg.srste_lam)
+    return x2 @ g(w).astype(x2.dtype)
+
+
+def _jnp_compressed(x2, params, cfg, g):
+    meta = nm.unpack_meta(params["meta_packed"])
+    w = nm.decompress(g(params["values"]), meta, cfg.n, cfg.m)
+    return x2 @ w.astype(x2.dtype)
+
+
+def _jnp_gather(x2, params, cfg, g):
+    idx = params["gather_idx"]
+    kc = idx.shape[0]
+    blk = (jnp.arange(kc, dtype=jnp.int32) // cfg.n) * cfg.m
+    x_g = jnp.take(x2, blk + idx, axis=-1)
+    return x_g @ g(params["values"]).astype(x2.dtype)
+
+
+_JNP_IMPL: Dict[str, Callable] = {
+    "dense": _jnp_dense,
+    "masked": _jnp_dense,
+    "compressed": _jnp_compressed,
+    "gather": _jnp_gather,
+}
+
+
+# ---------------------------------------------------------------------------
+# Kernel adapters + registry entries
+# ---------------------------------------------------------------------------
+
+_BB_CAPS = (256, 128, 64, 32)
+_BO_CAPS = (256, 128, 64)
+_BKE_CAPS = (1024, 512, 256, 128)
+
+
+def _enumerate(b, ke, o, ke_multiple):
+    out = []
+    for cb in _BB_CAPS:
+        for co in _BO_CAPS:
+            for ck in _BKE_CAPS:
+                bb = largest_fitting_block(b, cb)
+                bo = largest_fitting_block(o, co)
+                bke = largest_fitting_block(ke, ck, ke_multiple)
+                if bb and bo and bke and (bb, bke, bo) not in out:
+                    out.append((bb, bke, bo))
+    return out
+
+
+def _fit_tile_gemm(b, ke, o, n, m, dtype):
+    bb = largest_fitting_block(b, 128)
+    bo = largest_fitting_block(o, 128)
+    bke = largest_fitting_block(ke, 512)
+    if bb is None or bo is None or bke is None:
+        return None
+    return (bb, bke, bo)
+
+
+def _run_tile_gemm(x2, params, cfg, g, blocks, interpret, out_dtype):
+    from repro.kernels.tile_gemm.kernel import tile_gemm
+
+    bb, bke, bo = blocks
+    w = g(params["w"]).astype(x2.dtype)
+    return tile_gemm(x2, w, block_b=bb, block_k=bke, block_o=bo,
+                     out_dtype=out_dtype, interpret=interpret)
+
+
+def _nm_ke_multiple(n: int) -> int:
+    # nm_spmm packs meta 4 rows/byte: block_kc = block_ke*n/4 must be a
+    # positive multiple of 4 -> block_ke*n % 16 == 0.
+    return 16 // math.gcd(n, 16)
+
+
+def _fit_nm_spmm(b, ke, o, n, m, dtype):
+    if m != 4:
+        return None  # kernel fixes M=4 (paper's detailed design)
+    bb = largest_fitting_block(b, 128)
+    bo = largest_fitting_block(o, 128)
+    bke = largest_fitting_block(ke, 512, _nm_ke_multiple(n))
+    if bb is None or bo is None or bke is None:
+        return None
+    return (bb, bke, bo)
+
+
+def _run_nm_spmm(x2, params, cfg, g, blocks, interpret, out_dtype):
+    from repro.kernels.nm_spmm.kernel import nm_spmm
+
+    bb, bke, bo = blocks
+    v = g(params["values"]).astype(x2.dtype)
+    return nm_spmm(x2, v, params["meta_packed"], cfg.n,
+                   block_b=bb, block_o=bo, block_ke=bke,
+                   out_dtype=out_dtype, interpret=interpret)
+
+
+def _fit_nm_gather(b, ke, o, n, m, dtype):
+    if m != 4:
+        return None
+    bb = largest_fitting_block(b, 128)
+    bo = largest_fitting_block(o, 128)
+    # kernel reshapes the activation tile into 4-row blocks: block_ke % 4 == 0
+    bke = largest_fitting_block(ke, 512, 4)
+    if bb is None or bo is None or bke is None:
+        return None
+    return (bb, bke, bo)
+
+
+def _run_nm_gather(x2, params, cfg, g, blocks, interpret, out_dtype):
+    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather
+
+    bb, bke, bo = blocks
+    v = g(params["values"]).astype(x2.dtype)
+    idx = params["gather_idx"].reshape(-1, 1)
+    y_t = nm_spmm_gather(x2.T, v, idx, cfg.n,
+                         block_b=bb, block_o=bo, block_ke=bke,
+                         out_dtype=out_dtype, interpret=interpret)
+    return y_t.T
+
+
+registry.register(KernelEntry(
+    name="tile_gemm", mode="dense",
+    fit_blocks=_fit_tile_gemm, run=_run_tile_gemm,
+    candidates=lambda b, ke, o, n, m, dtype: _enumerate(b, ke, o, 1),
+))
+registry.register(KernelEntry(
+    name="nm_spmm", mode="compressed",
+    fit_blocks=_fit_nm_spmm, run=_run_nm_spmm,
+    candidates=lambda b, ke, o, n, m, dtype: _enumerate(
+        b, ke, o, _nm_ke_multiple(n)),
+))
+registry.register(KernelEntry(
+    name="nm_spmm_gather", mode="gather",
+    fit_blocks=_fit_nm_gather, run=_run_nm_gather,
+    candidates=lambda b, ke, o, n, m, dtype: _enumerate(b, ke, o, 4),
+))
+
+
+# ---------------------------------------------------------------------------
+# Planning + execution
+# ---------------------------------------------------------------------------
+
+def _mode_of(params: Dict[str, Any], cfg) -> str:
+    if "w" in params:
+        return "masked" if (cfg.mode == "masked" and cfg.is_sparse) else "dense"
+    if "meta_packed" in params:
+        return "compressed"
+    if "gather_idx" in params:
+        return "gather"
+    raise ValueError(f"unrecognized linear params: {list(params)}")
+
+
+def _problem_dims(mode: str, params: Dict[str, Any], x) -> Tuple[int, int]:
+    """(ke, o): the contraction length the kernel sees and out features."""
+    if mode in ("dense", "masked"):
+        return params["w"].shape
+    # compressed and gather both contract over x's trailing K_eff
+    return x.shape[-1], params["values"].shape[1]
+
+
+def input_features(params: Dict[str, Any], cfg) -> int:
+    """Expected trailing dim of ``x`` for these params (K_eff)."""
+    mode = _mode_of(params, cfg)
+    if mode in ("dense", "masked"):
+        return params["w"].shape[0]
+    return params["values"].shape[0] * cfg.m // cfg.n
+
+
+def _under_autodiff(*trees) -> bool:
+    return any(isinstance(leaf, ad.JVPTracer)
+               for leaf in jax.tree_util.tree_leaves(trees))
+
+
+def _mesh_active() -> bool:
+    try:
+        from repro.models.pjit_utils import axis_env
+        return axis_env() is not None
+    except Exception:
+        return False
+
+
+def plan(
+    mode: str, *, b: int, ke: int, o: int, n: int, m: int, dtype,
+    dispatch: Optional[DispatchConfig] = None,
+    differentiating: bool = False,
+    sharded: bool = False,
+) -> DispatchDecision:
+    """Pure decision function: what would the engine run for this problem?"""
+    dcfg = dispatch or _DEFAULT
+    backend = registry.resolve_backend(dcfg.backend)
+
+    def _jnp(reason):
+        return DispatchDecision(mode, "jnp", JNP_REFERENCE, None, reason)
+
+    if mode == "masked":
+        return _jnp("SR-STE training path needs its custom VJP")
+    if backend == "jnp":
+        return _jnp("backend=jnp")
+    if differentiating:
+        return _jnp("under autodiff: kernels carry no VJP rules")
+    if sharded:
+        return _jnp("mesh/sharding env active: XLA owns the layout")
+    if b == 0:
+        return _jnp("empty batch")
+    sel = registry.select(mode, b=b, ke=ke, o=o, n=n, m=m, dtype=dtype,
+                          backend=backend)
+    if sel is None:
+        return _jnp(f"no registered kernel fits (b={b},ke={ke},o={o},"
+                    f"{n}:{m},{jnp.dtype(dtype).name})")
+    entry, blocks = sel
+    if dcfg.blocks is not None:
+        return DispatchDecision(mode, backend, entry.name,
+                                tuple(dcfg.blocks), "blocks pinned by config",
+                                blocks_source="pinned")
+    key = autotune.cache_key(entry.name, b, ke, o, n, m, dtype)
+    tuned = autotune.lookup(backend, key)
+    if tuned is not None:
+        return DispatchDecision(mode, backend, entry.name, tuned,
+                                "autotuned blocks (cache)",
+                                blocks_source="tuned")
+    return DispatchDecision(mode, backend, entry.name, blocks,
+                            "fitted default blocks", blocks_source="fitted")
+
+
+def plan_for(
+    params: Dict[str, Any], x_shape: Sequence[int], cfg, dtype=jnp.float32,
+    dispatch: Optional[DispatchConfig] = None,
+) -> DispatchDecision:
+    """Planning convenience for launchers/benchmarks: no execution."""
+    mode = _mode_of(params, cfg)
+    b = math.prod(x_shape[:-1]) if len(x_shape) > 1 else 1
+    fake_x = jax.ShapeDtypeStruct(tuple(x_shape), dtype)
+    ke, o = _problem_dims(mode, params, fake_x)
+    return plan(mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m, dtype=dtype,
+                dispatch=dispatch, sharded=_mesh_active())
+
+
+def iter_linear_leaves(tree):
+    """Yield every SparseLinear param dict in a (possibly layer-stacked)
+    params tree, with leading stack dims stripped (first layer's slice).
+
+    This is the ONE place that knows how to recognize a linear layout
+    inside a model pytree — pretune and the serving dispatch report both
+    build on it so the detection can't drift between them.
+    """
+    if isinstance(tree, dict):
+        if ("meta_packed" in tree or "gather_idx" in tree
+                or set(tree) == {"w"}):
+            leaf = {}
+            for k, v in tree.items():
+                nd = 1 if k == "gather_idx" else 2
+                leaf[k] = (v.reshape((-1,) + tuple(v.shape[-nd:]))[0]
+                           if v.ndim > nd else v)
+            yield leaf
+            return
+        for v in tree.values():
+            yield from iter_linear_leaves(v)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from iter_linear_leaves(v)
+
+
+def pretune(params_tree, batch: int, cfg,
+            dispatch: Optional[DispatchConfig] = None) -> int:
+    """Eagerly autotune every linear in a (possibly layer-stacked) params
+    tree.
+
+    Serving loops are jitted, so ``sparse_matmul`` only ever sees tracers
+    there and the concrete-only tuning path never fires; this walks the
+    tree once OUTSIDE jit, runs each distinct kernel-eligible problem on
+    a dummy batch, and fills the autotune cache before the loop traces.
+    Returns the number of problems actually tuned (already-cached,
+    jnp-routed, and unfittable problems don't count).
+    """
+    dcfg = dataclasses.replace(dispatch or _DEFAULT, autotune=True)
+    seen = set()
+    count = 0
+    for leaf in iter_linear_leaves(params_tree):
+        try:
+            ke = input_features(leaf, cfg)
+        except ValueError:
+            continue
+        sig = tuple(sorted((k, tuple(v.shape)) for k, v in leaf.items()))
+        if sig in seen:
+            continue
+        seen.add(sig)
+        dt = leaf.get("values", leaf.get("w")).dtype
+        x = jnp.zeros((batch, ke), dt)
+        mode = _mode_of(leaf, cfg)
+        _, o = _problem_dims(mode, leaf, x)
+        decision = plan(mode, b=batch, ke=ke, o=o, n=cfg.n, m=cfg.m,
+                        dtype=dt, dispatch=dcfg, sharded=_mesh_active())
+        if not decision.uses_kernel or decision.blocks_source != "fitted":
+            continue  # jnp-routed or already cached: nothing to tune
+        sparse_matmul(x, leaf, cfg, dispatch=dcfg)
+        count += 1
+    return count
+
+
+def _entry_by_name(mode: str, name: str) -> KernelEntry:
+    for e in registry.entries(mode):
+        if e.name == name:
+            return e
+    raise KeyError(f"kernel {name!r} not registered for mode {mode!r}")
+
+
+def sparse_matmul(
+    x: jax.Array,
+    params: Dict[str, Any],
+    cfg,
+    *,
+    constrain_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+    dispatch: Optional[DispatchConfig] = None,
+) -> jax.Array:
+    """y = x @ W for any SparseLinear layout, via the dispatch engine.
+
+    ``x``: (..., K_eff) activations; ``params``: one of the SparseLinear
+    layouts (``w`` | ``values``+``meta_packed`` | ``values``+``gather_idx``);
+    ``cfg``: a SparsityConfig-like object (``.mode .n .m .is_sparse
+    .srste_lam``).  ``constrain_fn`` is applied to the weight operand in
+    both kernel and reference paths (sharding-constraint preservation).
+    """
+    dcfg = dispatch or _DEFAULT
+    g = constrain_fn or (lambda w: w)
+    mode = _mode_of(params, cfg)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    b = x2.shape[0]
+    ke, o = _problem_dims(mode, params, x2)
+
+    decision = plan(
+        mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m, dtype=x2.dtype,
+        dispatch=dcfg,
+        differentiating=_under_autodiff(x2, params),
+        sharded=_mesh_active(),
+    )
+
+    if not decision.uses_kernel:
+        y2 = _JNP_IMPL[mode](x2, params, cfg, g)
+        return y2.reshape(*lead, o)
+
+    entry = _entry_by_name(mode, decision.kernel)
+    interpret = decision.backend == "interpret"
+    blocks = decision.blocks
+
+    # Autotune on first concrete sighting of a problem (never mid-trace).
+    if (dcfg.autotune and decision.blocks_source == "fitted"
+            and not isinstance(x2, jax.core.Tracer)):
+        key = autotune.cache_key(entry.name, b, ke, o, cfg.n, cfg.m, x2.dtype)
+        cands = entry.candidates(b, ke, o, cfg.n, cfg.m, x2.dtype)
+        tuned = autotune.tune(
+            lambda blk: entry.run(x2, params, cfg, g, blk, interpret, x2.dtype),
+            cands, backend=decision.backend, key=key,
+            persist=dcfg.persist_autotune,
+        )
+        if tuned is not None:
+            blocks = tuned
+
+    y2 = entry.run(x2, params, cfg, g, blocks, interpret, x2.dtype)
+    return y2.reshape(*lead, o)

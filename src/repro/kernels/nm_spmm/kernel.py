@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _expand_rows4(a: jax.Array) -> jax.Array:
     """(R, C) -> (4R, C), each row repeated 4x (lane dim preserved)."""
@@ -116,7 +118,7 @@ def nm_spmm(
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

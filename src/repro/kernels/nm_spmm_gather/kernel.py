@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _gather_kernel(xt_ref, v_ref, idx_ref, o_ref, acc_ref, *, n: int, nk: int):
     @pl.when(pl.program_id(2) == 0)
@@ -89,7 +91,7 @@ def nm_spmm_gather(
         out_specs=pl.BlockSpec((block_o, block_b), lambda i, j, kk: (j, i)),
         out_shape=jax.ShapeDtypeStruct((o, b), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_o, block_b), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,131 @@
+"""Kernel registry: the dispatch table behind the unified sparse-GEMM engine.
+
+The paper's point is that ONE engine behind the GEMM ISA serves dense
+(4:4), 2:4, 1:4 and row-wise/unstructured layers.  This module is that
+table on the software side: every Pallas kernel registers a
+:class:`KernelEntry` describing which execution mode it implements, which
+backends it can run on, and — via ``fit_blocks`` — which (shape, N:M,
+dtype) problems it can legally tile.  ``select`` walks the entries in
+priority order and returns the first (entry, blocks) that fits; a ``None``
+result means "no kernel applies, use the jnp reference formulation".
+
+Backends
+--------
+``tpu``        compiled Mosaic execution (real TPU devices present)
+``interpret``  the same kernel bodies emulated on CPU (tests / parity)
+``jnp``        no kernel at all — the documented pure-jnp reference path
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+__all__ = [
+    "KernelEntry",
+    "register",
+    "entries",
+    "select",
+    "detect_backend",
+    "resolve_backend",
+    "largest_fitting_block",
+    "KERNEL_BACKENDS",
+]
+
+Blocks = Tuple[int, int, int]  # (block_b, block_ke, block_o)
+
+KERNEL_BACKENDS = ("tpu", "interpret")
+_ENV_BACKEND = "REPRO_KERNEL_BACKEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """One kernel the engine can dispatch to.
+
+    ``fit_blocks(b, ke, o, n, m, dtype) -> Blocks | None`` returns legal
+    default block sizes for the problem, or ``None`` when the kernel's
+    shape constraints cannot be met (the registry then falls through).
+    ``candidates`` enumerates legal block choices for the autotuner.
+    ``run(x2d, params, n, m, blocks, interpret, out_dtype)`` executes it.
+    """
+
+    name: str
+    mode: str                      # dense | compressed | gather
+    fit_blocks: Callable[..., Optional[Blocks]]
+    run: Callable[..., jax.Array]
+    candidates: Callable[..., Sequence[Blocks]]
+    backends: Tuple[str, ...] = KERNEL_BACKENDS
+    priority: int = 0
+
+
+_REGISTRY: Dict[str, List[KernelEntry]] = {}
+
+
+def register(entry: KernelEntry) -> KernelEntry:
+    """Add a kernel to the dispatch table (idempotent per name)."""
+    lst = _REGISTRY.setdefault(entry.mode, [])
+    lst[:] = [e for e in lst if e.name != entry.name]
+    lst.append(entry)
+    lst.sort(key=lambda e: -e.priority)
+    return entry
+
+
+def entries(mode: Optional[str] = None) -> List[KernelEntry]:
+    if mode is None:
+        return [e for lst in _REGISTRY.values() for e in lst]
+    return list(_REGISTRY.get(mode, []))
+
+
+def select(
+    mode: str, *, b: int, ke: int, o: int, n: int, m: int, dtype,
+    backend: str,
+) -> Optional[Tuple[KernelEntry, Blocks]]:
+    """Highest-priority kernel whose constraints fit, with its blocks.
+
+    Returns ``None`` when no registered kernel supports the problem on the
+    given backend — the caller must fall back to the jnp reference.
+    """
+    if backend not in KERNEL_BACKENDS:
+        return None
+    for entry in _REGISTRY.get(mode, []):
+        if backend not in entry.backends:
+            continue
+        blocks = entry.fit_blocks(b, ke, o, n, m, dtype)
+        if blocks is not None:
+            return entry, blocks
+    return None
+
+
+def detect_backend() -> str:
+    """Probe the runtime: Mosaic on TPU, jnp reference elsewhere.
+
+    Interpret-mode Pallas is emulation, not a perf path, so it is never
+    auto-selected — tests and parity checks opt in explicitly (via the
+    ``REPRO_KERNEL_BACKEND`` env var or a DispatchConfig override).
+    """
+    env = os.environ.get(_ENV_BACKEND, "").strip().lower()
+    if env in ("tpu", "interpret", "jnp"):
+        return env
+    try:
+        platform = jax.default_backend()
+    except Exception:  # no devices at all — reference path still works
+        platform = "cpu"
+    return "tpu" if platform == "tpu" else "jnp"
+
+
+def resolve_backend(requested: str = "auto") -> str:
+    """Map a user/config backend string to a concrete backend."""
+    if requested in ("tpu", "interpret", "jnp"):
+        return requested
+    return detect_backend()
+
+
+def largest_fitting_block(dim: int, cap: int, multiple_of: int = 1) -> Optional[int]:
+    """Largest divisor of ``dim`` that is <= cap and % multiple_of == 0."""
+    for c in range(min(cap, dim), 0, -1):
+        if dim % c == 0 and c % multiple_of == 0:
+            return c
+    return None

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
     @pl.when(pl.program_id(2) == 0)
@@ -56,7 +58,7 @@ def tile_gemm(
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

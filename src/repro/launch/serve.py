@@ -1,17 +1,40 @@
 """Production serving launcher: continuous-batching decode loop.
 
     python -m repro.launch.serve --arch internlm2_1_8b --smoke \
-        [--sparsity 2:4 --mode compressed] [--requests 16]
+        [--sparsity 2:4 --mode compressed] [--requests 16] \
+        [--kernel-backend auto|tpu|interpret|jnp] [--autotune]
 
 Weights can live in any SparseLinear serving layout (dense | compressed |
-gather); the compressed layouts are exactly what `kernels/nm_spmm*`
-consume on TPU (Tier-1/Tier-2, DESIGN.md §2).
+gather).  Every projection lowers through the kernel dispatch engine
+(``repro.kernels.dispatch``): on TPU the registry resolves the layouts to
+the ``nm_spmm*`` / ``tile_gemm`` Pallas kernels; elsewhere (or with
+``--kernel-backend jnp``) the documented jnp reference paths run.  The
+launcher prints the engine's per-shape dispatch decisions at startup.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def _dispatch_report(params, batch, sp_cfg, dcfg):
+    """Distinct (shape -> engine decision) lines for the model's linears."""
+    from repro.kernels import dispatch as kdispatch
+
+    seen = {}
+    for leaf in kdispatch.iter_linear_leaves(params):
+        try:
+            ke = kdispatch.input_features(leaf, sp_cfg)
+        except ValueError:
+            continue
+        dt = leaf.get("values", leaf.get("w")).dtype
+        d = kdispatch.plan_for(leaf, (batch, 1, ke), sp_cfg,
+                               dtype=dt, dispatch=dcfg)
+        o = leaf["w"].shape[1] if "w" in leaf else leaf["values"].shape[1]
+        seen.setdefault((d.mode, ke, o), d)
+    return [f"  (B={batch}, K={ke}, O={o}) {kdispatch.describe(d)}"
+            for (_, ke, o), d in sorted(seen.items())]
 
 
 def main():
@@ -25,13 +48,22 @@ def main():
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "tpu", "interpret", "jnp"],
+                    help="dispatch-engine backend override")
+    ap.add_argument("--autotune", action="store_true",
+                    help="autotune kernel block sizes (persisted under "
+                         "experiments/autotune/)")
     args = ap.parse_args()
+
+    import contextlib
 
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_config, get_smoke_config
     from repro.core.sparse_linear import SparsityConfig
+    from repro.kernels import dispatch as kdispatch
     from repro.models import decode_step, init_caches, init_params
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -42,6 +74,29 @@ def main():
     nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
     print(f"serving {cfg.name}: {nbytes/1e6:.1f} MB weights "
           f"({args.sparsity or 'dense'}/{args.mode})")
+
+    dcfg = kdispatch.DispatchConfig(backend=args.kernel_backend,
+                                    autotune=args.autotune)
+    if args.autotune:
+        from repro.kernels import autotune as kautotune
+        from repro.kernels.registry import resolve_backend
+
+        # the decode loop is jitted (tracers only): tune eagerly up front
+        tuned = kdispatch.pretune(params, args.batch, cfg.sparsity, dcfg)
+        if tuned:
+            store = kautotune.store_path(resolve_backend(args.kernel_backend))
+            print(f"autotuned {tuned} linear problem(s) -> {store}")
+        else:
+            print("autotune: nothing to tune "
+                  "(jnp-routed, unfittable, or cache already warm)")
+    print("dispatch engine plan:")
+    for line in _dispatch_report(params, args.batch, cfg.sparsity, dcfg):
+        print(line)
+    # engine override stays active for the whole decode loop (main() owns
+    # the process lifetime, so the stack closes at exit)
+    engine_ctx = contextlib.ExitStack()
+    engine_ctx.enter_context(kdispatch.use_dispatch(
+        backend=args.kernel_backend, autotune=args.autotune))
 
     caches = init_caches(cfg, args.batch, args.max_len)
     step = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))

@@ -11,6 +11,16 @@ from repro.models.lm import init_train_state
 
 BATCH, SEQ = 2, 32
 
+# the heaviest smoke configs (hybrid/MoE + SSM compile cost) run in the
+# slow CI lane; each family keeps a lighter representative in the fast lane
+_HEAVY_FWD = {"jamba_1_5_large_398b"}
+_HEAVY_TRAIN = {"jamba_1_5_large_398b", "gemma3_1b", "mamba2_2_7b"}
+
+
+def _mark_heavy(archs, heavy):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in heavy else a
+            for a in archs]
+
 
 def _batch_for(cfg, key):
     if cfg.frontend == "audio_frames":
@@ -33,7 +43,7 @@ def _batch_for(cfg, key):
     }
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _mark_heavy(ARCH_IDS, _HEAVY_FWD))
 def test_smoke_forward(arch):
     cfg = get_smoke_config(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -51,7 +61,7 @@ def test_smoke_forward(arch):
     assert not jnp.isnan(logits.astype(jnp.float32)).any()
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _mark_heavy(ARCH_IDS, _HEAVY_TRAIN))
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch)
     params, opt = init_train_state(jax.random.PRNGKey(0), cfg)

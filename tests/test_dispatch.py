@@ -1,0 +1,225 @@
+"""Dispatch-engine tests: kernel-vs-jnp parity through the public API,
+registry fallback selection, autodiff/sharding guards, and the autotune
+cache round-trip (memory -> JSON -> memory)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SparsityConfig, apply_linear, convert_to_serving, init_linear
+from repro.kernels import autotune, dispatch, registry
+
+
+def _allclose(got, want, atol=1e-5):
+    got, want = np.asarray(got, np.float32), np.asarray(want, np.float32)
+    scale = np.abs(want).max() + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# kernel-vs-jnp parity through apply_linear (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_compressed_parity_kernel_vs_jnp(n):
+    cfg = SparsityConfig(n=n, m=4, mode="compressed")
+    p = init_linear(jax.random.PRNGKey(0), 128, 64, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 128))
+    with dispatch.use_dispatch(backend="jnp"):
+        y_ref = apply_linear(p, x, cfg)
+    with dispatch.use_dispatch(backend="interpret"):
+        y_k = apply_linear(p, x, cfg)
+    _allclose(y_k, y_ref)
+
+
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_gather_parity_kernel_vs_jnp(n):
+    cfg = SparsityConfig(n=n, m=4, mode="gather")
+    p = init_linear(jax.random.PRNGKey(0), 128, 64, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 128))
+    with dispatch.use_dispatch(backend="jnp"):
+        y_ref = apply_linear(p, x, cfg)
+    with dispatch.use_dispatch(backend="interpret"):
+        y_k = apply_linear(p, x, cfg)
+    _allclose(y_k, y_ref)
+
+
+def test_dense_parity_kernel_vs_jnp():
+    cfg = SparsityConfig(mode="dense")
+    p = init_linear(jax.random.PRNGKey(0), 128, 64, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 128))
+    with dispatch.use_dispatch(backend="interpret"):
+        y_k = apply_linear(p, x, cfg)
+    _allclose(y_k, x @ p["w"])
+
+
+def test_converted_serving_parity_3d_batch():
+    """masked-trained -> compressed serving layout, 3-D activations, jit."""
+    cfg_m = SparsityConfig(n=2, m=4, mode="masked")
+    p = init_linear(jax.random.PRNGKey(0), 64, 32, cfg_m, dtype=jnp.float32)
+    cfg_c = SparsityConfig(n=2, m=4, mode="compressed")
+    pc = convert_to_serving(p, cfg_c, "compressed")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 64))
+    with dispatch.use_dispatch(backend="jnp"):
+        y_ref = apply_linear(pc, x, cfg_c)
+    with dispatch.use_dispatch(backend="interpret"):
+        y_k = jax.jit(lambda p, x: apply_linear(p, x, cfg_c))(pc, x)
+    assert y_k.shape == (2, 3, 32)
+    _allclose(y_k, y_ref)
+
+
+def test_compressed_routes_through_pallas_kernel(monkeypatch):
+    """The engine must actually invoke nm_spmm, not just plan to."""
+    import repro.kernels.nm_spmm.kernel as nm_kernel
+
+    calls = []
+    real = nm_kernel.nm_spmm
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("interpret"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(nm_kernel, "nm_spmm", spy)
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p = init_linear(jax.random.PRNGKey(0), 64, 32, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    with dispatch.use_dispatch(backend="interpret"):
+        apply_linear(p, x, cfg)
+    assert calls == [True]
+    calls.clear()
+    with dispatch.use_dispatch(backend="jnp"):
+        apply_linear(p, x, cfg)
+    assert calls == []
+
+
+# ---------------------------------------------------------------------------
+# registry selection + fallback tiers
+# ---------------------------------------------------------------------------
+
+def test_registry_selects_expected_kernels():
+    for mode, name in [("dense", "tile_gemm"), ("compressed", "nm_spmm"),
+                       ("gather", "nm_spmm_gather")]:
+        sel = registry.select(mode, b=16, ke=128, o=64, n=2, m=4,
+                              dtype=jnp.float32, backend="interpret")
+        assert sel is not None and sel[0].name == name
+
+
+def test_registry_fallback_on_unfittable_shape():
+    # ke=100 has no divisor that is a multiple of 16 (required for 1:4
+    # meta packing) -> no kernel fits -> engine plans the jnp reference
+    assert registry.select("compressed", b=4, ke=100, o=32, n=1, m=4,
+                           dtype=jnp.float32, backend="interpret") is None
+    d = dispatch.plan("compressed", b=4, ke=100, o=32, n=1, m=4,
+                      dtype=jnp.float32,
+                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    assert not d.uses_kernel and "no registered kernel" in d.reason
+
+
+def test_masked_and_jnp_backend_always_reference():
+    d = dispatch.plan("masked", b=16, ke=128, o=64, n=2, m=4,
+                      dtype=jnp.float32,
+                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    assert not d.uses_kernel
+    d = dispatch.plan("compressed", b=16, ke=128, o=64, n=2, m=4,
+                      dtype=jnp.float32,
+                      dispatch=dispatch.DispatchConfig(backend="jnp"))
+    assert not d.uses_kernel
+
+
+def test_autodiff_falls_back_to_jnp():
+    """grad w.r.t. compressed values works even with kernels forced on."""
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p = init_linear(jax.random.PRNGKey(0), 64, 32, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+
+    def loss(v):
+        params = {"values": v, "meta_packed": p["meta_packed"]}
+        return jnp.sum(apply_linear(params, x, cfg) ** 2)
+
+    with dispatch.use_dispatch(backend="interpret"):
+        g = jax.grad(loss)(p["values"])
+    assert g.shape == p["values"].shape
+    assert bool(jnp.any(g != 0))
+
+
+def test_env_var_backend_override(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    assert registry.detect_backend() == "interpret"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "jnp")
+    assert registry.detect_backend() == "jnp"
+
+
+def test_block_fitting_helper():
+    assert registry.largest_fitting_block(512, 128) == 128
+    assert registry.largest_fitting_block(192, 128) == 96
+    assert registry.largest_fitting_block(100, 512, 16) is None
+    assert registry.largest_fitting_block(64, 512, 16) == 64
+
+
+# ---------------------------------------------------------------------------
+# autotune cache round-trip
+# ---------------------------------------------------------------------------
+
+def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    key = autotune.cache_key("nm_spmm", 16, 128, 64, 2, 4, jnp.float32)
+    calls = []
+
+    def runner(blocks):
+        calls.append(blocks)
+        return jnp.zeros(())
+
+    cands = [(16, 128, 64), (8, 64, 64)]
+    best = autotune.tune(runner, cands, backend="interpret", key=key)
+    assert best in [tuple(c) for c in cands]
+    assert len(calls) >= len(cands)          # every candidate timed
+
+    # second tune: served from the in-process cache, runner untouched
+    calls.clear()
+    assert autotune.tune(runner, cands, backend="interpret", key=key) == best
+    assert calls == []
+
+    # drop the memory layer: must reload from the JSON store
+    autotune.clear_memory_cache()
+    assert autotune.lookup("interpret", key) == best
+    assert (tmp_path / "interpret.json").exists()
+    autotune.clear_memory_cache()
+
+
+def test_pretune_walks_stacked_params(tmp_path, monkeypatch):
+    """pretune must tune layer-stacked (scan-style) linears eagerly."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p = init_linear(jax.random.PRNGKey(0), 64, 32, cfg, dtype=jnp.float32)
+    stacked = {"layers": [{"proj": jax.tree.map(
+        lambda a: jnp.stack([a, a]), p)}]}   # (2, ...) leading layer dim
+    with dispatch.use_dispatch(backend="interpret"):
+        n_tuned = dispatch.pretune(stacked, 4, cfg)
+    assert n_tuned == 1
+    key = autotune.cache_key("nm_spmm", 4, 64, 32, 2, 4, jnp.float32)
+    assert autotune.lookup("interpret", key) is not None
+    autotune.clear_memory_cache()
+
+
+def test_autotuned_blocks_feed_dispatch(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p = init_linear(jax.random.PRNGKey(0), 64, 32, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    with dispatch.use_dispatch(backend="interpret"):
+        y_ref = apply_linear(p, x, cfg)
+    with dispatch.use_dispatch(backend="interpret", autotune=True):
+        y_tuned = apply_linear(p, x, cfg)
+    _allclose(y_tuned, y_ref)
+    key = autotune.cache_key("nm_spmm", 8, 64, 32, 2, 4, jnp.float32)
+    tuned = autotune.lookup("interpret", key)
+    assert tuned is not None
+    d = dispatch.plan("compressed", b=8, ke=64, o=32, n=2, m=4,
+                      dtype=jnp.float32,
+                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    assert d.blocks == tuned and "autotuned" in d.reason
+    autotune.clear_memory_cache()

@@ -23,6 +23,7 @@ def _run(code: str, devices: int = 8) -> str:
     return r.stdout
 
 
+@pytest.mark.slow
 def test_small_mesh_train_step_shards_and_matches_single_device():
     """pjit'd train step on a 2x4 mesh == single-device step (same math)."""
     out = _run(textwrap.dedent("""
@@ -64,6 +65,7 @@ def test_small_mesh_train_step_shards_and_matches_single_device():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_small_mesh_moe_shardmap():
     """Expert-parallel MoE under shard_map == local-loop MoE semantics."""
     out = _run(textwrap.dedent("""
@@ -91,6 +93,7 @@ def test_small_mesh_moe_shardmap():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_hlo_cost_flops_vs_analytic():
     """While-aware HLO cost ~ 6*N*D for a dense train step (<= 60% over)."""
     out = _run(textwrap.dedent("""

@@ -24,7 +24,16 @@ def _allclose(got, want, rtol=2e-6):
     np.testing.assert_allclose(got / scale, want / scale, atol=rtol)
 
 
-@pytest.mark.parametrize("b,k,o", [(128, 512, 128), (256, 1024, 256), (128, 2048, 384)])
+# fast lane keeps one representative shape per kernel; the larger
+# interpret-mode sweeps are emulation-bound and run in the slow lane
+_BIG = pytest.mark.slow
+
+
+@pytest.mark.parametrize("b,k,o", [
+    (128, 512, 128),
+    pytest.param(256, 1024, 256, marks=_BIG),
+    pytest.param(128, 2048, 384, marks=_BIG),
+])
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
 def test_tile_gemm_sweep(b, k, o, dtype):
     x = jax.random.normal(jax.random.PRNGKey(0), (b, k), jnp.float32).astype(dtype)
@@ -34,7 +43,11 @@ def test_tile_gemm_sweep(b, k, o, dtype):
 
 
 @pytest.mark.parametrize("n", [1, 2, 4])
-@pytest.mark.parametrize("b,ke,o", [(128, 512, 128), (256, 1024, 256), (128, 2048, 128)])
+@pytest.mark.parametrize("b,ke,o", [
+    (128, 512, 128),
+    pytest.param(256, 1024, 256, marks=_BIG),
+    pytest.param(128, 2048, 128, marks=_BIG),
+])
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
 def test_nm_spmm_sweep(n, b, ke, o, dtype):
     x = jax.random.normal(jax.random.PRNGKey(0), (b, ke), jnp.float32).astype(dtype)
@@ -48,6 +61,7 @@ def test_nm_spmm_sweep(n, b, ke, o, dtype):
     _allclose(got, jnp.dot(x, pruned, preferred_element_type=jnp.float32))
 
 
+@pytest.mark.slow
 def test_nm_spmm_block_shapes():
     """Block-shape sweep: result must be invariant to tiling choices."""
     n = 2
@@ -64,7 +78,10 @@ def test_nm_spmm_block_shapes():
 
 
 @pytest.mark.parametrize("n", [1, 2])
-@pytest.mark.parametrize("b,ke,o", [(128, 512, 128), (256, 1024, 256)])
+@pytest.mark.parametrize("b,ke,o", [
+    (128, 512, 128),
+    pytest.param(256, 1024, 256, marks=_BIG),
+])
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
 def test_nm_spmm_gather_sweep(n, b, ke, o, dtype):
     kc = ke * n // 4
@@ -80,7 +97,10 @@ def test_nm_spmm_gather_sweep(n, b, ke, o, dtype):
     _allclose(got, nm_spmm_gather_ref(x, vals, idx, n), rtol=1e-5)
 
 
-@pytest.mark.parametrize("t,d", [(256, 64), (512, 128)])
+@pytest.mark.parametrize("t,d", [
+    (256, 64),
+    pytest.param(512, 128, marks=_BIG),
+])
 @pytest.mark.parametrize("causal", [True, False])
 def test_flash_attention_sweep(t, d, causal):
     b, hq, hkv = 2, 4, 2

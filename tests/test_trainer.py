@@ -32,6 +32,7 @@ def test_train_loss_decreases(tmp_path):
     assert last < first - 0.1, (first, last)
 
 
+@pytest.mark.slow
 def test_train_restart_resumes(tmp_path):
     cfg = _cfg()
     tc1 = TrainerConfig(run_dir=str(tmp_path), total_steps=11, peak_lr=1e-3,
