@@ -12,8 +12,9 @@ TPU decode/serving speedup (DESIGN.md Tier 1).
 
 from __future__ import annotations
 
+import argparse
 import time
-from typing import List
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +87,69 @@ def run(workloads=("BERT-L1", "GPT-L1")) -> List[dict]:
     return rows
 
 
-def main():
+def run_mesh(mesh_shape, workloads=("BERT-L1", "GPT-L1")) -> List[dict]:
+    """Sharded engine sweep: per-workload timings of the jnp reference vs
+    the shard_map kernel path under a (data, model) mesh, for both TP
+    orientations (col: O@model, no collective; row: K@model, psum).
+
+    Needs ``len(devices) >= data*model`` (on CPU force host devices via
+    XLA_FLAGS).  On CPU the kernel path is interpret-mode emulation —
+    the sweep validates dispatch + collectives, not wall-clock.
+    """
+    from repro.launch.mesh import make_axis_env
+    from repro.models.pjit_utils import use_axis_env
+
+    d_, m_ = mesh_shape
+    mesh = jax.make_mesh((d_, m_), ("data", "model"))
+    env = make_axis_env(mesh)
+    backend = detect_backend()
+    kb = backend if backend == "tpu" else "interpret"
+    rows = []
+    with use_axis_env(env):
+        for name in workloads:
+            mm, n, k = WORKLOADS[name]
+            mm = min(mm, 256)
+            key = jax.random.PRNGKey(0)
+            x = jax.random.normal(key, (mm, k), jnp.float32)
+            w = jax.random.normal(key, (k, n), jnp.float32)
+            cfg_s = SparsityConfig(n=2, m=4, mode="compressed")
+            pruned, _ = nm.prune_nm(w, 2, 4)
+            c = nm.compress_nm(pruned, 2, 4)
+            params = {"values": c.values, "meta_packed": nm.pack_meta(c.meta)}
+            for hint in ("col", "row"):
+                shard = kdispatch.shard_spec_from_env(hint)
+                d = kdispatch.plan_for(
+                    params, (mm, k), cfg_s, dtype=x.dtype, shard=shard,
+                    dispatch=kdispatch.DispatchConfig(backend=kb))
+                t_jnp = _time(jax.jit(
+                    lambda x, v, pm: kdispatch.sparse_matmul(
+                        x, {"values": v, "meta_packed": pm}, cfg_s,
+                        dispatch=kdispatch.DispatchConfig(backend="jnp"))),
+                    x, params["values"], params["meta_packed"])
+                t_sm = None
+                if d.uses_shard_map:
+                    t_sm = _time(jax.jit(
+                        lambda x, v, pm: kdispatch.sparse_matmul(
+                            x, {"values": v, "meta_packed": pm}, cfg_s,
+                            shard=shard,
+                            dispatch=kdispatch.DispatchConfig(backend=kb))),
+                        x, params["values"], params["meta_packed"])
+                rows.append({
+                    "name": f"{name}/2:4/{hint}@{d_}x{m_}",
+                    "us_jnp_mesh": t_jnp, "us_shard_map": t_sm,
+                    "dispatch": kdispatch.describe(d),
+                })
+    return rows
+
+
+def main(argv: Optional[List[str]] = None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="also sweep the shard_map path under a (data, "
+                         "model) mesh, e.g. 2x4 (needs that many devices; "
+                         "on CPU force them via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    args = ap.parse_args([] if argv is None else argv)
     print(f"kernel_backend,{detect_backend()}")
     for r in run():
         print(f"kernel_{r['name']},us_dense={r['us_dense']:.0f},"
@@ -95,8 +158,23 @@ def main():
               f"weight_bytes={r['weight_bytes_dense']}->"
               f"{r['weight_bytes_compressed']},"
               f"hbm_reduction={r['hbm_reduction']:.2f}x")
+    if args.mesh:
+        d_, m_ = map(int, args.mesh.lower().split("x"))
+        if len(jax.devices()) < d_ * m_:
+            print(f"kernel_mesh,SKIP,need {d_ * m_} devices, "
+                  f"have {len(jax.devices())}")
+        else:
+            for r in run_mesh((d_, m_)):
+                t_sm = (f"{r['us_shard_map']:.0f}"
+                        if r["us_shard_map"] is not None else "n/a")
+                print(f"kernel_mesh_{r['name']},"
+                      f"us_jnp_mesh={r['us_jnp_mesh']:.0f},"
+                      f"us_shard_map={t_sm},"
+                      f"dispatch={r['dispatch']}")
     return None
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

@@ -19,10 +19,18 @@ from .nm import (
 )
 from .rowwise import (
     RowwiseCompressed,
+    rowwise_apply,
     rowwise_compress,
     rowwise_cover_stats,
     rowwise_matmul_ref,
+    rowwise_params,
     rowwise_tiers,
 )
-from .sparse_linear import SparsityConfig, apply_linear, convert_to_serving, init_linear
+from .sparse_linear import (
+    SparsityConfig,
+    apply_linear,
+    convert_to_serving,
+    gather_hint,
+    init_linear,
+)
 from .ste import srste_prune

@@ -30,6 +30,8 @@ __all__ = [
     "RowwiseCompressed",
     "rowwise_compress",
     "rowwise_matmul_ref",
+    "rowwise_params",
+    "rowwise_apply",
     "rowwise_storage_bytes",
     "effective_macs_fraction",
 ]
@@ -157,6 +159,66 @@ def rowwise_matmul_kernels(
         outs.append(y[:, :o])
     y_perm = jnp.concatenate(outs, axis=-1)
     return y_perm[..., rc.inv_perm]
+
+
+def rowwise_params(rc: RowwiseCompressed) -> Dict:
+    """Flatten a RowwiseCompressed into the SparseLinear serving layout.
+
+    Nested dict of plain compressed segments — a pytree of arrays that
+    checkpoints, shards, and jits like every other linear layout:
+
+        {"rowwise": {"n1": {"values", "meta_packed"}, "n2": {...}, ...},
+         "inv_perm": (O,) int32}
+
+    Segment dicts are exactly the compressed layout, so the dispatch
+    engine (and the serving dispatch report, via ``iter_linear_items``)
+    treats each tier as an ordinary ``nm_spmm`` problem.
+    """
+    from . import nm as _nm
+
+    segs = {}
+    for n, size, seg in zip(rc.tiers, rc.tier_sizes, rc.segments):
+        if size == 0 or seg is None:
+            continue
+        segs[f"n{n}"] = {
+            "values": seg.values,
+            "meta_packed": _nm.pack_meta(seg.meta),
+        }
+    return {"rowwise": segs, "inv_perm": rc.inv_perm}
+
+
+def rowwise_apply(
+    params: Dict, x: jax.Array, cfg, *, shard=None, dispatch=None,
+) -> jax.Array:
+    """y = x @ W for the rowwise serving layout, one engine dispatch per
+    tier (``mode="rowwise"`` in ``SparseLinear.apply_linear``).
+
+    Each tier segment is an ordinary compressed problem with its own N, so
+    the registry resolves it to ``nm_spmm`` (or the jnp reference when the
+    segment's channel count doesn't tile).  The channel permutation is
+    global across tiers, so an out-dim sharding cannot be pushed into the
+    per-tier calls — a shard spec keeps its batch/contraction slicing and
+    drops ``o`` (ke-sharded tiers still psum per segment).
+    """
+    import dataclasses as _dc
+
+    from repro.core.sparse_linear import SparsityConfig
+    from repro.kernels.dispatch import sparse_matmul
+
+    if shard is not None and shard.o is not None:
+        shard = _dc.replace(shard, o=None)
+    segs = params["rowwise"]
+    outs = []
+    # numeric tier order — must match the construction order behind
+    # inv_perm (lexicographic would put "n16" before "n2")
+    for key in sorted(segs, key=lambda k: int(k[1:])):
+        n = int(key[1:])
+        scfg = SparsityConfig(n=n, m=cfg.m, mode="compressed")
+        outs.append(sparse_matmul(x.astype(segs[key]["values"].dtype),
+                                  segs[key], scfg, shard=shard,
+                                  dispatch=dispatch))
+    y_perm = jnp.concatenate(outs, axis=-1)
+    return jnp.take(y_perm, params["inv_perm"], axis=-1)
 
 
 def rowwise_storage_bytes(rc: RowwiseCompressed) -> int:

@@ -9,6 +9,10 @@ Execution modes (cfg.mode):
   gather           y = gather_k(x) @ values        (Tier-2 serve: FLOP win;
                                                     lane-aligned metadata,
                                                     beyond-paper, DESIGN §2)
+  rowwise          y = concat_t(x @ dec_t)[perm]   (lossless row-wise N:M
+                                                    cover of unstructured
+                                                    weights, per-tier nm_spmm
+                                                    dispatch, TILE_SPMM_R)
 
 The jnp formulations here are what the full models lower for the dry-run
 (so XLA cost analysis sees the byte/FLOP reductions); the Pallas kernels in
@@ -18,14 +22,49 @@ The jnp formulations here are what the full models lower for the dry-run
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import nm
 
-__all__ = ["SparsityConfig", "init_linear", "apply_linear", "convert_to_serving"]
+__all__ = [
+    "SparsityConfig",
+    "init_linear",
+    "apply_linear",
+    "convert_to_serving",
+    "COLUMN_PARALLEL",
+    "ROW_PARALLEL",
+    "gather_hint",
+]
+
+# Canonical use-site parallelism classification by projection name.  The
+# launcher's sharding rules AND the dispatch engine's shard_map planning
+# both key off these sets, so they live here (core) where neither layer
+# can drift from the other.
+COLUMN_PARALLEL = {"wq", "wk", "wv", "w_in", "w_gate", "wz", "wx", "wdt"}
+ROW_PARALLEL = {"wo", "w_out"}
+
+
+def gather_hint(names: Sequence[str]) -> Optional[str]:
+    """Use-site parallelism hint ("col" | "row" | None) for a param path.
+
+    MoE expert stacks (paths carrying the ``experts`` marker that
+    ``iter_linear_items`` inserts for router siblings) always return
+    ``None``: their linears are invoked hint-less inside the MoE's own
+    shard_map body, so planning/tuning them as shard_map sites would
+    misstate what actually runs.
+    """
+    names = tuple(names)
+    if "experts" in names:
+        return None
+    for nm_ in reversed(names):
+        if nm_ in COLUMN_PARALLEL:
+            return "col"
+        if nm_ in ROW_PARALLEL:
+            return "row"
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,7 +73,7 @@ class SparsityConfig:
 
     n: int = 4
     m: int = 4
-    mode: str = "dense"          # dense | masked | compressed | gather
+    mode: str = "dense"          # dense | masked | compressed | gather | rowwise
     granularity: str = "layer"   # network | layer | tile | row (docs/accounting)
     srste_lam: float = 2e-4
     # distribution of the linear: True = ZeRO-style weight all-gather at
@@ -59,6 +98,28 @@ def init_linear(
         scale = k ** -0.5
     w = jax.random.normal(key, (k, o), dtype=jnp.float32) * scale
     w = w.astype(dtype)
+    if cfg.mode == "rowwise":
+        # Static tier partition (a quarter of channels at 1:4, a quarter
+        # at 2:4, the rest dense 4:4), so init stays shape-uniform and
+        # vmap/scan-friendly for stacked layers.  Real checkpoints get
+        # their data-dependent lossless cover offline via
+        # ``convert_to_serving(..., "rowwise")`` — compression is an
+        # offline step, exactly as in the paper.
+        o1 = o2 = o // 4
+        segs: Dict[str, Any] = {}
+        start = 0
+        for tier_n, size in ((1, o1), (2, o2), (cfg.m, o - o1 - o2)):
+            if size == 0:
+                continue
+            seg_w = w[:, start:start + size]
+            start += size
+            if tier_n < cfg.m:
+                seg_w, _ = nm.prune_nm(seg_w, tier_n, cfg.m)
+            c = nm.compress_nm(seg_w, tier_n, cfg.m)
+            segs[f"n{tier_n}"] = {"values": c.values,
+                                  "meta_packed": nm.pack_meta(c.meta)}
+        return {"rowwise": segs,
+                "inv_perm": jnp.arange(o, dtype=jnp.int32)}
     if cfg.mode in ("dense", "masked") or not cfg.is_sparse:
         return {"w": w}
     if cfg.mode == "compressed":
@@ -82,20 +143,32 @@ def apply_linear(
 ) -> jax.Array:
     """y = x @ W with the mode's lowering. x: (..., K) -> (..., O).
 
-    All four modes route through the kernel dispatch engine
+    All modes route through the kernel dispatch engine
     (``repro.kernels.dispatch.sparse_matmul``): on TPU (or with the
     interpret backend forced) the registry picks the matching Pallas
     kernel (``tile_gemm`` | ``nm_spmm`` | ``nm_spmm_gather``); under
-    ``jax.grad``, under an installed mesh env, or when no kernel fits,
-    the engine lowers the documented jnp reference formulation instead.
+    ``jax.grad`` or when no kernel fits, the engine lowers the documented
+    jnp reference formulation instead.  Under an installed mesh env the
+    ``gather`` hint becomes a :class:`ShardSpec` and the kernel runs
+    per-shard inside ``shard_map`` (column-parallel: out dim sharded, no
+    collective; row-parallel: contraction sharded + psum) — sites without
+    a hint (already inside a shard_map body, e.g. MoE experts) keep the
+    jnp fallback.
 
     ``gather`` ("col" | "row" | None) pins the weight sharding at use-site
     to model-axis-only, forcing the FSDP all-gather of the (small) weight
     instead of an activation all-reduce over the data axis (ZeRO-3
     semantics; its VJP is the matching grad reduce-scatter).
     """
-    from repro.kernels.dispatch import sparse_matmul  # local: avoid cycle
-    from repro.models.pjit_utils import constrain     # local: avoid cycle
+    from repro.kernels.dispatch import (                # local: avoid cycle
+        shard_spec_from_env, sparse_matmul)
+    from repro.models.pjit_utils import constrain       # local: avoid cycle
+
+    shard = shard_spec_from_env(gather) if gather is not None else None
+
+    if cfg.mode == "rowwise":
+        from .rowwise import rowwise_apply
+        return rowwise_apply(params, x, cfg, shard=shard)
 
     def _g(w):
         if not cfg.fsdp_gather:
@@ -106,7 +179,7 @@ def apply_linear(
             return constrain(w, "model", None)
         return w
 
-    return sparse_matmul(x, params, cfg, constrain_fn=_g)
+    return sparse_matmul(x, params, cfg, constrain_fn=_g, shard=shard)
 
 
 def convert_to_serving(
@@ -122,6 +195,11 @@ def convert_to_serving(
     if target_mode == "compressed":
         c = nm.compress_nm(pruned, cfg.n, cfg.m)
         return {"values": c.values, "meta_packed": nm.pack_meta(c.meta)}
+    if target_mode == "rowwise":
+        # lossless per-channel tier cover; serving layout is a nested dict
+        # of plain compressed segments (pytree-friendly, engine-dispatchable)
+        from .rowwise import rowwise_compress, rowwise_params
+        return rowwise_params(rowwise_compress(w, cfg.m))
     if target_mode == "gather":
         # lane-aligned conversion: vote a shared in-block index set per block
         k, o = w.shape

@@ -17,9 +17,12 @@ reference formulation) and owns block-size autotuning (``autotune``).
 from repro.kernels.dispatch import (  # noqa: F401
     DispatchConfig,
     DispatchDecision,
+    ShardSpec,
+    attention,
     describe,
     plan,
     plan_for,
+    shard_spec_from_env,
     sparse_matmul,
     use_dispatch,
 )

@@ -10,6 +10,11 @@ Per-(kernel, problem, backend) best block sizes, resolved in three layers:
 
 Keys are deterministic strings (shape/sparsity/dtype), so a tuned entry on
 one host applies to any run of the same problem on the same backend.
+
+Stores are additionally keyed by the **device kind** actually executing
+(``cpu-interpret.json`` vs ``tpu-interpret.json`` vs ``tpu.json``): block
+sizes timed under CPU interpret-mode emulation say nothing about Mosaic
+behavior, so an interpret-tuned entry must never be served to a TPU run.
 """
 
 from __future__ import annotations
@@ -29,6 +34,9 @@ __all__ = [
     "tune",
     "clear_memory_cache",
     "store_path",
+    "device_kind",
+    "stats",
+    "reset_stats",
 ]
 
 Blocks = Tuple[int, int, int]
@@ -36,21 +44,38 @@ Blocks = Tuple[int, int, int]
 _ENV_DIR = "REPRO_AUTOTUNE_DIR"
 _DEFAULT_DIR = os.path.join("experiments", "autotune")
 
-# (backend) -> {key: [bb, bke, bo]}; None = not yet loaded from disk
+# (store name) -> {key: [bb, bke, bo]}; None = not yet loaded from disk
 _MEM: Dict[str, Optional[Dict[str, list]]] = {}
+
+# lookup outcomes since process start / last reset (dispatch-plan report)
+_STATS = {"hits": 0, "misses": 0}
 
 
 def cache_key(kernel: str, b: int, ke: int, o: int, n: int, m: int, dtype) -> str:
     return f"{kernel}/b{b}_ke{ke}_o{o}_n{n}m{m}_{jax.numpy.dtype(dtype).name}"
 
 
+def device_kind() -> str:
+    """Platform actually executing ("cpu", "tpu", ...)."""
+    try:
+        return jax.default_backend()
+    except Exception:  # no devices at all — still allow store reads
+        return "cpu"
+
+
+def _store_name(backend: str) -> str:
+    kind = device_kind()
+    return backend if backend == kind else f"{kind}-{backend}"
+
+
 def store_path(backend: str) -> str:
     base = os.environ.get(_ENV_DIR, _DEFAULT_DIR)
-    return os.path.join(base, f"{backend}.json")
+    return os.path.join(base, f"{_store_name(backend)}.json")
 
 
 def _load(backend: str) -> Dict[str, list]:
-    cached = _MEM.get(backend)
+    name = _store_name(backend)
+    cached = _MEM.get(name)
     if cached is not None:
         return cached
     path = store_path(backend)
@@ -65,12 +90,12 @@ def _load(backend: str) -> Dict[str, list]:
             }
     except (OSError, ValueError):
         pass  # missing or corrupt store — start fresh
-    _MEM[backend] = table
+    _MEM[name] = table
     return table
 
 
 def _save(backend: str) -> None:
-    table = _MEM.get(backend) or {}
+    table = _MEM.get(_store_name(backend)) or {}
     path = store_path(backend)
     os.makedirs(os.path.dirname(path), exist_ok=True)
     # atomic replace so a crashed run can't corrupt the store
@@ -88,6 +113,7 @@ def _save(backend: str) -> None:
 
 def lookup(backend: str, key: str) -> Optional[Blocks]:
     hit = _load(backend).get(key)
+    _STATS["hits" if hit else "misses"] += 1
     return tuple(hit) if hit else None
 
 
@@ -134,6 +160,15 @@ def tune(
         return None
     record(backend, key, best, persist=persist)
     return tuple(best)
+
+
+def stats() -> Dict[str, int]:
+    """Cache-lookup outcomes since start/reset (for the dispatch report)."""
+    return dict(_STATS)
+
+
+def reset_stats() -> None:
+    _STATS["hits"] = _STATS["misses"] = 0
 
 
 def clear_memory_cache() -> None:

@@ -11,24 +11,37 @@ reference formulation.
 The jnp formulations remain first-class: they are the semantics the
 kernels are tested against, and they are what the engine uses whenever
 kernels don't apply — under ``jax.grad`` (the Pallas bodies carry no VJP
-rules), under an installed mesh/sharding env (XLA owns the collective
-layout), on CPU by default (interpret-mode Pallas is emulation, not perf),
+rules), on CPU by default (interpret-mode Pallas is emulation, not perf),
 or when a shape fails a kernel's tiling constraints.
 
+Under an installed mesh env the engine no longer surrenders to XLA: when
+the use-site supplies a :class:`ShardSpec` (how TP/FSDP slices the
+(b, ke, o) GEMM), the engine computes the **per-shard local problem**,
+fits blocks against it, and runs the selected Pallas kernel inside
+``jax.experimental.shard_map`` — partial products over a sharded
+contraction dim are combined with ``psum``; an out-dim-sharded GEMM needs
+no collective.  The jnp reference remains the fallback whenever the local
+shape doesn't fit a kernel or a spec slices the N:M metadata axis
+non-divisibly.
+
 Block sizes come from the autotuner (in-process cache + JSON store under
-``experiments/autotune/``) when enabled, else from per-problem fitting.
+``experiments/autotune/``, keyed by device kind) when enabled, else from
+per-problem fitting.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import logging
 import math
+import types
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.interpreters import ad
+from jax.sharding import PartitionSpec as P
 
 from repro.core import nm
 from repro.core.ste import srste_prune
@@ -38,19 +51,25 @@ from repro.kernels.registry import KernelEntry, largest_fitting_block
 __all__ = [
     "DispatchConfig",
     "DispatchDecision",
+    "ShardSpec",
+    "shard_spec_from_env",
     "sparse_matmul",
+    "attention",
     "plan",
     "describe",
     "use_dispatch",
     "current_dispatch",
     "input_features",
     "iter_linear_leaves",
+    "iter_linear_items",
     "plan_for",
     "pretune",
     "JNP_REFERENCE",
 ]
 
 JNP_REFERENCE = "jnp-reference"
+
+_log = logging.getLogger(__name__)
 
 Blocks = Tuple[int, int, int]  # (block_b, block_ke, block_o)
 
@@ -85,6 +104,64 @@ def use_dispatch(**overrides):
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """How the active mesh slices one (b, ke, o) GEMM at its use site.
+
+    Each field is a mesh axis name (or tuple of names) sharding that dim,
+    or ``None`` for replicated.  Built from the use-site gather hint +
+    the installed :class:`AxisEnv` by :func:`shard_spec_from_env`:
+    column-parallel weights shard ``o`` on the model axis (no collective),
+    row-parallel weights shard ``ke`` (partial products need a ``psum``),
+    FSDP shards only the batch dim (weight replicated at use-site).
+    """
+
+    mesh: Any                      # jax.sharding.Mesh
+    batch: Any = None              # axes sharding the flattened batch dim
+    ke: Any = None                 # axes sharding the contraction dim
+    o: Any = None                  # axes sharding the out-features dim
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return math.prod(self.mesh.shape[a] for a in axes)
+
+    @property
+    def shards(self) -> Tuple[int, int, int]:
+        return (self.axis_size(self.batch), self.axis_size(self.ke),
+                self.axis_size(self.o))
+
+    @property
+    def collective(self) -> str:
+        return "psum" if self.axis_size(self.ke) > 1 else "none"
+
+
+def shard_spec_from_env(gather: Optional[str] = None) -> Optional[ShardSpec]:
+    """ShardSpec for the installed mesh env, or ``None`` without one.
+
+    ``gather`` is the use-site parallelism hint ("col" | "row" | None,
+    same vocabulary as ``apply_linear``).  Call sites with no hint (e.g.
+    expert linears already inside a shard_map body) must NOT build a spec
+    — nesting shard_map is not supported — so only hinted sites get one.
+    """
+    try:
+        from repro.models.pjit_utils import axis_env
+    except (ImportError, AttributeError) as e:  # pragma: no cover
+        _warn_mesh_probe_once(e)
+        return None
+    env = axis_env()
+    if env is None:
+        return None
+    batch = env.physical("batch")
+    if gather == "col":
+        return ShardSpec(mesh=env.mesh, batch=batch, o=env.model_axis)
+    if gather == "row":
+        return ShardSpec(mesh=env.mesh, batch=batch, ke=env.model_axis)
+    return ShardSpec(mesh=env.mesh, batch=batch)
+
+
+@dataclasses.dataclass(frozen=True)
 class DispatchDecision:
     """What the engine chose for one problem, and why.
 
@@ -92,6 +169,11 @@ class DispatchDecision:
     "none" (jnp reference), "fitted" (per-problem default fitting),
     "tuned" (autotune cache hit), or "pinned" (config override).  Logic
     branches on it; ``reason`` is display text only.
+
+    ``placement`` is the execution class: "single" (one device / XLA owns
+    any layout) or "shard_map" (kernel runs per-shard under the mesh; the
+    local problem is ``local_dims`` and partial products are combined by
+    ``collective``).
     """
 
     mode: str
@@ -100,18 +182,33 @@ class DispatchDecision:
     blocks: Optional[Blocks]
     reason: str
     blocks_source: str = "none"    # none | fitted | tuned | pinned
+    placement: str = "single"      # single | shard_map
+    local_dims: Optional[Tuple[int, int, int]] = None  # per-shard (b, ke, o)
+    shards: Optional[Tuple[int, int, int]] = None      # mesh split of (b, ke, o)
+    collective: Optional[str] = None                   # psum | none
 
     @property
     def uses_kernel(self) -> bool:
         return self.kernel != JNP_REFERENCE
+
+    @property
+    def uses_shard_map(self) -> bool:
+        return self.placement == "shard_map"
 
 
 def describe(d: DispatchDecision) -> str:
     if not d.uses_kernel:
         return f"{d.mode}: {JNP_REFERENCE} ({d.reason})"
     bb, bke, bo = d.blocks
-    return (f"{d.mode}: {d.kernel}[{d.backend}] "
-            f"blocks=(b={bb},ke={bke},o={bo}) ({d.reason})")
+    base = (f"{d.mode}: {d.kernel}[{d.backend}] "
+            f"blocks=(b={bb},ke={bke},o={bo})")
+    if d.uses_shard_map:
+        lb, lke, lo = d.local_dims
+        sb, ske, so = d.shards
+        base += (f" shard_map[{d.collective}]"
+                 f" shards=(b/{sb},ke/{ske},o/{so})"
+                 f" local=(b={lb},ke={lke},o={lo})")
+    return f"{base} ({d.reason})"
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +353,46 @@ registry.register(KernelEntry(
 ))
 
 
+# --- flash attention: mode "attention", dims mapped as (b, ke, o) =
+# (T_q, T_k, head_dim), blocks = (block_q, block_k, head_dim).  The last
+# kernel that used to be called directly by model code now routes through
+# the same registry/plan machinery as the GEMMs.
+
+def _fit_flash(b, ke, o, n, m, dtype):
+    bq = largest_fitting_block(b, 256)
+    bk = largest_fitting_block(ke, 256)
+    if bq is None or bk is None or o % 8 != 0:
+        return None
+    return (bq, bk, o)
+
+
+def _flash_candidates(b, ke, o, n, m, dtype):
+    out = []
+    for cq in (256, 128):
+        for ck in (256, 128):
+            bq = largest_fitting_block(b, cq)
+            bk = largest_fitting_block(ke, ck)
+            if bq and bk and (bq, bk, o) not in out:
+                out.append((bq, bk, o))
+    return out
+
+
+def _run_flash(x2, params, cfg, g, blocks, interpret, out_dtype):
+    from repro.kernels.flash_attention.ops import flash_attention_op
+
+    bq, bk, _ = blocks
+    return flash_attention_op(params["q"], params["k"], params["v"],
+                              causal=cfg.causal, block_q=bq, block_k=bk,
+                              interpret=interpret)
+
+
+registry.register(KernelEntry(
+    name="flash_attention", mode="attention",
+    fit_blocks=_fit_flash, run=_run_flash,
+    candidates=_flash_candidates,
+))
+
+
 # ---------------------------------------------------------------------------
 # Planning + execution
 # ---------------------------------------------------------------------------
@@ -291,12 +428,46 @@ def _under_autodiff(*trees) -> bool:
                for leaf in jax.tree_util.tree_leaves(trees))
 
 
+_mesh_probe_warned = False
+
+
+def _warn_mesh_probe_once(err: BaseException) -> None:
+    global _mesh_probe_warned
+    if not _mesh_probe_warned:
+        _mesh_probe_warned = True
+        _log.warning(
+            "repro.models.pjit_utils unavailable (%s): dispatch engine "
+            "assumes no mesh env is installed", err)
+
+
 def _mesh_active() -> bool:
+    # Narrow except: a broken pjit_utils used to be swallowed silently,
+    # masking real import errors as "no mesh".  Anything other than the
+    # module/attr being absent should propagate.
     try:
         from repro.models.pjit_utils import axis_env
-        return axis_env() is not None
-    except Exception:
+    except (ImportError, AttributeError) as e:
+        _warn_mesh_probe_once(e)
         return False
+    return axis_env() is not None
+
+
+def _meta_axis_sliceable(mode: str, ke: int, n: int, m: int, ske: int) -> bool:
+    """Can the contraction dim be cut into ``ske`` shards without splitting
+    N:M metadata structure?
+
+    compressed: each shard's values rows (ke_local*n/m) must pack whole
+    meta bytes (4 rows/byte) -> ke*n % (4*m*ske) == 0.
+    gather: shard boundaries must align with M-blocks so local gather
+    indices stay block-relative -> ke % (m*ske) == 0.
+    """
+    if ske <= 1:
+        return True
+    if mode == "compressed":
+        return (ke * n) % (4 * m * ske) == 0
+    if mode == "gather":
+        return ke % (m * ske) == 0
+    return ke % ske == 0
 
 
 def plan(
@@ -304,8 +475,16 @@ def plan(
     dispatch: Optional[DispatchConfig] = None,
     differentiating: bool = False,
     sharded: bool = False,
+    shard: Optional[ShardSpec] = None,
 ) -> DispatchDecision:
-    """Pure decision function: what would the engine run for this problem?"""
+    """Pure decision function: what would the engine run for this problem?
+
+    ``shard`` describes how the active mesh slices the problem at its use
+    site; with one, the engine plans the third execution class —
+    ``shard_map`` over the registry kernel — fitting blocks against the
+    per-shard local shape.  ``sharded`` without a spec (mesh installed but
+    the call-site gave no PartitionSpecs) still falls back to jnp.
+    """
     dcfg = dispatch or _DEFAULT
     backend = registry.resolve_backend(dcfg.backend)
 
@@ -318,33 +497,60 @@ def plan(
         return _jnp("backend=jnp")
     if differentiating:
         return _jnp("under autodiff: kernels carry no VJP rules")
-    if sharded:
-        return _jnp("mesh/sharding env active: XLA owns the layout")
+    if shard is not None and all(s == 1 for s in shard.shards):
+        shard = None  # trivial slicing: single-device execution class
+    if sharded and shard is None:
+        return _jnp("mesh env active with no use-site shard spec: "
+                    "XLA owns the layout")
     if b == 0:
         return _jnp("empty batch")
+
+    shards = (1, 1, 1)
+    placement, local, collective = "single", None, None
+    if shard is not None:
+        shards = shard.shards
+        local = registry.local_dims((b, ke, o), shards)
+        if local is None:
+            return _jnp(f"shard spec {shards} does not divide "
+                        f"(b={b},ke={ke},o={o})")
+        if not _meta_axis_sliceable(mode, ke, n, m, shards[1]):
+            return _jnp(f"shard spec slices the {n}:{m} metadata axis "
+                        f"non-divisibly (ke={ke} over {shards[1]} shards)")
+        placement, collective = "shard_map", shard.collective
+
     sel = registry.select(mode, b=b, ke=ke, o=o, n=n, m=m, dtype=dtype,
-                          backend=backend)
+                          backend=backend, shards=shards)
     if sel is None:
-        return _jnp(f"no registered kernel fits (b={b},ke={ke},o={o},"
-                    f"{n}:{m},{jnp.dtype(dtype).name})")
+        where = "local shard " if shard is not None else ""
+        dims = local if shard is not None else (b, ke, o)
+        return _jnp(f"no registered kernel fits {where}(b={dims[0]},"
+                    f"ke={dims[1]},o={dims[2]},{n}:{m},"
+                    f"{jnp.dtype(dtype).name})")
     entry, blocks = sel
+
+    def _decision(blocks, reason, source):
+        return DispatchDecision(
+            mode, backend, entry.name, blocks, reason, blocks_source=source,
+            placement=placement, local_dims=local, shards=shards if shard else None,
+            collective=collective)
+
     if dcfg.blocks is not None:
-        return DispatchDecision(mode, backend, entry.name,
-                                tuple(dcfg.blocks), "blocks pinned by config",
-                                blocks_source="pinned")
-    key = autotune.cache_key(entry.name, b, ke, o, n, m, dtype)
+        return _decision(tuple(dcfg.blocks), "blocks pinned by config",
+                         "pinned")
+    # autotune cache keys are per-shard local problems under shard_map —
+    # that is the shape the kernel body actually runs
+    kb, kke, ko = local if local is not None else (b, ke, o)
+    key = autotune.cache_key(entry.name, kb, kke, ko, n, m, dtype)
     tuned = autotune.lookup(backend, key)
     if tuned is not None:
-        return DispatchDecision(mode, backend, entry.name, tuned,
-                                "autotuned blocks (cache)",
-                                blocks_source="tuned")
-    return DispatchDecision(mode, backend, entry.name, blocks,
-                            "fitted default blocks", blocks_source="fitted")
+        return _decision(tuned, "autotuned blocks (cache)", "tuned")
+    return _decision(blocks, "fitted default blocks", "fitted")
 
 
 def plan_for(
     params: Dict[str, Any], x_shape: Sequence[int], cfg, dtype=jnp.float32,
     dispatch: Optional[DispatchConfig] = None,
+    shard: Optional[ShardSpec] = None,
 ) -> DispatchDecision:
     """Planning convenience for launchers/benchmarks: no execution."""
     mode = _mode_of(params, cfg)
@@ -352,12 +558,18 @@ def plan_for(
     fake_x = jax.ShapeDtypeStruct(tuple(x_shape), dtype)
     ke, o = _problem_dims(mode, params, fake_x)
     return plan(mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m, dtype=dtype,
-                dispatch=dispatch, sharded=_mesh_active())
+                dispatch=dispatch, sharded=_mesh_active(), shard=shard)
 
 
-def iter_linear_leaves(tree):
-    """Yield every SparseLinear param dict in a (possibly layer-stacked)
-    params tree, with leading stack dims stripped (first layer's slice).
+def iter_linear_items(tree, _names=()):
+    """Yield ``(names, leaf)`` for every SparseLinear param dict in a
+    (possibly layer-stacked) params tree, with leading stack dims stripped
+    (first layer's slice).  ``names`` is the dict-key path down to the
+    leaf — launchers use it to recover the use-site parallelism hint
+    (wq/w_in/... are column-parallel, wo/w_out row-parallel).  Linears
+    sitting next to a ``router`` key are MoE expert stacks; their paths
+    get an ``experts`` marker so ``gather_hint`` knows they are invoked
+    hint-less inside the MoE's own shard_map body.
 
     This is the ONE place that knows how to recognize a linear layout
     inside a model pytree — pretune and the serving dispatch report both
@@ -371,13 +583,52 @@ def iter_linear_leaves(tree):
                 nd = 1 if k == "gather_idx" else 2
                 leaf[k] = (v.reshape((-1,) + tuple(v.shape[-nd:]))[0]
                            if v.ndim > nd else v)
-            yield leaf
+            yield _names, leaf
             return
-        for v in tree.values():
-            yield from iter_linear_leaves(v)
+        mark = ("experts",) if "router" in tree else ()
+        for k, v in tree.items():
+            yield from iter_linear_items(v, _names + mark + (str(k),))
     elif isinstance(tree, (list, tuple)):
-        for v in tree:
-            yield from iter_linear_leaves(v)
+        for i, v in enumerate(tree):
+            yield from iter_linear_items(v, _names + (f"[{i}]",))
+
+
+def iter_linear_leaves(tree):
+    """Back-compat wrapper over :func:`iter_linear_items` (leaves only)."""
+    for _, leaf in iter_linear_items(tree):
+        yield leaf
+
+
+def leaf_config(names: Sequence[str], cfg):
+    """Effective SparsityConfig for one yielded linear leaf.
+
+    Rowwise layouts nest per-tier compressed segments under
+    ``.../rowwise/n<N>``; the segment's own N (and mode "compressed")
+    overrides the model-wide config for planning/tuning that leaf.
+    """
+    names = tuple(names)
+    if len(names) >= 2 and names[-2] == "rowwise":
+        tier = names[-1]
+        if tier.startswith("n") and tier[1:].isdigit():
+            return dataclasses.replace(cfg, n=int(tier[1:]),
+                                       mode="compressed")
+    return cfg
+
+
+def leaf_shard_spec(names: Sequence[str], cfg) -> Optional[ShardSpec]:
+    """Use-site ShardSpec for one yielded linear leaf — mirrors
+    ``apply_linear`` exactly: unhinted sites (MoE experts, plain linears)
+    get NO spec (they run the jnp fallback under a mesh); rowwise tier
+    segments under a column hint keep only batch sharding (the channel
+    permutation is global, so the out dim can't be pushed into tiers)."""
+    from repro.core.sparse_linear import gather_hint
+
+    hint = gather_hint(names)
+    if hint is None:
+        return None
+    if hint == "col" and leaf_config(names, cfg) is not cfg:
+        return shard_spec_from_env(None)
+    return shard_spec_from_env(hint)
 
 
 def pretune(params_tree, batch: int, cfg,
@@ -389,30 +640,39 @@ def pretune(params_tree, batch: int, cfg,
     there and the concrete-only tuning path never fires; this walks the
     tree once OUTSIDE jit, runs each distinct kernel-eligible problem on
     a dummy batch, and fills the autotune cache before the loop traces.
+    Under a mesh env each problem is tuned through its shard_map wrapper
+    (per-shard local shapes — the blocks that will actually run).
     Returns the number of problems actually tuned (already-cached,
     jnp-routed, and unfittable problems don't count).
     """
+    from repro.core.sparse_linear import gather_hint
+
     dcfg = dataclasses.replace(dispatch or _DEFAULT, autotune=True)
     seen = set()
     count = 0
-    for leaf in iter_linear_leaves(params_tree):
+    for names, leaf in iter_linear_items(params_tree):
+        lcfg = leaf_config(names, cfg)
         try:
-            ke = input_features(leaf, cfg)
+            ke = input_features(leaf, lcfg)
         except ValueError:
             continue
-        sig = tuple(sorted((k, tuple(v.shape)) for k, v in leaf.items()))
+        hint = gather_hint(names)
+        sig = (hint, lcfg.n, lcfg.m) + tuple(
+            sorted((k, tuple(v.shape)) for k, v in leaf.items()))
         if sig in seen:
             continue
         seen.add(sig)
         dt = leaf.get("values", leaf.get("w")).dtype
         x = jnp.zeros((batch, ke), dt)
-        mode = _mode_of(leaf, cfg)
+        mode = _mode_of(leaf, lcfg)
         _, o = _problem_dims(mode, leaf, x)
-        decision = plan(mode, b=batch, ke=ke, o=o, n=cfg.n, m=cfg.m,
-                        dtype=dt, dispatch=dcfg, sharded=_mesh_active())
+        shard = leaf_shard_spec(names, cfg)
+        decision = plan(mode, b=batch, ke=ke, o=o, n=lcfg.n, m=lcfg.m,
+                        dtype=dt, dispatch=dcfg, sharded=_mesh_active(),
+                        shard=shard)
         if not decision.uses_kernel or decision.blocks_source != "fitted":
             continue  # jnp-routed or already cached: nothing to tune
-        sparse_matmul(x, leaf, cfg, dispatch=dcfg)
+        sparse_matmul(x, leaf, lcfg, dispatch=dcfg, shard=shard)
         count += 1
     return count
 
@@ -424,6 +684,51 @@ def _entry_by_name(mode: str, name: str) -> KernelEntry:
     raise KeyError(f"kernel {name!r} not registered for mode {mode!r}")
 
 
+def _shard_param_specs(mode: str, shard: ShardSpec) -> Dict[str, P]:
+    """Per-leaf PartitionSpecs for one SparseLinear layout under a shard
+    spec.  The compressed values/meta share the contraction slicing (their
+    row axes are K_c and K_c/4 — same mesh axes, scaled dims); gather_idx
+    rides the contraction axis and replicates otherwise."""
+    ke, o = shard.ke, shard.o
+    if mode in ("dense", "masked"):
+        return {"w": P(ke, o)}
+    if mode == "compressed":
+        return {"values": P(ke, o), "meta_packed": P(ke, o)}
+    if mode == "gather":
+        return {"values": P(ke, o), "gather_idx": P(ke)}
+    raise ValueError(f"no shard specs for mode {mode!r}")
+
+
+def _shard_map_runner(
+    entry: KernelEntry, mode: str, cfg, shard: ShardSpec,
+    blocks: Blocks, interpret: bool, out_dtype,
+) -> Callable[[jax.Array, Dict[str, Any]], jax.Array]:
+    """Wrap ``entry.run`` in shard_map with the use-site specs.
+
+    Each shard runs the Pallas kernel on its local (b, ke, o) tile; a
+    sharded contraction dim leaves partial products that are combined
+    with ``psum`` over those axes (fp32, before the output cast) — the
+    out-dim-sharded case needs no collective, the output simply stays
+    sharded on the model axis.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    x_spec = P(shard.batch, shard.ke)
+    p_specs = _shard_param_specs(mode, shard)
+    out_spec = P(shard.batch, shard.o)
+    needs_psum = shard.collective == "psum"
+
+    def body(x_l, params_l):
+        y = entry.run(x_l, params_l, cfg, lambda w: w, blocks, interpret,
+                      jnp.float32 if needs_psum else out_dtype)
+        if needs_psum:
+            y = jax.lax.psum(y, shard.ke)
+        return y.astype(out_dtype)
+
+    return shard_map(body, mesh=shard.mesh, in_specs=(x_spec, p_specs),
+                     out_specs=out_spec, check_rep=False)
+
+
 def sparse_matmul(
     x: jax.Array,
     params: Dict[str, Any],
@@ -431,6 +736,7 @@ def sparse_matmul(
     *,
     constrain_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
     dispatch: Optional[DispatchConfig] = None,
+    shard: Optional[ShardSpec] = None,
 ) -> jax.Array:
     """y = x @ W for any SparseLinear layout, via the dispatch engine.
 
@@ -438,7 +744,9 @@ def sparse_matmul(
     layouts (``w`` | ``values``+``meta_packed`` | ``values``+``gather_idx``);
     ``cfg``: a SparsityConfig-like object (``.mode .n .m .is_sparse
     .srste_lam``).  ``constrain_fn`` is applied to the weight operand in
-    both kernel and reference paths (sharding-constraint preservation).
+    the single-device kernel and reference paths (sharding-constraint
+    preservation); under shard_map the in/out specs own the layout.
+    ``shard`` routes the kernel through the mesh-aware shard_map class.
     """
     dcfg = dispatch or _DEFAULT
     g = constrain_fn or (lambda w: w)
@@ -453,6 +761,7 @@ def sparse_matmul(
         dispatch=dcfg,
         differentiating=_under_autodiff(x2, params),
         sharded=_mesh_active(),
+        shard=shard,
     )
 
     if not decision.uses_kernel:
@@ -462,6 +771,24 @@ def sparse_matmul(
     entry = _entry_by_name(mode, decision.kernel)
     interpret = decision.backend == "interpret"
     blocks = decision.blocks
+
+    if decision.uses_shard_map:
+        lb, lke, lo = decision.local_dims
+        runner = lambda blk: _shard_map_runner(
+            entry, mode, cfg, shard, blk, interpret, x2.dtype)(x2, params)
+        # Autotune the per-shard local problem through the same wrapper.
+        if (dcfg.autotune and decision.blocks_source == "fitted"
+                and not isinstance(x2, jax.core.Tracer)):
+            key = autotune.cache_key(entry.name, lb, lke, lo,
+                                     cfg.n, cfg.m, x2.dtype)
+            cands = entry.candidates(lb, lke, lo, cfg.n, cfg.m, x2.dtype)
+            tuned = autotune.tune(runner, cands, backend=decision.backend,
+                                  key=key, persist=dcfg.persist_autotune)
+            if tuned is not None:
+                blocks = tuned
+        y2 = _shard_map_runner(entry, mode, cfg, shard, blocks, interpret,
+                               x2.dtype)(x2, params)
+        return y2.reshape(*lead, o)
 
     # Autotune on first concrete sighting of a problem (never mid-trace).
     if (dcfg.autotune and decision.blocks_source == "fitted"
@@ -478,3 +805,51 @@ def sparse_matmul(
 
     y2 = entry.run(x2, params, cfg, g, blocks, interpret, x2.dtype)
     return y2.reshape(*lead, o)
+
+
+def attention(
+    qg: jax.Array,           # (B, Hkv, G, Tq, D) grouped queries
+    k: jax.Array,            # (B, Tk, Hkv, D)
+    v: jax.Array,            # (B, Tk, Hkv, D)
+    *,
+    causal: bool,
+    chunk: int,
+    q_offset: int = 0,
+    p_bf16: bool = False,
+    s_bf16: bool = False,
+    dispatch: Optional[DispatchConfig] = None,
+) -> jax.Array:
+    """Full-sequence attention via the dispatch engine.
+
+    On a kernel backend the registry's ``flash_attention`` Pallas entry
+    runs (self-attention shapes only: Tq == Tk, no query offset); the jnp
+    chunked online-softmax formulation with its recompute-from-LSE custom
+    VJP remains the reference and the fallback — under autodiff, under a
+    mesh env (attention sharding is head-parallel and XLA already keeps it
+    collective-free), or when a shape fails the tiling constraints.
+    """
+    from repro.models.attention import chunked_attention  # local: avoid cycle
+
+    dcfg = dispatch or _DEFAULT
+    b, hkv, grp, tq, d = qg.shape
+    tk = k.shape[1]
+    decision = plan(
+        "attention", b=tq, ke=tk, o=d, n=4, m=4, dtype=qg.dtype,
+        dispatch=dcfg,
+        differentiating=_under_autodiff(qg, k, v),
+        sharded=_mesh_active(),
+    )
+    if not decision.uses_kernel or tq != tk or q_offset != 0:
+        return chunked_attention(qg, k, v, causal, chunk, q_offset,
+                                 p_bf16, s_bf16)
+    entry = _entry_by_name("attention", decision.kernel)
+    interpret = decision.backend == "interpret"
+    # (B, Hkv, G, T, D) -> (B, Hq, T, D); Hq = Hkv*G flattening matches the
+    # wrapper's jnp.repeat KV-head expansion order
+    q4 = qg.reshape(b, hkv * grp, tq, d)
+    k4 = k.transpose(0, 2, 1, 3)
+    v4 = v.transpose(0, 2, 1, 3)
+    out = entry.run(None, {"q": q4, "k": k4, "v": v4},
+                    types.SimpleNamespace(causal=causal), None,
+                    decision.blocks, interpret, qg.dtype)
+    return out.reshape(b, hkv, grp, tq, d)

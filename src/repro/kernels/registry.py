@@ -29,6 +29,7 @@ __all__ = [
     "register",
     "entries",
     "select",
+    "local_dims",
     "detect_backend",
     "resolve_backend",
     "largest_fitting_block",
@@ -79,17 +80,37 @@ def entries(mode: Optional[str] = None) -> List[KernelEntry]:
     return list(_REGISTRY.get(mode, []))
 
 
+def local_dims(
+    dims: Sequence[int], shards: Sequence[int]
+) -> Optional[Tuple[int, ...]]:
+    """Per-shard problem dims, or ``None`` when a shard count doesn't
+    evenly divide its dim (shard_map needs exact divisibility)."""
+    out = []
+    for d, s in zip(dims, shards):
+        if s <= 0 or d % s != 0:
+            return None
+        out.append(d // s)
+    return tuple(out)
+
+
 def select(
     mode: str, *, b: int, ke: int, o: int, n: int, m: int, dtype,
-    backend: str,
+    backend: str, shards: Tuple[int, int, int] = (1, 1, 1),
 ) -> Optional[Tuple[KernelEntry, Blocks]]:
     """Highest-priority kernel whose constraints fit, with its blocks.
 
-    Returns ``None`` when no registered kernel supports the problem on the
-    given backend — the caller must fall back to the jnp reference.
+    ``shards`` is the mesh slicing of (b, ke, o); blocks are fitted
+    against the PER-SHARD local problem, which is what the kernel body
+    actually sees under ``shard_map``.  Returns ``None`` when no
+    registered kernel supports the (local) problem on the given backend —
+    the caller must fall back to the jnp reference.
     """
     if backend not in KERNEL_BACKENDS:
         return None
+    loc = local_dims((b, ke, o), shards)
+    if loc is None:
+        return None
+    b, ke, o = loc
     for entry in _REGISTRY.get(mode, []):
         if backend not in entry.backends:
             continue

@@ -1,15 +1,22 @@
 """Production serving launcher: continuous-batching decode loop.
 
     python -m repro.launch.serve --arch internlm2_1_8b --smoke \
-        [--sparsity 2:4 --mode compressed] [--requests 16] \
-        [--kernel-backend auto|tpu|interpret|jnp] [--autotune]
+        [--sparsity 2:4 --mode compressed|gather|rowwise] [--requests 16] \
+        [--kernel-backend auto|tpu|interpret|jnp] [--autotune] \
+        [--mesh 2x4]
 
 Weights can live in any SparseLinear serving layout (dense | compressed |
-gather).  Every projection lowers through the kernel dispatch engine
-(``repro.kernels.dispatch``): on TPU the registry resolves the layouts to
-the ``nm_spmm*`` / ``tile_gemm`` Pallas kernels; elsewhere (or with
-``--kernel-backend jnp``) the documented jnp reference paths run.  The
-launcher prints the engine's per-shape dispatch decisions at startup.
+gather | rowwise).  Every projection lowers through the kernel dispatch
+engine (``repro.kernels.dispatch``): on TPU the registry resolves the
+layouts to the ``nm_spmm*`` / ``tile_gemm`` Pallas kernels; elsewhere (or
+with ``--kernel-backend jnp``) the documented jnp reference paths run.
+
+``--mesh DxM`` installs a (data, model) mesh: weights are placed by the
+sharding rules and every hinted linear runs its kernel PER-SHARD under
+``shard_map`` (column-parallel: out dim sharded, no collective;
+row-parallel: contraction sharded + psum).  The startup dispatch report
+shows, for every linear: global shape, per-shard local shape, chosen
+kernel/blocks, and the collective.
 """
 
 from __future__ import annotations
@@ -19,22 +26,41 @@ import time
 
 
 def _dispatch_report(params, batch, sp_cfg, dcfg):
-    """Distinct (shape -> engine decision) lines for the model's linears."""
+    """Distinct (shape -> engine decision) lines for the model's linears,
+    shard-aware: under a mesh env each line carries global -> local shapes
+    and the chosen collective.  Ends with the autotune cache counters."""
+    from repro.core.sparse_linear import gather_hint
+    from repro.kernels import autotune as kautotune
     from repro.kernels import dispatch as kdispatch
 
     seen = {}
-    for leaf in kdispatch.iter_linear_leaves(params):
+    for names, leaf in kdispatch.iter_linear_items(params):
+        lcfg = kdispatch.leaf_config(names, sp_cfg)
         try:
-            ke = kdispatch.input_features(leaf, sp_cfg)
+            ke = kdispatch.input_features(leaf, lcfg)
         except ValueError:
             continue
+        hint = gather_hint(names)
+        shard = kdispatch.leaf_shard_spec(names, sp_cfg)
         dt = leaf.get("values", leaf.get("w")).dtype
-        d = kdispatch.plan_for(leaf, (batch, 1, ke), sp_cfg,
-                               dtype=dt, dispatch=dcfg)
+        d = kdispatch.plan_for(leaf, (batch, 1, ke), lcfg,
+                               dtype=dt, dispatch=dcfg, shard=shard)
         o = leaf["w"].shape[1] if "w" in leaf else leaf["values"].shape[1]
-        seen.setdefault((d.mode, ke, o), d)
-    return [f"  (B={batch}, K={ke}, O={o}) {kdispatch.describe(d)}"
-            for (_, ke, o), d in sorted(seen.items())]
+        seen.setdefault((d.mode, lcfg.n, ke, o, hint), d)
+    lines = []
+    for (_, n, ke, o, hint), d in sorted(seen.items(), key=lambda kv: (
+            kv[0][0], kv[0][1], kv[0][2], kv[0][3], str(kv[0][4]))):
+        loc = ""
+        if d.uses_shard_map:
+            lb, lke, lo = d.local_dims
+            loc = f" -> local (B={lb}, K={lke}, O={lo})"
+        lines.append(f"  [{hint or 'rep'}] {n}:{sp_cfg.m} "
+                     f"global (B={batch}, K={ke}, O={o})"
+                     f"{loc} {kdispatch.describe(d)}")
+    st = kautotune.stats()
+    lines.append(f"  autotune cache: {st['hits']} hit(s) / "
+                 f"{st['misses']} miss(es)")
+    return lines
 
 
 def main():
@@ -43,7 +69,12 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sparsity", default=None)
     ap.add_argument("--mode", default="compressed",
-                    choices=["dense", "compressed", "gather"])
+                    choices=["dense", "compressed", "gather", "rowwise"])
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="install a (data, model) mesh, e.g. 2x4 — run "
+                         "kernels per-shard via shard_map (needs that many "
+                         "devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
@@ -75,6 +106,23 @@ def main():
     print(f"serving {cfg.name}: {nbytes/1e6:.1f} MB weights "
           f"({args.sparsity or 'dense'}/{args.mode})")
 
+    # engine override + optional mesh env stay active for the whole decode
+    # loop (main() owns the process lifetime: the stack closes at exit)
+    engine_ctx = contextlib.ExitStack()
+    if args.mesh:
+        from repro.launch.mesh import make_axis_env
+        from repro.launch.shardings import ShardingRules
+        from repro.models.pjit_utils import use_axis_env
+
+        d_, m_ = map(int, args.mesh.lower().split("x"))
+        mesh = jax.make_mesh((d_, m_), ("data", "model"))
+        env = make_axis_env(mesh)
+        rules = ShardingRules(env, cfg)
+        params = jax.device_put(params, rules.tree_shardings(params))
+        engine_ctx.enter_context(use_axis_env(env))
+        print(f"mesh installed: data={d_} x model={m_} "
+              f"({mesh.devices.size} devices)")
+
     dcfg = kdispatch.DispatchConfig(backend=args.kernel_backend,
                                     autotune=args.autotune)
     if args.autotune:
@@ -92,9 +140,6 @@ def main():
     print("dispatch engine plan:")
     for line in _dispatch_report(params, args.batch, cfg.sparsity, dcfg):
         print(line)
-    # engine override stays active for the whole decode loop (main() owns
-    # the process lifetime, so the stack closes at exit)
-    engine_ctx = contextlib.ExitStack()
     engine_ctx.enter_context(kdispatch.use_dispatch(
         backend=args.kernel_backend, autotune=args.autotune))
 

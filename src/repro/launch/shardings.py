@@ -28,12 +28,13 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.tree_util import DictKey, SequenceKey
 
+from repro.core.sparse_linear import COLUMN_PARALLEL, ROW_PARALLEL
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.models.pjit_utils import AxisEnv
 
-COLUMN_PARALLEL = {"wq", "wk", "wv", "w_in", "w_gate", "wz", "wx", "wdt"}
+# canonical column/row-parallel name sets live in repro.core.sparse_linear
+# (the dispatch engine's shard_map planning keys off the same sets)
 KV_PROJ = {"wk", "wv"}
-ROW_PARALLEL = {"wo", "w_out"}
 
 
 def _key_names(path) -> Tuple[str, ...]:

@@ -3,8 +3,9 @@ local (sliding-window) attention, and single-token decode against a cache.
 
 The jnp chunked formulations are the lowering/dry-run path (O(T·chunk)
 memory); `repro.kernels.flash_attention` is the TPU hot-spot kernel with
-identical semantics (validated in tests).  All projections are
-`SparseLinear`s — the paper's N:M feature applies to QKVO.
+identical semantics (validated in tests), dispatched through the kernel
+registry (``repro.kernels.dispatch.attention``) like every GEMM.  All
+projections are `SparseLinear`s — the paper's N:M feature applies to QKVO.
 """
 
 from __future__ import annotations
@@ -236,8 +237,15 @@ def attention_block(
     q, k, v = _project_qkv(p, x, cfg, positions)
     qg = _grouped(q, cfg)
     if is_global or cfg.window <= 0 or cfg.window >= t:
-        o = chunked_attention(qg, k, v, cfg.causal, cfg.attn_chunk, 0,
-                              cfg.attn_p_bf16, cfg.attn_scores_bf16)
+        # dispatch engine: flash_attention Pallas kernel on kernel
+        # backends, the chunked jnp formulation (with its custom VJP)
+        # under autodiff / mesh / unfittable shapes
+        from repro.kernels.dispatch import attention as engine_attention
+
+        o = engine_attention(qg, k, v, causal=cfg.causal,
+                             chunk=cfg.attn_chunk,
+                             p_bf16=cfg.attn_p_bf16,
+                             s_bf16=cfg.attn_scores_bf16)
     else:
         o = local_attention(qg, k, v, window=cfg.window)
     o = o.transpose(0, 3, 1, 2, 4).reshape(b, t, cfg.attn_dim)

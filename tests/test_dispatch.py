@@ -181,11 +181,148 @@ def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
     assert autotune.tune(runner, cands, backend="interpret", key=key) == best
     assert calls == []
 
-    # drop the memory layer: must reload from the JSON store
+    # drop the memory layer: must reload from the JSON store.  The store
+    # file is keyed by device kind so interpret entries tuned under CPU
+    # emulation can never be served to a Mosaic run.
     autotune.clear_memory_cache()
     assert autotune.lookup("interpret", key) == best
-    assert (tmp_path / "interpret.json").exists()
+    assert (tmp_path / f"{autotune.device_kind()}-interpret.json").exists()
+    assert not (tmp_path / "interpret.json").exists()
     autotune.clear_memory_cache()
+
+
+def test_autotune_stats_counts_hits_and_misses(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    autotune.reset_stats()
+    key = autotune.cache_key("nm_spmm", 4, 64, 32, 2, 4, jnp.float32)
+    assert autotune.lookup("interpret", key) is None
+    autotune.record("interpret", key, (4, 64, 32), persist=False)
+    assert autotune.lookup("interpret", key) == (4, 64, 32)
+    s = autotune.stats()
+    assert s["misses"] == 1 and s["hits"] == 1
+    autotune.reset_stats()
+    autotune.clear_memory_cache()
+
+
+# ---------------------------------------------------------------------------
+# flash attention folded into the registry/dispatch engine
+# ---------------------------------------------------------------------------
+
+def test_attention_registry_entry_and_plan():
+    sel = registry.select("attention", b=256, ke=256, o=64, n=4, m=4,
+                          dtype=jnp.bfloat16, backend="interpret")
+    assert sel is not None and sel[0].name == "flash_attention"
+    d = dispatch.plan("attention", b=256, ke=256, o=64, n=4, m=4,
+                      dtype=jnp.bfloat16,
+                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    assert d.uses_kernel and d.kernel == "flash_attention"
+    # odd head_dim fails the lane constraint -> jnp reason in plan
+    d = dispatch.plan("attention", b=256, ke=256, o=63, n=4, m=4,
+                      dtype=jnp.bfloat16,
+                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    assert not d.uses_kernel and "no registered kernel" in d.reason
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_dispatch_parity_kernel_vs_chunked(causal):
+    from repro.models.attention import chunked_attention
+
+    b, hkv, g, t, d = 1, 2, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    qg = jax.random.normal(ks[0], (b, hkv, g, t, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, hkv, d), jnp.float32)
+    want = chunked_attention(qg, k, v, causal, 64, 0, False, False)
+    with dispatch.use_dispatch(backend="interpret"):
+        got = dispatch.attention(qg, k, v, causal=causal, chunk=64)
+    _allclose(got, want, atol=2e-5)
+
+
+def test_attention_dispatch_falls_back_under_autodiff():
+    """grad through the engine's attention uses the chunked custom VJP."""
+    b, hkv, g, t, d = 1, 1, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    qg = jax.random.normal(ks[0], (b, hkv, g, t, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, hkv, d), jnp.float32)
+
+    def loss(qg):
+        with dispatch.use_dispatch(backend="interpret"):
+            return jnp.sum(dispatch.attention(qg, k, v, causal=True,
+                                              chunk=32) ** 2)
+
+    grad = jax.grad(loss)(qg)
+    assert grad.shape == qg.shape and bool(jnp.any(grad != 0))
+
+
+def test_attention_block_routes_through_flash_kernel(monkeypatch):
+    """Model code no longer calls the flash kernel directly — the engine
+    invokes it when a kernel backend is forced."""
+    import repro.kernels.flash_attention.ops as fops
+    from repro.models.attention import attention_block, init_attention
+    from repro.models.config import ModelConfig
+
+    calls = []
+    real = fops.flash_attention_op
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("interpret"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(fops, "flash_attention_op", spy)
+    cfg = ModelConfig(name="t", family="dense", vocab_size=64, d_model=64,
+                      num_layers=1, num_heads=2, num_kv_heads=2, head_dim=32,
+                      d_ff=128)
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 64),
+                          jnp.float32).astype(cfg.jnp_dtype)
+    with dispatch.use_dispatch(backend="interpret"):
+        y = attention_block(p, x, cfg)
+    assert y.shape == x.shape
+    assert calls == [True]
+    calls.clear()
+    with dispatch.use_dispatch(backend="jnp"):
+        attention_block(p, x, cfg)
+    assert calls == []
+
+
+def test_gather_hint_and_moe_expert_marker():
+    """Expert stacks (router siblings) must plan hint-less — their real
+    call sites sit inside the MoE's own shard_map body."""
+    from repro.core.sparse_linear import gather_hint
+
+    assert gather_hint(("attn", "wq")) == "col"
+    assert gather_hint(("ffn", "w_out")) == "row"
+    assert gather_hint(("moe", "experts", "w_in")) is None
+
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p = init_linear(jax.random.PRNGKey(0), 64, 32, cfg, dtype=jnp.float32)
+    stacked = jax.tree.map(lambda a: jnp.stack([a, a]), p)  # (E, ...) experts
+    tree = {"moe": {"router": jnp.zeros((64, 2)), "w_in": stacked},
+            "ffn": {"w_in": p}}
+    hints = {names: gather_hint(names)
+             for names, _ in dispatch.iter_linear_items(tree)}
+    assert hints[("moe", "experts", "w_in")] is None
+    assert hints[("ffn", "w_in")] == "col"
+
+
+def test_mesh_probe_narrow_exception(monkeypatch):
+    """_mesh_active must not swallow arbitrary errors from pjit_utils."""
+    import builtins
+
+    real_import = builtins.__import__
+
+    def broken(name, *args, **kwargs):
+        if name == "repro.models.pjit_utils":
+            raise RuntimeError("real bug, must propagate")
+        return real_import(name, *args, **kwargs)
+
+    monkeypatch.setattr(builtins, "__import__", broken)
+    monkeypatch.delitem(__import__("sys").modules, "repro.models.pjit_utils",
+                        raising=False)
+    with pytest.raises(RuntimeError):
+        dispatch._mesh_active()
 
 
 def test_pretune_walks_stacked_params(tmp_path, monkeypatch):

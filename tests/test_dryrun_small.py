@@ -94,6 +94,43 @@ def test_small_mesh_moe_shardmap():
 
 
 @pytest.mark.slow
+def test_sharded_dispatch_parity_subprocess():
+    """Kernel-vs-jnp parity with a mesh installed: the shard_map dispatch
+    class (single-device lanes get this via subprocess; the full matrix
+    lives in test_sharded_dispatch.py under forced host devices)."""
+    out = _run(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import SparsityConfig, apply_linear, init_linear
+        from repro.kernels import dispatch
+        from repro.launch.mesh import make_axis_env
+        from repro.models.pjit_utils import use_axis_env
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        env = make_axis_env(mesh)
+        for mode, n, hint in [("dense", 4, "col"), ("compressed", 2, "row"),
+                              ("compressed", 1, "col"), ("gather", 2, "row")]:
+            cfg = SparsityConfig(n=n, m=4, mode=mode)
+            p = init_linear(jax.random.PRNGKey(0), 256, 128, cfg, jnp.float32)
+            x = jax.random.normal(jax.random.PRNGKey(1), (32, 256))
+            with use_axis_env(env):
+                with dispatch.use_dispatch(backend="jnp"):
+                    y_ref = apply_linear(p, x, cfg, gather=hint)
+                with dispatch.use_dispatch(backend="interpret"):
+                    y_k = apply_linear(p, x, cfg, gather=hint)
+                shard = dispatch.shard_spec_from_env(hint)
+                d = dispatch.plan_for(p, (32, 256), cfg, dtype=jnp.float32,
+                    dispatch=dispatch.DispatchConfig(backend="interpret"),
+                    shard=shard)
+            assert d.placement == "shard_map", (mode, n, hint, d)
+            a, b = np.asarray(y_k, np.float32), np.asarray(y_ref, np.float32)
+            err = np.abs(a - b).max() / (np.abs(b).max() + 1e-6)
+            assert err < 1e-5, (mode, n, hint, err)
+        print("OK")
+    """))
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_hlo_cost_flops_vs_analytic():
     """While-aware HLO cost ~ 6*N*D for a dense train step (<= 60% over)."""
     out = _run(textwrap.dedent("""

@@ -1,5 +1,6 @@
 """End-to-end TILE_SPMM_R: unstructured matrix -> lossless row-wise N:4
-cover -> per-tier Pallas nm_spmm dispatch -> exact result."""
+cover -> per-tier Pallas nm_spmm dispatch -> exact result.  Includes the
+serving path: ``mode="rowwise"`` in SparseLinear.apply_linear."""
 
 import jax
 import jax.numpy as jnp
@@ -7,6 +8,9 @@ import numpy as np
 import pytest
 
 from repro.core import rowwise
+from repro.core.sparse_linear import (
+    SparsityConfig, apply_linear, convert_to_serving, init_linear)
+from repro.kernels import dispatch
 
 
 @pytest.mark.parametrize("density", [0.05, 0.15, 0.5])
@@ -40,3 +44,58 @@ def test_rowwise_kernel_all_tiers_present():
     got = rowwise.rowwise_matmul_kernels(x, rc, interpret=True, block_pad=8)
     np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=1e-5,
                                atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mode="rowwise" as a first-class SparseLinear serving layout
+# ---------------------------------------------------------------------------
+
+def test_rowwise_apply_linear_exact():
+    """convert_to_serving(..., "rowwise") + apply_linear == x @ w, on both
+    the jnp reference and the per-tier kernel dispatch."""
+    rng = np.random.default_rng(7)
+    k, o, b = 256, 96, 32
+    w = rng.normal(size=(k, o)) * (rng.random((k, o)) < 0.15)
+    w = jnp.asarray(w, jnp.float32)
+    cfg = SparsityConfig(n=2, m=4, mode="rowwise")
+    p = convert_to_serving({"w": w}, cfg, "rowwise")
+    assert set(p) == {"rowwise", "inv_perm"}
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, k), jnp.float32)
+    want = x @ w
+    scale = float(jnp.abs(want).max()) + 1e-6
+    for backend in ("jnp", "interpret"):
+        with dispatch.use_dispatch(backend=backend):
+            got = apply_linear(p, x, cfg)
+        np.testing.assert_allclose(np.asarray(got) / scale,
+                                   np.asarray(want) / scale, atol=1e-5)
+
+
+def test_rowwise_apply_linear_under_jit():
+    cfg = SparsityConfig(n=2, m=4, mode="rowwise")
+    p = init_linear(jax.random.PRNGKey(0), 64, 32, cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 64), jnp.float32)
+    y = jax.jit(lambda p, x: apply_linear(p, x, cfg))(p, x)
+    assert y.shape == (2, 3, 32)
+    with dispatch.use_dispatch(backend="jnp"):
+        y_ref = apply_linear(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+
+
+def test_rowwise_leaves_visible_to_dispatch_report():
+    """iter_linear_items must surface per-tier segments with the right
+    tier config so pretune/serve plan them as the nm_spmm problems they
+    are."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(64, 32)) * (rng.random((64, 32)) < 0.3),
+                    jnp.float32)
+    cfg = SparsityConfig(n=2, m=4, mode="rowwise")
+    p = convert_to_serving({"w": w}, cfg, "rowwise")
+    items = list(dispatch.iter_linear_items({"ffn": {"w_out": p}}))
+    assert items, "rowwise tiers should be discoverable"
+    for names, leaf in items:
+        assert names[-2] == "rowwise"
+        lcfg = dispatch.leaf_config(names, cfg)
+        assert lcfg.mode == "compressed"
+        assert lcfg.n == int(names[-1][1:])
+        ke = dispatch.input_features(leaf, lcfg)
+        assert ke == 64
