@@ -1,0 +1,163 @@
+"""CI perf-regression gate for the kernel smoke benchmark.
+
+Compares the fast-lane smoke CSV (``benchmarks.run --only kernels``
+output) against the committed baseline
+``benchmarks/baselines/kernel-smoke.json`` and **fails** (exit 1) when
+any timing field of any kernel row slowed down by more than the
+threshold (default 1.25x).  Before this gate, CI only uploaded the CSV —
+nothing failed when a kernel regressed.
+
+  python -m benchmarks.check_regression kernel-smoke.csv
+  python -m benchmarks.check_regression --update kernel-smoke.csv  # rebaseline
+
+Rules:
+  * every ``kernel_*`` row in the baseline must still be present (a
+    vanished row is a coverage regression and fails);
+  * new rows (new kernels/sweeps) pass with a note — commit a refreshed
+    baseline in the same PR to start guarding them;
+  * timing fields are the ``us_*`` keys; non-timing fields (dispatch
+    strings, byte counts) are ignored;
+  * setting the ``PERF_OVERRIDE`` env var (CI sets it from the
+    ``perf-override`` PR label) reports ratios but always exits 0 —
+    the escape hatch for intentional slowdowns, which should land with
+    an updated baseline.
+
+The baseline holds absolute wall-clock numbers, so it is only
+meaningful for one machine class: regenerate it with ``--update`` from
+a ``kernel-smoke`` CSV artifact produced BY CI (same runner class), not
+from a dev machine, and rebaseline whenever the runner image rolls.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict
+
+BASELINE_DEFAULT = os.path.join(
+    os.path.dirname(__file__), "baselines", "kernel-smoke.json")
+THRESHOLD_DEFAULT = 1.25
+
+
+def parse_smoke_csv(text: str) -> Dict[str, Dict[str, float]]:
+    """``kernel_<row>,us_x=..,us_y=..,...`` lines -> {row: {field: us}}.
+
+    Non-kernel lines (section headers, wall-clock totals, backend tag)
+    and non-timing fields are skipped.
+    """
+    rows: Dict[str, Dict[str, float]] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line.startswith("kernel_") or "," not in line:
+            continue
+        name, *fields = line.split(",")
+        if name == "kernel_backend":
+            continue
+        timings = {}
+        for f in fields:
+            if "=" not in f:
+                continue
+            k, _, v = f.partition("=")
+            if not k.startswith("us_"):
+                continue
+            try:
+                timings[k] = float(v.rstrip("x"))
+            except ValueError:
+                continue
+        if timings:
+            rows[name] = timings
+    return rows
+
+
+def compare(current: Dict[str, Dict[str, float]],
+            baseline: Dict[str, Dict[str, float]],
+            threshold: float):
+    """Returns (failures, notes): failures are (row, field, ratio|None)."""
+    failures, notes = [], []
+    for row, base_fields in sorted(baseline.items()):
+        if row.startswith("_"):
+            continue  # provenance metadata, not a gated row
+        cur_fields = current.get(row)
+        if cur_fields is None:
+            failures.append((row, "<row missing>", None))
+            continue
+        for field, base_us in sorted(base_fields.items()):
+            cur_us = cur_fields.get(field)
+            if cur_us is None:
+                failures.append((row, f"{field} <field missing>", None))
+                continue
+            if base_us <= 0:
+                continue
+            ratio = cur_us / base_us
+            line = f"{row}.{field}: {base_us:.0f}us -> {cur_us:.0f}us ({ratio:.2f}x)"
+            if ratio > threshold:
+                failures.append((row, field, ratio))
+                notes.append("FAIL " + line)
+            else:
+                notes.append("ok   " + line)
+    for row in sorted(set(current) - set(baseline)):
+        notes.append(f"new  {row} (not in baseline — rebaseline to guard it)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("csv", help="smoke CSV to check (or to rebaseline from)")
+    ap.add_argument("--baseline", default=BASELINE_DEFAULT)
+    ap.add_argument("--threshold", type=float, default=THRESHOLD_DEFAULT,
+                    help="max allowed slowdown ratio per timing field")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this CSV instead of "
+                         "checking against it")
+    args = ap.parse_args(argv)
+
+    with open(args.csv) as f:
+        current = parse_smoke_csv(f.read())
+    if not current:
+        print("check_regression: no kernel rows found in", args.csv)
+        return 1
+
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        meta = {"_meta": {
+            "source_csv": os.path.basename(args.csv),
+            "note": "absolute us timings — regenerate from a CI "
+                    "kernel-smoke artifact of the gating runner class",
+        }}
+        with open(args.baseline, "w") as f:
+            json.dump({**meta, **current}, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"check_regression: baseline updated with "
+              f"{len(current)} row(s) -> {args.baseline}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_regression: cannot read baseline {args.baseline}: {e}")
+        return 1
+
+    failures, notes = compare(current, baseline, args.threshold)
+    for n in notes:
+        print(n)
+    override = bool(os.environ.get("PERF_OVERRIDE"))
+    if failures:
+        print(f"\ncheck_regression: {len(failures)} kernel row(s) exceed "
+              f"the {args.threshold:.2f}x slowdown gate")
+        if override:
+            print("check_regression: PERF_OVERRIDE set — reporting only, "
+                  "not failing (land a rebaselined "
+                  "benchmarks/baselines/kernel-smoke.json)")
+            return 0
+        return 1
+    gated = sum(1 for r in baseline if not r.startswith("_"))
+    print(f"\ncheck_regression: all {gated} baseline row(s) within "
+          f"{args.threshold:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,53 @@
+"""Warm the autotune JSON store for CI (and print cache counters).
+
+CI caches ``experiments/autotune/`` across runs (actions/cache keyed on
+the registry+autotuner sources).  This script tunes a small,
+representative set of engine problems — dense / 2:4 / 1:4, fp32 AND
+their int8-quantized twins — through the interpret backend and prints
+the store path plus the hit/miss counters, which CI appends to
+``$GITHUB_STEP_SUMMARY``.  On a warm cache every lookup hits and the
+script is near-instant; on a cold cache it repopulates the store the
+following runs will hit.
+
+Run: PYTHONPATH=src python -m benchmarks.warm_autotune
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_linear import SparsityConfig, convert_to_serving
+from repro.kernels import autotune, dispatch
+
+
+def main() -> None:
+    b, k, o = 32, 256, 128
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (k, o), jnp.float32)
+    x = jnp.zeros((b, k), jnp.float32)
+    dcfg = dispatch.DispatchConfig(backend="interpret", autotune=True)
+    autotune.reset_stats()
+    tuned = 0
+    for sp_n in (4, 2, 1):
+        mode = "dense" if sp_n == 4 else "compressed"
+        cfg = SparsityConfig(n=sp_n, m=4, mode=mode)
+        for quantize in (None, "int8"):
+            p = convert_to_serving({"w": w}, cfg, mode, quantize=quantize)
+            d = dispatch.plan_for(
+                p, (b, k), cfg,
+                dtype=jnp.int8 if quantize else jnp.float32, dispatch=dcfg)
+            if not d.uses_kernel:
+                continue
+            if d.blocks_source == "fitted":
+                dispatch.sparse_matmul(x, p, cfg, dispatch=dcfg)
+                tuned += 1
+    st = autotune.stats()
+    print(f"autotune store: {autotune.store_path('interpret')}")
+    print(f"autotune tuned this run: {tuned} problem(s)")
+    print(f"autotune cache counters: {st['hits']} hit(s) / "
+          f"{st['misses']} miss(es)")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,9 +7,15 @@ lowers through the kernel dispatch engine: on TPU the registry resolves
 the layout to the ``kernels/nm_spmm`` Pallas kernel, on CPU the jnp
 reference path runs (force kernels with REPRO_KERNEL_BACKEND=interpret).
 
-Run: PYTHONPATH=src python examples/serve_compressed.py
+``--quantize int8`` additionally stores the compressed values as int8
+with per-channel scales — the engine then serves the decode loop through
+the ``nm_spmm_int8`` entry on kernel backends (jnp dequantize reference
+elsewhere) at a further ~2x weight-byte reduction over bf16 values.
+
+Run: PYTHONPATH=src python examples/serve_compressed.py [--quantize int8]
 """
 
+import argparse
 import dataclasses
 import time
 
@@ -17,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
+from repro.core.quantize import quantize_tree
 from repro.core.sparse_linear import SparsityConfig
 from repro.kernels import dispatch as kdispatch
 from repro.launch.serve import _dispatch_report
@@ -27,11 +34,18 @@ BATCH = 4
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quantize", default=None, choices=["int8"],
+                    help="serve int8 values + per-channel scales")
+    args = ap.parse_args()
     cfg = get_smoke_config("internlm2_1_8b").with_sparsity(
         SparsityConfig(n=2, m=4, mode="compressed"))
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.quantize:
+        params = quantize_tree(params)
     n_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
-    print(f"serving {cfg.name} (reduced) with 2:4-compressed weights "
+    print(f"serving {cfg.name} (reduced) with 2:4-compressed "
+          f"{args.quantize or 'bf16'} weights "
           f"({n_bytes/1e6:.2f} MB resident)")
     print("dispatch engine plan:")
     for line in _dispatch_report(params, BATCH, cfg.sparsity,

@@ -4,9 +4,10 @@
 - ``rowwise``: unstructured -> row-wise N:M lossless cover (paper §III-D/V-E)
 - ``ste``: SR-STE sparse training
 - ``sparse_linear``: the user-facing projection with 4 execution modes
+- ``quantize``: int8 values + per-channel scales (VNNI-lineage storage)
 """
 
-from . import nm, rowwise, ste, sparse_linear
+from . import nm, quantize, rowwise, ste, sparse_linear
 from .nm import (
     NMCompressed,
     compress_nm,
@@ -25,6 +26,15 @@ from .rowwise import (
     rowwise_matmul_ref,
     rowwise_params,
     rowwise_tiers,
+)
+from .quantize import (
+    dequantize,
+    is_linear_leaf,
+    is_quantized,
+    quantize_linear,
+    quantize_per_channel,
+    quantize_rows,
+    quantize_tree,
 )
 from .sparse_linear import (
     SparsityConfig,

@@ -1,0 +1,141 @@
+"""Int8 weight quantization for serving layouts (the VNNI-lineage path).
+
+The paper's engine extends the VNNI/TMUL dense int8 lineage: tile
+registers hold low-precision values next to 2-bit N:M metadata.  This
+module is the storage side of that model for every SparseLinear serving
+layout:
+
+- **weights** are quantized offline (at ``convert_to_serving`` time) to
+  int8 with **per-output-channel symmetric scales**:
+  ``w ~= q.astype(f32) * scale`` with ``scale = absmax(channel) / 127``;
+- **activations** are quantized dynamically per flattened batch row just
+  before an int8 kernel runs (``quantize_rows``), so the MXU contracts
+  int8 x int8 into an int32 accumulator and the output is dequantized
+  once, on the way out: ``y = acc * x_scale[:, None] * w_scale[None, :]``.
+
+A quantized layout is an ordinary params dict with one extra ``"scale"``
+leaf (``(O,)`` float32), so it checkpoints, shards, and jits like every
+other linear layout and ``iter_linear_items`` / the dispatch engine
+recognize it structurally.  N:M metadata is untouched: int8 values +
+2-bit indices is exactly the tile-register storage model the paper
+assumes, and the compression/pruning step stays dtype-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SCALE_KEY",
+    "is_quantized",
+    "is_linear_leaf",
+    "quantize_per_channel",
+    "dequantize",
+    "quantize_rows",
+    "quantize_linear",
+    "quantize_tree",
+]
+
+SCALE_KEY = "scale"
+
+_QMAX = 127.0  # symmetric int8: values in [-127, 127], -128 unused
+
+
+def is_quantized(params: Dict[str, Any]) -> bool:
+    """Structural test: quantized layouts carry a per-channel scale leaf."""
+    return isinstance(params, dict) and SCALE_KEY in params
+
+
+def is_linear_leaf(tree: Any) -> bool:
+    """One flat SparseLinear layout dict (dense ``{"w"}`` possibly with a
+    ``scale``, compressed, or gather).  THE shared structural detection:
+    ``dispatch.iter_linear_items`` and :func:`quantize_tree` both key off
+    it, so the engine's tree walk and the quantizer cannot drift.  A
+    rowwise container is NOT a leaf here — its nested tier segments are
+    (the walker recurses; the quantizer handles the nest explicitly).
+    """
+    return isinstance(tree, dict) and (
+        "meta_packed" in tree or "gather_idx" in tree
+        or set(tree) - {SCALE_KEY} == {"w"})
+
+
+def quantize_per_channel(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization along the contraction axis.
+
+    ``w``: ``(..., K, O)`` float weights (leading dims are stacked
+    layers).  Returns ``(q, scale)`` with ``q`` int8 of the same shape
+    and ``scale`` ``(..., O)`` float32 such that
+    ``dequantize(q, scale) ~= w`` with per-channel absolute error at
+    most ``absmax(channel) / 127``.
+    """
+    w32 = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(w32), axis=-2)                  # (..., O)
+    scale = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny) / _QMAX
+    q = jnp.clip(jnp.round(w32 / scale[..., None, :]), -_QMAX, _QMAX)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """``(..., K, O)`` int8 + ``(..., O)`` scales -> float32 weights."""
+    return q.astype(jnp.float32) * scale[..., None, :]
+
+
+def quantize_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic per-row symmetric int8 quantization of activations.
+
+    ``x``: ``(B, K)`` float.  Returns ``(x_q, x_scale)`` with ``x_q``
+    int8 ``(B, K)`` and ``x_scale`` ``(B, 1)`` float32.  All-zero rows
+    (idle batch slots) get a tiny nonzero scale so the division is safe.
+    """
+    x32 = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)   # (B, 1)
+    scale = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny) / _QMAX
+    q = jnp.clip(jnp.round(x32 / scale), -_QMAX, _QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_linear(params: Dict[str, Any]) -> Dict[str, Any]:
+    """Quantize one SparseLinear serving leaf (any layout) to int8.
+
+    dense ``{"w"}``, compressed ``{"values", "meta_packed"}`` and gather
+    ``{"values", "gather_idx"}`` layouts all quantize their float operand
+    per output channel; metadata/index leaves pass through unchanged.
+    Rowwise layouts quantize each nested tier segment with its own
+    scales.  Idempotent: an already-quantized leaf is returned as-is.
+    """
+    if is_quantized(params):
+        return params
+    if "rowwise" in params:
+        return {
+            "rowwise": {k: quantize_linear(v)
+                        for k, v in params["rowwise"].items()},
+            "inv_perm": params["inv_perm"],
+        }
+    key = "w" if "w" in params else "values"
+    q, scale = quantize_per_channel(params[key])
+    out = dict(params)
+    out[key] = q
+    out[SCALE_KEY] = scale
+    return out
+
+
+def quantize_tree(tree):
+    """Quantize every SparseLinear leaf in a model params tree to int8.
+
+    Keys off :func:`is_linear_leaf` — the same structural detection
+    ``dispatch.iter_linear_items`` uses — so embeddings, norms, routers,
+    and other raw-array leaves are left untouched.  Stacked-layer leading
+    dims are preserved (scales become ``(L, O)``).
+    """
+    if isinstance(tree, dict):
+        if "rowwise" in tree or is_linear_leaf(tree):
+            return quantize_linear(tree)
+        return {k: quantize_tree(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [quantize_tree(v) for v in tree]
+    if isinstance(tree, tuple):
+        return tuple(quantize_tree(v) for v in tree)
+    return tree

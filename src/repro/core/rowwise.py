@@ -214,8 +214,11 @@ def rowwise_apply(
     for key in sorted(segs, key=lambda k: int(k[1:])):
         n = int(key[1:])
         scfg = SparsityConfig(n=n, m=cfg.m, mode="compressed")
-        outs.append(sparse_matmul(x.astype(segs[key]["values"].dtype),
-                                  segs[key], scfg, shard=shard,
+        # int8-quantized segments keep float activations (the engine owns
+        # activation quantization); float segments cast x to match
+        vdt = segs[key]["values"].dtype
+        xin = x if vdt == jnp.int8 else x.astype(vdt)
+        outs.append(sparse_matmul(xin, segs[key], scfg, shard=shard,
                                   dispatch=dispatch))
     y_perm = jnp.concatenate(outs, axis=-1)
     return jnp.take(y_perm, params["inv_perm"], axis=-1)

@@ -183,23 +183,40 @@ def apply_linear(
 
 
 def convert_to_serving(
-    params: Dict[str, Any], cfg: SparsityConfig, target_mode: str = "compressed"
+    params: Dict[str, Any], cfg: SparsityConfig, target_mode: str = "compressed",
+    quantize: Optional[str] = None,
 ) -> Dict[str, Any]:
-    """Offline conversion: dense/masked trained weights -> serving layout."""
+    """Offline conversion: dense/masked trained weights -> serving layout.
+
+    ``quantize="int8"`` additionally quantizes the layout's float operand
+    to int8 with per-output-channel symmetric scales (all serving modes,
+    dense and rowwise included) — the VNNI-lineage storage format the
+    int8 kernel path consumes.  Quantization happens after pruning and
+    compression, so the scales are computed on the kept values.
+    """
+    if quantize not in (None, "int8"):
+        raise ValueError(f"unknown quantize target {quantize!r}")
+
+    def _q(layout: Dict[str, Any]) -> Dict[str, Any]:
+        if quantize is None:
+            return layout
+        from .quantize import quantize_linear
+        return quantize_linear(layout)
+
     if "w" not in params:
-        return params
+        return _q(params)
     w = params["w"]
     if not cfg.is_sparse or target_mode == "dense":
-        return {"w": w}
+        return _q({"w": w})
     pruned, _ = nm.prune_nm(w, cfg.n, cfg.m)
     if target_mode == "compressed":
         c = nm.compress_nm(pruned, cfg.n, cfg.m)
-        return {"values": c.values, "meta_packed": nm.pack_meta(c.meta)}
+        return _q({"values": c.values, "meta_packed": nm.pack_meta(c.meta)})
     if target_mode == "rowwise":
         # lossless per-channel tier cover; serving layout is a nested dict
         # of plain compressed segments (pytree-friendly, engine-dispatchable)
         from .rowwise import rowwise_compress, rowwise_params
-        return rowwise_params(rowwise_compress(w, cfg.m))
+        return _q(rowwise_params(rowwise_compress(w, cfg.m)))
     if target_mode == "gather":
         # lane-aligned conversion: vote a shared in-block index set per block
         k, o = w.shape
@@ -210,5 +227,5 @@ def convert_to_serving(
         kc = idx.shape[0]
         blk = (jnp.arange(kc, dtype=jnp.int32) // cfg.n) * cfg.m
         vals = w.reshape(k, o)[blk + idx, :]
-        return {"values": vals, "gather_idx": idx}
+        return _q({"values": vals, "gather_idx": idx})
     raise ValueError(f"unknown target {target_mode}")

@@ -52,7 +52,11 @@ _STATS = {"hits": 0, "misses": 0}
 
 
 def cache_key(kernel: str, b: int, ke: int, o: int, n: int, m: int, dtype) -> str:
-    return f"{kernel}/b{b}_ke{ke}_o{o}_n{n}m{m}_{jax.numpy.dtype(dtype).name}"
+    """Deterministic per-problem key; dtype is a first-class axis (an int8
+    problem and its fp32 twin must never share tuned blocks)."""
+    from repro.kernels.registry import dtype_name
+
+    return f"{kernel}/b{b}_ke{ke}_o{o}_n{n}m{m}_{dtype_name(dtype)}"
 
 
 def device_kind() -> str:

@@ -24,6 +24,18 @@ no collective.  The jnp reference remains the fallback whenever the local
 shape doesn't fit a kernel or a spec slices the N:M metadata axis
 non-divisibly.
 
+dtype is a dispatch axis: int8-quantized layouts (an extra per-channel
+``"scale"`` leaf next to int8 values — see ``repro.core.quantize``) plan
+with ``dtype=int8`` and resolve to the VNNI-lineage ``*_int8`` kernel
+entries, which quantize activations per row on the way in, contract
+int8 x int8 into int32, and dequantize once on the way out.  The jnp
+dequantize-reference formulation is their fallback — under ``jax.grad``,
+when the int8 tiling constraints don't fit (int8 contraction blocks are
+multiples of the 32-row sublane quantum), and under any shard spec
+(int8 under shard_map is a tracked follow-on).  Autotune cache keys
+carry the dtype, so an int8 problem never shares tuned blocks with its
+fp32 twin.
+
 Block sizes come from the autotuner (in-process cache + JSON store under
 ``experiments/autotune/``, keyed by device kind) when enabled, else from
 per-problem fitting.
@@ -44,9 +56,11 @@ from jax.interpreters import ad
 from jax.sharding import PartitionSpec as P
 
 from repro.core import nm
+from repro.core import quantize as quant
 from repro.core.ste import srste_prune
 from repro.kernels import autotune, registry
-from repro.kernels.registry import KernelEntry, largest_fitting_block
+from repro.kernels.registry import (KernelEntry, dtype_name,
+                                    largest_fitting_block)
 
 __all__ = [
     "DispatchConfig",
@@ -215,8 +229,16 @@ def describe(d: DispatchDecision) -> str:
 # jnp reference formulations (the engine's always-available fallback tier)
 # ---------------------------------------------------------------------------
 
+def _deq(params, w):
+    """Dequantize-reference semantics for int8 layouts: the float operand
+    the kernel-free path (and autodiff) contracts against."""
+    if quant.SCALE_KEY in params:
+        return quant.dequantize(w, params[quant.SCALE_KEY])
+    return w
+
+
 def _jnp_dense(x2, params, cfg, g):
-    w = params["w"]
+    w = _deq(params, params["w"])
     if cfg.mode == "masked" and cfg.is_sparse:
         w = srste_prune(w, cfg.n, cfg.m, cfg.srste_lam)
     return x2 @ g(w).astype(x2.dtype)
@@ -224,7 +246,7 @@ def _jnp_dense(x2, params, cfg, g):
 
 def _jnp_compressed(x2, params, cfg, g):
     meta = nm.unpack_meta(params["meta_packed"])
-    w = nm.decompress(g(params["values"]), meta, cfg.n, cfg.m)
+    w = nm.decompress(g(_deq(params, params["values"])), meta, cfg.n, cfg.m)
     return x2 @ w.astype(x2.dtype)
 
 
@@ -233,7 +255,7 @@ def _jnp_gather(x2, params, cfg, g):
     kc = idx.shape[0]
     blk = (jnp.arange(kc, dtype=jnp.int32) // cfg.n) * cfg.m
     x_g = jnp.take(x2, blk + idx, axis=-1)
-    return x_g @ g(params["values"]).astype(x2.dtype)
+    return x_g @ g(_deq(params, params["values"])).astype(x2.dtype)
 
 
 _JNP_IMPL: Dict[str, Callable] = {
@@ -266,7 +288,20 @@ def _enumerate(b, ke, o, ke_multiple):
     return out
 
 
+def _is_int8(dtype) -> bool:
+    return jnp.dtype(dtype) == jnp.int8
+
+
+# int8 packs 4x more values per 32-bit lane register than fp32, so the
+# sublane quantum of an int8 operand tile is 32 rows (vs 8 for fp32) —
+# int8 contraction blocks must be multiples of 32, and the float entries
+# decline int8 problems outright (casting would break the storage model).
+_INT8_SUBLANE = 32
+
+
 def _fit_tile_gemm(b, ke, o, n, m, dtype):
+    if _is_int8(dtype):
+        return None
     bb = largest_fitting_block(b, 128)
     bo = largest_fitting_block(o, 128)
     bke = largest_fitting_block(ke, 512)
@@ -291,7 +326,7 @@ def _nm_ke_multiple(n: int) -> int:
 
 
 def _fit_nm_spmm(b, ke, o, n, m, dtype):
-    if m != 4:
+    if m != 4 or _is_int8(dtype):
         return None  # kernel fixes M=4 (paper's detailed design)
     bb = largest_fitting_block(b, 128)
     bo = largest_fitting_block(o, 128)
@@ -312,7 +347,7 @@ def _run_nm_spmm(x2, params, cfg, g, blocks, interpret, out_dtype):
 
 
 def _fit_nm_gather(b, ke, o, n, m, dtype):
-    if m != 4:
+    if m != 4 or _is_int8(dtype):
         return None
     bb = largest_fitting_block(b, 128)
     bo = largest_fitting_block(o, 128)
@@ -350,6 +385,107 @@ registry.register(KernelEntry(
     name="nm_spmm_gather", mode="gather",
     fit_blocks=_fit_nm_gather, run=_run_nm_gather,
     candidates=lambda b, ke, o, n, m, dtype: _enumerate(b, ke, o, 4),
+))
+
+
+# --- int8 (VNNI-lineage) entries: int8 values x int8 row-quantized
+# activations contracted into int32, dequantized once on the way out.
+# Registered at higher priority; their fit_blocks only accept int8
+# problems, so float dispatch is untouched.
+
+def _int8_ke_multiple(n: int) -> int:
+    # the compressed values tile (block_kc = block_ke*n/4 rows) must hit
+    # the 32-row int8 sublane quantum: block_ke*n % 128 == 0.  This also
+    # covers meta packing (block_ke*n % 16) and the dense/gather cases.
+    return (4 * _INT8_SUBLANE) // math.gcd(n, 4 * _INT8_SUBLANE)
+
+
+def _fit_tile_gemm_int8(b, ke, o, n, m, dtype):
+    if not _is_int8(dtype):
+        return None
+    bb = largest_fitting_block(b, 128)
+    bo = largest_fitting_block(o, 128)
+    bke = largest_fitting_block(ke, 512, _INT8_SUBLANE)
+    if bb is None or bo is None or bke is None:
+        return None
+    return (bb, bke, bo)
+
+
+def _run_tile_gemm_int8(x2, params, cfg, g, blocks, interpret, out_dtype):
+    from repro.kernels.tile_gemm.kernel import tile_gemm_int8
+
+    bb, bke, bo = blocks
+    xq, xs = quant.quantize_rows(x2)
+    ws = params[quant.SCALE_KEY].reshape(1, -1)
+    return tile_gemm_int8(xq, g(params["w"]), xs, ws,
+                          block_b=bb, block_k=bke, block_o=bo,
+                          out_dtype=out_dtype, interpret=interpret)
+
+
+def _fit_nm_spmm_int8(b, ke, o, n, m, dtype):
+    if m != 4 or not _is_int8(dtype):
+        return None
+    bb = largest_fitting_block(b, 128)
+    bo = largest_fitting_block(o, 128)
+    bke = largest_fitting_block(ke, 512, _int8_ke_multiple(n))
+    if bb is None or bo is None or bke is None:
+        return None
+    return (bb, bke, bo)
+
+
+def _run_nm_spmm_int8(x2, params, cfg, g, blocks, interpret, out_dtype):
+    from repro.kernels.nm_spmm.kernel import nm_spmm_int8
+
+    bb, bke, bo = blocks
+    xq, xs = quant.quantize_rows(x2)
+    ws = params[quant.SCALE_KEY].reshape(1, -1)
+    return nm_spmm_int8(xq, g(params["values"]), params["meta_packed"],
+                        xs, ws, cfg.n,
+                        block_b=bb, block_o=bo, block_ke=bke,
+                        out_dtype=out_dtype, interpret=interpret)
+
+
+def _fit_nm_gather_int8(b, ke, o, n, m, dtype):
+    if m != 4 or not _is_int8(dtype):
+        return None
+    bb = largest_fitting_block(b, 128)
+    bo = largest_fitting_block(o, 128)
+    bke = largest_fitting_block(ke, 512, _int8_ke_multiple(n))
+    if bb is None or bo is None or bke is None:
+        return None
+    return (bb, bke, bo)
+
+
+def _run_nm_gather_int8(x2, params, cfg, g, blocks, interpret, out_dtype):
+    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_int8
+
+    bb, bke, bo = blocks
+    xq, xs = quant.quantize_rows(x2)
+    ws = params[quant.SCALE_KEY].reshape(-1, 1)
+    idx = params["gather_idx"].reshape(-1, 1)
+    y_t = nm_spmm_gather_int8(xq.T, g(params["values"]), idx, xs.T, ws,
+                              cfg.n, block_b=bb, block_o=bo, block_ke=bke,
+                              out_dtype=out_dtype, interpret=interpret)
+    return y_t.T
+
+
+registry.register(KernelEntry(
+    name="tile_gemm_int8", mode="dense", priority=10,
+    fit_blocks=_fit_tile_gemm_int8, run=_run_tile_gemm_int8,
+    candidates=lambda b, ke, o, n, m, dtype: _enumerate(
+        b, ke, o, _INT8_SUBLANE),
+))
+registry.register(KernelEntry(
+    name="nm_spmm_int8", mode="compressed", priority=10,
+    fit_blocks=_fit_nm_spmm_int8, run=_run_nm_spmm_int8,
+    candidates=lambda b, ke, o, n, m, dtype: _enumerate(
+        b, ke, o, _int8_ke_multiple(n)),
+))
+registry.register(KernelEntry(
+    name="nm_spmm_gather_int8", mode="gather", priority=10,
+    fit_blocks=_fit_nm_gather_int8, run=_run_nm_gather_int8,
+    candidates=lambda b, ke, o, n, m, dtype: _enumerate(
+        b, ke, o, _int8_ke_multiple(n)),
 ))
 
 
@@ -499,6 +635,9 @@ def plan(
         return _jnp("under autodiff: kernels carry no VJP rules")
     if shard is not None and all(s == 1 for s in shard.shards):
         shard = None  # trivial slicing: single-device execution class
+    if shard is not None and _is_int8(dtype):
+        return _jnp("int8 under shard_map is a tracked follow-on: "
+                    "dequantize reference runs under the mesh")
     if sharded and shard is None:
         return _jnp("mesh env active with no use-site shard spec: "
                     "XLA owns the layout")
@@ -525,7 +664,7 @@ def plan(
         dims = local if shard is not None else (b, ke, o)
         return _jnp(f"no registered kernel fits {where}(b={dims[0]},"
                     f"ke={dims[1]},o={dims[2]},{n}:{m},"
-                    f"{jnp.dtype(dtype).name})")
+                    f"{dtype_name(dtype)})")
     entry, blocks = sel
 
     def _decision(blocks, reason, source):
@@ -576,11 +715,12 @@ def iter_linear_items(tree, _names=()):
     build on it so the detection can't drift between them.
     """
     if isinstance(tree, dict):
-        if ("meta_packed" in tree or "gather_idx" in tree
-                or set(tree) == {"w"}):
+        if quant.is_linear_leaf(tree):
             leaf = {}
             for k, v in tree.items():
-                nd = 1 if k == "gather_idx" else 2
+                # per-channel quantization scales and gather indices are
+                # 1-D per layer; everything else is a 2-D operand
+                nd = 1 if k in ("gather_idx", "scale") else 2
                 leaf[k] = (v.reshape((-1,) + tuple(v.shape[-nd:]))[0]
                            if v.ndim > nd else v)
             yield _names, leaf
@@ -663,7 +803,9 @@ def pretune(params_tree, batch: int, cfg,
             continue
         seen.add(sig)
         dt = leaf.get("values", leaf.get("w")).dtype
-        x = jnp.zeros((batch, ke), dt)
+        # int8-quantized leaves plan on dtype=int8 but consume float
+        # activations (the engine row-quantizes them itself)
+        x = jnp.zeros((batch, ke), jnp.float32 if dt == jnp.int8 else dt)
         mode = _mode_of(leaf, lcfg)
         _, o = _problem_dims(mode, leaf, x)
         shard = leaf_shard_spec(names, cfg)
@@ -755,9 +897,13 @@ def sparse_matmul(
     x2 = x.reshape(-1, x.shape[-1])
     b = x2.shape[0]
     ke, o = _problem_dims(mode, params, x2)
+    # the dtype axis the engine plans on: int8 for quantized layouts
+    # (the weight operand drives kernel selection), else the activation
+    # dtype as before
+    exec_dtype = jnp.int8 if quant.is_quantized(params) else x2.dtype
 
     decision = plan(
-        mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m, dtype=x2.dtype,
+        mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m, dtype=exec_dtype,
         dispatch=dcfg,
         differentiating=_under_autodiff(x2, params),
         sharded=_mesh_active(),
@@ -780,8 +926,8 @@ def sparse_matmul(
         if (dcfg.autotune and decision.blocks_source == "fitted"
                 and not isinstance(x2, jax.core.Tracer)):
             key = autotune.cache_key(entry.name, lb, lke, lo,
-                                     cfg.n, cfg.m, x2.dtype)
-            cands = entry.candidates(lb, lke, lo, cfg.n, cfg.m, x2.dtype)
+                                     cfg.n, cfg.m, exec_dtype)
+            cands = entry.candidates(lb, lke, lo, cfg.n, cfg.m, exec_dtype)
             tuned = autotune.tune(runner, cands, backend=decision.backend,
                                   key=key, persist=dcfg.persist_autotune)
             if tuned is not None:
@@ -793,8 +939,9 @@ def sparse_matmul(
     # Autotune on first concrete sighting of a problem (never mid-trace).
     if (dcfg.autotune and decision.blocks_source == "fitted"
             and not isinstance(x2, jax.core.Tracer)):
-        key = autotune.cache_key(entry.name, b, ke, o, cfg.n, cfg.m, x2.dtype)
-        cands = entry.candidates(b, ke, o, cfg.n, cfg.m, x2.dtype)
+        key = autotune.cache_key(entry.name, b, ke, o, cfg.n, cfg.m,
+                                 exec_dtype)
+        cands = entry.candidates(b, ke, o, cfg.n, cfg.m, exec_dtype)
         tuned = autotune.tune(
             lambda blk: entry.run(x2, params, cfg, g, blk, interpret, x2.dtype),
             cands, backend=decision.backend, key=key,

@@ -123,3 +123,78 @@ def nm_spmm(
         ),
         interpret=interpret,
     )(x, values, meta_packed)
+
+
+def _spmm_int8_kernel(x_ref, v_ref, pm_ref, xs_ref, ws_ref, o_ref, acc_ref,
+                      *, n: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = _unpack_meta_tile(pm_ref[...])
+    # the M:1 mux is exact in int8 too: at most one nonzero per expanded
+    # slot, and values stay in [-127, 127]
+    w = _decompress_tile(v_ref[...], idx, n)
+    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        deq = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+        o_ref[...] = deq.astype(o_ref.dtype)
+
+
+def nm_spmm_int8(
+    x_q: jax.Array,
+    values: jax.Array,
+    meta_packed: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    n: int,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Int8 VNNI-lineage variant: Y = (x_q*xs) @ dec(values*ws, meta).
+
+    x_q: (B, K_eff) int8; values: (K_c, O) int8; meta_packed as in
+    :func:`nm_spmm`; x_scale: (B, 1) f32; w_scale: (1, O) f32.  The
+    compressed int8 values expand through the same in-VMEM M:1 mux, the
+    MXU contracts int8 x int8 into an int32 VMEM accumulator, and both
+    scale vectors are applied once at the flush — int8 values + 2-bit
+    metadata is exactly the paper's tile-register storage model.
+    """
+    b, ke = x_q.shape
+    kc, o = values.shape
+    assert ke * n == kc * 4, (x_q.shape, values.shape, n)
+    assert meta_packed.shape == (kc // 4, o), meta_packed.shape
+    assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
+        x_scale.shape, w_scale.shape)
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    assert block_kc % 4 == 0, "block_ke*n/4 must be a multiple of 4 for packing"
+    nk = ke // block_ke
+    return pl.pallas_call(
+        lambda xr, vr, pr, xsr, wsr, orf, acc: _spmm_int8_kernel(
+            xr, vr, pr, xsr, wsr, orf, acc, n=n, nk=nk),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=[
+            pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, values, meta_packed, x_scale, w_scale)

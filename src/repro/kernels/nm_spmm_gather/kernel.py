@@ -96,3 +96,91 @@ def nm_spmm_gather(
         ),
         interpret=interpret,
     )(x_t, values, idx)
+
+
+def _gather_int8_kernel(xt_ref, v_ref, idx_ref, xs_ref, ws_ref, o_ref,
+                        acc_ref, *, n: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xt = xt_ref[...]                     # (BKe, BB) int8
+    bke, bb = xt.shape
+    nb = bke // 4
+    x3 = xt.reshape(nb, 4, bb)
+    idx = idx_ref[...]
+    i3 = idx.reshape(nb, n, 1)
+    slices = []
+    for s in range(n):
+        i_s = i3[:, s, :]
+        # exact in int8: one selected candidate per block position
+        acc = jnp.zeros((nb, bb), xt.dtype)
+        for j in range(4):
+            acc = acc + jnp.where(i_s == j, x3[:, j, :], jnp.zeros_like(acc))
+        slices.append(acc)
+    x_g = jnp.stack(slices, axis=1).reshape(nb * n, bb)
+    acc_ref[...] += jax.lax.dot_general(
+        v_ref[...], x_g,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        deq = acc_ref[...].astype(jnp.float32) * ws_ref[...] * xs_ref[...]
+        o_ref[...] = deq.astype(o_ref.dtype)
+
+
+def nm_spmm_gather_int8(
+    x_t: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    n: int,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Int8 reduced-K variant: Y_t = dec(values*ws, idx)ᵀ @ (x_q*xs).
+
+    x_t: (K_eff, B) int8 K-major activations; values: (K_c, O) int8;
+    x_scale: (1, B) f32 per activation row; w_scale: (O, 1) f32
+    per-channel.  The sublane gather selects int8 candidates exactly, the
+    reduced-K contraction runs int8 x int8 into an int32 accumulator,
+    and the flush dequantizes the (O, B) tile once.
+    """
+    ke, b = x_t.shape
+    kc, o = values.shape
+    assert ke * n == kc * 4, (x_t.shape, values.shape, n)
+    assert idx.shape == (kc, 1), idx.shape
+    assert x_scale.shape == (1, b) and w_scale.shape == (o, 1), (
+        x_scale.shape, w_scale.shape)
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    nk = ke // block_ke
+    return pl.pallas_call(
+        lambda xr, vr, ir, xsr, wsr, orf, acc: _gather_int8_kernel(
+            xr, vr, ir, xsr, wsr, orf, acc, n=n, nk=nk),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=[
+            pl.BlockSpec((block_ke, block_b), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_kc, 1), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((1, block_b), lambda i, j, kk: (0, i)),
+            pl.BlockSpec((block_o, 1), lambda i, j, kk: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_o, block_b), lambda i, j, kk: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((o, b), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_o, block_b), jnp.int32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_t, values, idx, x_scale, w_scale)

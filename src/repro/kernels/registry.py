@@ -9,6 +9,12 @@ dtype) problems it can legally tile.  ``select`` walks the entries in
 priority order and returns the first (entry, blocks) that fits; a ``None``
 result means "no kernel applies, use the jnp reference formulation".
 
+dtype is a real selection axis, not a cast: the int8 (VNNI-lineage)
+entries fit only int8-quantized problems, and because int8 packs 4x more
+values per 32-bit lane register than fp32, their legal contraction
+blocks are multiples of the 32-row sublane quantum (vs 8 for fp32) — the
+float entries decline int8 problems rather than silently upcasting.
+
 Backends
 --------
 ``tpu``        compiled Mosaic execution (real TPU devices present)
@@ -33,6 +39,7 @@ __all__ = [
     "detect_backend",
     "resolve_backend",
     "largest_fitting_block",
+    "dtype_name",
     "KERNEL_BACKENDS",
 ]
 
@@ -150,3 +157,14 @@ def largest_fitting_block(dim: int, cap: int, multiple_of: int = 1) -> Optional[
         if dim % c == 0 and c % multiple_of == 0:
             return c
     return None
+
+
+def dtype_name(dtype) -> str:
+    """Canonical dtype name for dispatch reasons, reports, and cache keys.
+
+    ``dtype`` may be a jnp scalar type (``jnp.float32``), a numpy dtype,
+    or a string; all normalize to the short numpy name ("float32",
+    "int8", ...) instead of the raw ``<class 'jax.numpy.float32'>``
+    repr, so dispatch-plan reports and test asserts are stable.
+    """
+    return jax.numpy.dtype(dtype).name

@@ -4,6 +4,11 @@ C (B, O) fp32 += X (B, K) bf16 @ W (K, O) bf16, blocked for VMEM with an
 fp32 accumulator tile held in VMEM across the K grid (the "output
 forwarding" adaptation: the C tile never round-trips to HBM between
 accumulating steps — see DESIGN.md §2).
+
+``tile_gemm_int8`` is the VNNI-lineage variant: int8 x int8 tiles
+contract into an **int32** accumulator held in VMEM across the K grid,
+and the output is dequantized exactly once on the final flush with the
+per-row activation scales and per-channel weight scales.
 """
 
 from __future__ import annotations
@@ -63,3 +68,67 @@ def tile_gemm(
         ),
         interpret=interpret,
     )(x, w)
+
+
+def _gemm_int8_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        deq = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+        o_ref[...] = deq.astype(o_ref.dtype)
+
+
+def tile_gemm_int8(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = (x_q * x_scale) @ (w_q * w_scale), contracted in int8.
+
+    x_q: (B, K) int8, w_q: (K, O) int8,
+    x_scale: (B, 1) f32 per-row, w_scale: (1, O) f32 per-channel.
+    The int32 accumulation over K is exact; the two scale vectors are
+    applied once, at the flush.
+    """
+    b, k = x_q.shape
+    k2, o = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
+        x_scale.shape, w_scale.shape)
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_k = min(block_k, k)
+    assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
+    nk = k // block_k
+    return pl.pallas_call(
+        lambda xr, wr, xsr, wsr, orf, acc: _gemm_int8_kernel(
+            xr, wr, xsr, wsr, orf, acc, nk=nk),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, w_q, x_scale, w_scale)

@@ -2,14 +2,21 @@
 
     python -m repro.launch.serve --arch internlm2_1_8b --smoke \
         [--sparsity 2:4 --mode compressed|gather|rowwise] [--requests 16] \
-        [--kernel-backend auto|tpu|interpret|jnp] [--autotune] \
-        [--mesh 2x4]
+        [--quantize int8] [--kernel-backend auto|tpu|interpret|jnp] \
+        [--autotune] [--mesh 2x4]
 
 Weights can live in any SparseLinear serving layout (dense | compressed |
 gather | rowwise).  Every projection lowers through the kernel dispatch
 engine (``repro.kernels.dispatch``): on TPU the registry resolves the
 layouts to the ``nm_spmm*`` / ``tile_gemm`` Pallas kernels; elsewhere (or
 with ``--kernel-backend jnp``) the documented jnp reference paths run.
+
+``--quantize int8`` quantizes every linear to int8 values + per-channel
+scales (the VNNI-lineage storage format): on a kernel backend the
+``*_int8`` registry entries contract int8 x int8 into int32 and
+dequantize on the way out; the jnp dequantize reference runs everywhere
+else (including under ``--mesh`` — int8 shard_map is a tracked
+follow-on).
 
 ``--mesh DxM`` installs a (data, model) mesh: weights are placed by the
 sharding rules and every hinted linear runs its kernel PER-SHARD under
@@ -70,6 +77,9 @@ def main():
     ap.add_argument("--sparsity", default=None)
     ap.add_argument("--mode", default="compressed",
                     choices=["dense", "compressed", "gather", "rowwise"])
+    ap.add_argument("--quantize", default=None, choices=["int8"],
+                    help="quantize every linear's values to int8 with "
+                         "per-channel scales (VNNI-lineage serving path)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="install a (data, model) mesh, e.g. 2x4 — run "
                          "kernels per-shard via shard_map (needs that many "
@@ -102,9 +112,14 @@ def main():
         n, m = map(int, args.sparsity.split(":"))
         cfg = cfg.with_sparsity(SparsityConfig(n=n, m=m, mode=args.mode))
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.quantize:
+        from repro.core.quantize import quantize_tree
+
+        params = quantize_tree(params)
     nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
     print(f"serving {cfg.name}: {nbytes/1e6:.1f} MB weights "
-          f"({args.sparsity or 'dense'}/{args.mode})")
+          f"({args.sparsity or 'dense'}/{args.mode}"
+          f"{'/' + args.quantize if args.quantize else ''})")
 
     # engine override + optional mesh env stay active for the whole decode
     # loop (main() owns the process lifetime: the stack closes at exit)

@@ -1,0 +1,89 @@
+"""CI perf-regression gate: CSV parsing, compare semantics, exit codes,
+and the PERF_OVERRIDE escape hatch (pure logic — no jax needed)."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.check_regression import compare, main, parse_smoke_csv
+
+SMOKE = """\
+### kernels
+kernel_backend,jnp
+kernel_BERT-L1/2:4,us_dense=1000,us_spmm_engine=800,dispatch=nm_spmm(b128/ke384/o128),weight_bytes=10->5,hbm_reduction=1.78x
+kernel_BERT-L1/1:4/int8,us_fp32=500,us_int8=400,speedup=1.25x,dispatch=nm_spmm_int8(b128/ke384/o128)
+kernel_int8-exec/2:4,dispatch=nm_spmm_int8[interpret](b128/ke512/o128),rel_err_vs_dequant_ref=0.0079
+kernels_wall_s,17.9
+"""
+
+
+def test_parse_smoke_csv_timing_fields_only():
+    rows = parse_smoke_csv(SMOKE)
+    assert rows == {
+        "kernel_BERT-L1/2:4": {"us_dense": 1000.0, "us_spmm_engine": 800.0},
+        "kernel_BERT-L1/1:4/int8": {"us_fp32": 500.0, "us_int8": 400.0},
+    }
+    # headers, wall-clock, backend tag, and timing-free rows are skipped
+    assert "kernel_backend" not in rows
+    assert "kernel_int8-exec/2:4" not in rows
+
+
+def test_compare_within_threshold_passes():
+    base = parse_smoke_csv(SMOKE)
+    cur = {k: {f: v * 1.2 for f, v in d.items()} for k, d in base.items()}
+    failures, _ = compare(cur, base, 1.25)
+    assert failures == []
+
+
+def test_compare_flags_slowdown_missing_row_and_new_row():
+    base = parse_smoke_csv(SMOKE)
+    cur = {
+        "kernel_BERT-L1/2:4": {"us_dense": 1300.0, "us_spmm_engine": 800.0},
+        "kernel_NEW/4:4": {"us_dense": 1.0},
+    }
+    failures, notes = compare(cur, base, 1.25)
+    kinds = {(row, field if field.startswith("us_") else field)
+             for row, field, _ in failures}
+    assert ("kernel_BERT-L1/2:4", "us_dense") in kinds          # 1.3x slow
+    assert ("kernel_BERT-L1/1:4/int8", "<row missing>") in kinds
+    assert any(n.startswith("new  kernel_NEW/4:4") for n in notes)
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+def test_main_update_then_check_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.delenv("PERF_OVERRIDE", raising=False)
+    csv = _write(tmp_path, "smoke.csv", SMOKE)
+    baseline = str(tmp_path / "baseline.json")
+    assert main([csv, "--baseline", baseline, "--update"]) == 0
+    assert set(json.loads(Path(baseline).read_text())) == {
+        "kernel_BERT-L1/2:4", "kernel_BERT-L1/1:4/int8", "_meta"}
+    # the provenance block is never treated as a gated row
+    assert main([csv, "--baseline", baseline]) == 0
+
+
+def test_main_fails_on_regression_unless_overridden(tmp_path, monkeypatch):
+    monkeypatch.delenv("PERF_OVERRIDE", raising=False)
+    baseline = str(tmp_path / "baseline.json")
+    assert main([_write(tmp_path, "base.csv", SMOKE),
+                 "--baseline", baseline, "--update"]) == 0
+    slow = SMOKE.replace("us_dense=1000", "us_dense=1500")
+    csv = _write(tmp_path, "slow.csv", slow)
+    assert main([csv, "--baseline", baseline]) == 1
+    assert main([csv, "--baseline", baseline, "--threshold", "2.0"]) == 0
+    monkeypatch.setenv("PERF_OVERRIDE", "1")
+    assert main([csv, "--baseline", baseline]) == 0
+
+
+def test_main_errors_without_rows_or_baseline(tmp_path, monkeypatch):
+    monkeypatch.delenv("PERF_OVERRIDE", raising=False)
+    empty = _write(tmp_path, "empty.csv", "### kernels\nnothing here\n")
+    assert main([empty, "--baseline", str(tmp_path / "b.json")]) == 1
+    csv = _write(tmp_path, "smoke.csv", SMOKE)
+    assert main([csv, "--baseline", str(tmp_path / "missing.json")]) == 1

@@ -1,0 +1,264 @@
+"""Int8 quantized execution class: storage round-trip bounds, kernel
+parity vs fp32 within quantization tolerance for every family and N,
+dtype-aware registry selection, dtype-distinct autotune keys, and the
+dequantize-reference fallbacks (autodiff, shard specs, unfittable tiles).
+"""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SparsityConfig, apply_linear, convert_to_serving, nm
+from repro.core import quantize as q
+from repro.kernels import autotune, dispatch, registry
+
+
+def _norm_close(got, want, tol):
+    got, want = np.asarray(got, np.float32), np.asarray(want, np.float32)
+    scale = np.abs(want).max() + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale, atol=tol)
+
+
+def _w(k=128, o=64, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (k, o), jnp.float32)
+
+
+def _family_params(family, w, n):
+    """Serving-layout params for one kernel family at sparsity n:4.
+
+    Built by hand (not via convert_to_serving) so n=4 genuinely
+    exercises the compressed and gather layouts instead of degenerating
+    to dense.
+    """
+    if family == "dense":
+        return {"w": w}
+    if family == "compressed":
+        pruned, _ = nm.prune_nm(w, n, 4)
+        c = nm.compress_nm(pruned, n, 4)
+        return {"values": c.values, "meta_packed": nm.pack_meta(c.meta)}
+    if family == "gather":
+        k = w.shape[0]
+        kc = k * n // 4
+        base = jnp.arange(kc, dtype=jnp.int32) % 4
+        idx = jnp.sort(base.reshape(-1, n), axis=1).reshape(kc)
+        blk = (jnp.arange(kc, dtype=jnp.int32) // n) * 4
+        return {"values": w[blk + idx, :], "gather_idx": idx}
+    raise ValueError(family)
+
+
+# ---------------------------------------------------------------------------
+# storage: quantize -> dequantize round-trip bounds
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_error_bound_per_channel():
+    """Per-channel absolute error <= 1/127 of the channel absmax."""
+    w = _w(256, 96)
+    qv, scale = q.quantize_per_channel(w)
+    assert qv.dtype == jnp.int8 and scale.shape == (96,)
+    err = np.abs(np.asarray(q.dequantize(qv, scale)) - np.asarray(w))
+    bound = np.abs(np.asarray(w)).max(axis=0) / 127.0
+    assert (err.max(axis=0) <= bound + 1e-7).all()
+
+
+def test_quantize_rows_bound_and_zero_rows():
+    x = jnp.concatenate([jax.random.normal(jax.random.PRNGKey(1), (7, 64)),
+                         jnp.zeros((1, 64))])
+    xq, xs = q.quantize_rows(x)
+    assert xq.dtype == jnp.int8 and xs.shape == (8, 1)
+    err = np.abs(np.asarray(xq, np.float32) * np.asarray(xs)
+                 - np.asarray(x, np.float32))
+    bound = np.abs(np.asarray(x)).max(axis=1) / 127.0
+    assert (err.max(axis=1) <= bound + 1e-7).all()
+    assert not np.isnan(np.asarray(xs)).any()
+
+
+def test_convert_to_serving_quantizes_every_mode():
+    w = _w()
+    dense = convert_to_serving({"w": w}, SparsityConfig(mode="dense"),
+                               "dense", quantize="int8")
+    assert dense["w"].dtype == jnp.int8 and dense["scale"].shape == (64,)
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    comp = convert_to_serving({"w": w}, cfg, "compressed", quantize="int8")
+    assert comp["values"].dtype == jnp.int8 and "meta_packed" in comp
+    gath = convert_to_serving({"w": w}, SparsityConfig(n=2, m=4, mode="gather"),
+                              "gather", quantize="int8")
+    assert gath["values"].dtype == jnp.int8 and "gather_idx" in gath
+    rw = convert_to_serving({"w": w}, cfg, "rowwise", quantize="int8")
+    for seg in rw["rowwise"].values():
+        assert seg["values"].dtype == jnp.int8 and "scale" in seg
+    with pytest.raises(ValueError):
+        convert_to_serving({"w": w}, cfg, "compressed", quantize="fp4")
+
+
+def test_quantize_tree_touches_only_linear_leaves():
+    w = _w(64, 32)
+    tree = {
+        "embed": jnp.zeros((100, 64)),
+        "moe": {"router": jnp.zeros((64, 2)),
+                "w_in": {"w": jnp.stack([w, w])}},   # stacked experts
+        "norm": {"gamma": jnp.ones((64,))},
+    }
+    qt = q.quantize_tree(tree)
+    assert qt["embed"].dtype == tree["embed"].dtype
+    assert qt["moe"]["router"].dtype == tree["moe"]["router"].dtype
+    assert qt["norm"]["gamma"].dtype == jnp.float32
+    assert qt["moe"]["w_in"]["w"].dtype == jnp.int8
+    assert qt["moe"]["w_in"]["scale"].shape == (2, 32)   # per-layer scales
+
+
+def test_iter_linear_items_strips_stacked_scale():
+    w = _w(64, 32)
+    leaf = q.quantize_linear({"w": jnp.stack([w, w])})
+    items = dict(dispatch.iter_linear_items({"ffn": {"w_in": leaf}}))
+    got = items[("ffn", "w_in")]
+    assert got["w"].shape == (64, 32) and got["scale"].shape == (32,)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: int8 registry entries vs fp32 reference, all families x N
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["dense", "compressed", "gather"])
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_int8_kernel_parity_vs_fp32(family, n):
+    if family == "dense" and n != 4:
+        pytest.skip("dense has no sparsity axis")
+    cfg = SparsityConfig(n=n, m=4, mode=family)
+    p_fp = _family_params(family, _w(), n)
+    p_q = q.quantize_linear(p_fp)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 128))
+    with dispatch.use_dispatch(backend="jnp"):
+        y_fp = apply_linear(p_fp, x, cfg)
+        y_qref = apply_linear(p_q, x, cfg)       # dequantize reference
+    with dispatch.use_dispatch(backend="interpret"):
+        y_qk = apply_linear(p_q, x, cfg)         # int8 registry kernel
+    d = dispatch.plan_for(p_q, (32, 128), cfg, dtype=jnp.int8,
+                          dispatch=dispatch.DispatchConfig(backend="interpret"))
+    assert d.uses_kernel and d.kernel.endswith("_int8"), dispatch.describe(d)
+    # vs fp32: weight + activation quantization noise
+    _norm_close(y_qk, y_fp, 5e-2)
+    # vs the dequantize reference: only activation quantization differs
+    _norm_close(y_qk, y_qref, 3e-2)
+
+
+def test_int8_kernel_invoked_not_planned(monkeypatch):
+    import repro.kernels.nm_spmm.kernel as nm_kernel
+
+    calls = []
+    real = nm_kernel.nm_spmm_int8
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("interpret"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(nm_kernel, "nm_spmm_int8", spy)
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p_q = q.quantize_linear(_family_params("compressed", _w(64, 32), 2))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    with dispatch.use_dispatch(backend="interpret"):
+        apply_linear(p_q, x, cfg)
+    assert calls == [True]
+    calls.clear()
+    with dispatch.use_dispatch(backend="jnp"):
+        apply_linear(p_q, x, cfg)
+    assert calls == []
+
+
+# ---------------------------------------------------------------------------
+# registry: dtype is a selection axis with int8-specific tiling
+# ---------------------------------------------------------------------------
+
+def test_registry_dtype_axis_selection():
+    for mode, name in [("dense", "tile_gemm_int8"),
+                       ("compressed", "nm_spmm_int8"),
+                       ("gather", "nm_spmm_gather_int8")]:
+        sel = registry.select(mode, b=32, ke=128, o=64, n=2, m=4,
+                              dtype=jnp.int8, backend="interpret")
+        assert sel is not None and sel[0].name == name
+        # float problems must never land on the int8 entries
+        sel = registry.select(mode, b=32, ke=128, o=64, n=2, m=4,
+                              dtype=jnp.float32, backend="interpret")
+        assert sel is not None and not sel[0].name.endswith("_int8")
+
+
+def test_int8_tiling_stricter_than_fp32():
+    # ke=40: fp32 nm_spmm fits (block_ke=40 is a multiple of 8 for n=2)
+    # but no divisor of 40 hits the int8 32-row sublane quantum
+    assert registry.select("compressed", b=32, ke=40, o=64, n=2, m=4,
+                           dtype=jnp.float32, backend="interpret") is not None
+    assert registry.select("compressed", b=32, ke=40, o=64, n=2, m=4,
+                           dtype=jnp.int8, backend="interpret") is None
+    d = dispatch.plan("compressed", b=32, ke=40, o=64, n=2, m=4,
+                      dtype=jnp.int8,
+                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    assert not d.uses_kernel and "no registered kernel" in d.reason
+
+
+def test_plan_reason_uses_canonical_dtype_name():
+    """The no-entry-fits reason prints 'float32'/'int8', never the raw
+    ``<class 'jax.numpy.float32'>`` repr (stable reports + asserts)."""
+    for dt, name in [(jnp.float32, "float32"), (jnp.int8, "int8")]:
+        d = dispatch.plan("compressed", b=4, ke=100, o=32, n=1, m=4, dtype=dt,
+                          dispatch=dispatch.DispatchConfig(backend="interpret"))
+        assert not d.uses_kernel
+        assert name in d.reason and "<class" not in d.reason
+    assert registry.dtype_name(jnp.float32) == "float32"
+    assert registry.dtype_name(jnp.int8) == "int8"
+    assert registry.dtype_name("bfloat16") == "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# fallbacks: autodiff, shard specs
+# ---------------------------------------------------------------------------
+
+def test_quantized_autodiff_falls_back_to_dequant_reference():
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p_q = q.quantize_linear(_family_params("compressed", _w(64, 32), 2))
+
+    def loss(x):
+        return jnp.sum(apply_linear(p_q, x, cfg) ** 2)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    with dispatch.use_dispatch(backend="interpret"):
+        g = jax.grad(loss)(x)
+    assert g.shape == x.shape and bool(jnp.any(g != 0))
+
+
+def test_quantized_shard_spec_falls_back():
+    """int8 under shard_map is a tracked follow-on: any shard spec routes
+    the quantized problem to the jnp dequantize reference."""
+    spec = dispatch.ShardSpec(
+        mesh=types.SimpleNamespace(shape={"model": 2}), ke="model")
+    d = dispatch.plan("compressed", b=32, ke=128, o=64, n=2, m=4,
+                      dtype=jnp.int8, shard=spec,
+                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    assert not d.uses_kernel and "int8 under shard_map" in d.reason
+    # the fp32 twin of the same problem keeps the shard_map class
+    d = dispatch.plan("compressed", b=32, ke=128, o=64, n=2, m=4,
+                      dtype=jnp.float32, shard=spec,
+                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    assert d.uses_kernel and d.uses_shard_map
+
+
+# ---------------------------------------------------------------------------
+# autotune: dtype-distinct cache keys via pretune
+# ---------------------------------------------------------------------------
+
+def test_pretune_dtype_distinct_cache_keys(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p_fp = _family_params("compressed", _w(64, 32), 2)
+    tree = {"a": {"w_in": p_fp}, "b": {"w_in": q.quantize_linear(p_fp)}}
+    with dispatch.use_dispatch(backend="interpret"):
+        n_tuned = dispatch.pretune(tree, 4, cfg)
+    assert n_tuned == 2    # the int8 twin is a distinct problem
+    k_fp = autotune.cache_key("nm_spmm", 4, 64, 32, 2, 4, jnp.float32)
+    k_q = autotune.cache_key("nm_spmm_int8", 4, 64, 32, 2, 4, jnp.int8)
+    assert k_fp.endswith("float32") and k_q.endswith("int8")
+    assert autotune.lookup("interpret", k_fp) is not None
+    assert autotune.lookup("interpret", k_q) is not None
+    autotune.clear_memory_cache()
