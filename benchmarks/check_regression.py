@@ -79,6 +79,16 @@ def compare(current: Dict[str, Dict[str, float]],
     for row, base_fields in sorted(baseline.items()):
         if row.startswith("_"):
             continue  # provenance metadata, not a gated row
+        if not isinstance(base_fields, dict):
+            # a malformed/hand-edited baseline row used to surface as an
+            # AttributeError stack trace; report it as a gate failure
+            # with a pointer instead
+            failures.append((row, "<malformed baseline row, rebaseline>",
+                             None))
+            notes.append(f"FAIL {row}: baseline entry is "
+                         f"{type(base_fields).__name__}, expected a "
+                         f"field->us mapping — regenerate with --update")
+            continue
         cur_fields = current.get(row)
         if cur_fields is None:
             failures.append((row, "<row missing>", None))
@@ -87,6 +97,14 @@ def compare(current: Dict[str, Dict[str, float]],
             cur_us = cur_fields.get(field)
             if cur_us is None:
                 failures.append((row, f"{field} <field missing>", None))
+                continue
+            if not isinstance(base_us, (int, float)):
+                # same contract as a malformed row: loud, not silent
+                failures.append((row, f"{field} <malformed baseline "
+                                      f"field, rebaseline>", None))
+                notes.append(f"FAIL {row}.{field}: baseline value "
+                             f"{base_us!r} is not a number — regenerate "
+                             f"with --update")
                 continue
             if base_us <= 0:
                 continue
@@ -98,7 +116,11 @@ def compare(current: Dict[str, Dict[str, float]],
             else:
                 notes.append("ok   " + line)
     for row in sorted(set(current) - set(baseline)):
-        notes.append(f"new  {row} (not in baseline — rebaseline to guard it)")
+        # CSV rows the committed baseline has never seen must PASS with a
+        # note, never crash or fail the gate: new kernels/sweeps land
+        # first, their refreshed baseline lands in the same PR
+        notes.append(f"new  {row}: new row, no baseline — passes; "
+                     f"rebaseline to start guarding it")
     return failures, notes
 
 
@@ -138,6 +160,10 @@ def main(argv=None) -> int:
             baseline = json.load(f)
     except (OSError, ValueError) as e:
         print(f"check_regression: cannot read baseline {args.baseline}: {e}")
+        return 1
+    if not isinstance(baseline, dict):
+        print(f"check_regression: baseline {args.baseline} is not a JSON "
+              f"object — regenerate with --update")
         return 1
 
     failures, notes = compare(current, baseline, args.threshold)

@@ -238,6 +238,69 @@ def run_mesh(mesh_shape, workloads=("BERT-L1", "GPT-L1")) -> List[dict]:
     return rows
 
 
+def run_mesh_int8(mesh_shape, shape=(128, 512, 256)) -> List[dict]:
+    """Sharded int8: the quantized execution class under a mesh.
+
+    For both TP orientations (col: O@model + scale sharded alike, no
+    collective; row: K@model, int32-partial psum then one dequantize):
+    wall-clock of the jnp dequantize reference vs the per-shard
+    ``*_int8`` kernel, the engine's decision string, and parity vs the
+    reference.  Raises if the engine would route the quantized problem
+    to the reference — the smoke row IS the acceptance check that int8
+    stays on kernels under the mesh.
+    """
+    from repro.launch.mesh import make_axis_env
+    from repro.models.pjit_utils import use_axis_env
+
+    d_, m_ = mesh_shape
+    mesh = jax.make_mesh((d_, m_), ("data", "model"))
+    env = make_axis_env(mesh)
+    kb = _kernel_backend()
+    b, k, o = shape
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, k), jnp.float32)
+    w = jax.random.normal(key, (k, o), jnp.float32)
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p_q = convert_to_serving({"w": w}, cfg, "compressed", quantize="int8")
+    rows = []
+    with use_axis_env(env):
+        # the dequantize reference is hint-invariant: one timing + one
+        # parity anchor, not a fresh noisy measurement per orientation
+        t_ref = _time(jax.jit(
+            lambda x, p: kdispatch.sparse_matmul(
+                x, p, cfg,
+                dispatch=kdispatch.DispatchConfig(backend="jnp"))),
+            x, p_q)
+        y_ref = kdispatch.sparse_matmul(
+            x, p_q, cfg, dispatch=kdispatch.DispatchConfig(backend="jnp"))
+        for hint in ("col", "row"):
+            shard = kdispatch.shard_spec_from_env(hint)
+            d = kdispatch.plan_for(
+                p_q, (b, k), cfg, dtype=jnp.int8, shard=shard,
+                dispatch=kdispatch.DispatchConfig(backend=kb))
+            if not d.uses_shard_map or not d.kernel.endswith("_int8"):
+                raise RuntimeError(
+                    f"sharded int8 ({hint}) did not route to a shard_map "
+                    f"int8 kernel: {kdispatch.describe(d)}")
+            t_sm = _time(jax.jit(
+                lambda x, p: kdispatch.sparse_matmul(
+                    x, p, cfg, shard=shard,
+                    dispatch=kdispatch.DispatchConfig(backend=kb))),
+                x, p_q)
+            y_sm = kdispatch.sparse_matmul(
+                x, p_q, cfg, shard=shard,
+                dispatch=kdispatch.DispatchConfig(backend=kb))
+            err = float(jnp.max(jnp.abs(y_sm - y_ref)) /
+                        (jnp.max(jnp.abs(y_ref)) + 1e-6))
+            rows.append({
+                "name": f"int8-sharded/2:4/{hint}@{d_}x{m_}",
+                "us_jnp_mesh": t_ref, "us_shard_map": t_sm,
+                "dispatch": kdispatch.describe(d),
+                "rel_err_vs_dequant_ref": err,
+            })
+    return rows
+
+
 def main(argv: Optional[List[str]] = None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mesh", default=None, metavar="DxM",
@@ -279,13 +342,22 @@ def main(argv: Optional[List[str]] = None):
             print(f"kernel_mesh,SKIP,need {d_ * m_} devices, "
                   f"have {len(jax.devices())}")
         else:
-            for r in run_mesh((d_, m_)):
-                t_sm = (f"{r['us_shard_map']:.0f}"
-                        if r["us_shard_map"] is not None else "n/a")
-                print(f"kernel_mesh_{r['name']},"
-                      f"us_jnp_mesh={r['us_jnp_mesh']:.0f},"
-                      f"us_shard_map={t_sm},"
-                      f"dispatch={r['dispatch']}")
+            if args.dtype in ("all", "fp32"):
+                for r in run_mesh((d_, m_)):
+                    t_sm = (f"{r['us_shard_map']:.0f}"
+                            if r["us_shard_map"] is not None else "n/a")
+                    print(f"kernel_mesh_{r['name']},"
+                          f"us_jnp_mesh={r['us_jnp_mesh']:.0f},"
+                          f"us_shard_map={t_sm},"
+                          f"dispatch={r['dispatch']}")
+            if args.dtype in ("all", "int8"):
+                for r in run_mesh_int8((d_, m_)):
+                    print(f"kernel_{r['name']},"
+                          f"us_jnp_mesh={r['us_jnp_mesh']:.0f},"
+                          f"us_shard_map={r['us_shard_map']:.0f},"
+                          f"dispatch={r['dispatch']},"
+                          f"rel_err_vs_dequant_ref="
+                          f"{r['rel_err_vs_dequant_ref']:.4f}")
     return None
 
 

@@ -28,12 +28,15 @@ from .rowwise import (
     rowwise_tiers,
 )
 from .quantize import (
+    calibrate_activation_scales,
     dequantize,
+    has_static_scales,
     is_linear_leaf,
     is_quantized,
     quantize_linear,
     quantize_per_channel,
     quantize_rows,
+    quantize_rows_static,
     quantize_tree,
 )
 from .sparse_linear import (

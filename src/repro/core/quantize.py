@@ -19,27 +19,50 @@ other linear layout and ``iter_linear_items`` / the dispatch engine
 recognize it structurally.  N:M metadata is untouched: int8 values +
 2-bit indices is exactly the tile-register storage model the paper
 assumes, and the compression/pruning step stays dtype-agnostic.
+
+**Static activation scales** are the decode-side analogue: instead of the
+per-row dynamic absmax pass before every int8 contraction,
+:func:`calibrate_activation_scales` runs one forward over a calibration
+batch, records the per-site activation absmax through the dispatch
+engine, and attaches a scalar ``"act_scale"`` leaf to every quantized
+linear.  Kernels then quantize activations against the fixed scale —
+no reduction over the row on the decode hot path — and the scale rides
+the params tree (replicated under any mesh) like every other leaf.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import contextlib
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
     "SCALE_KEY",
+    "ACT_SCALE_KEY",
     "is_quantized",
+    "has_static_scales",
     "is_linear_leaf",
     "quantize_per_channel",
     "dequantize",
     "quantize_rows",
+    "quantize_rows_static",
     "quantize_linear",
     "quantize_tree",
+    "calibrate_activation_scales",
+    "calibration_active",
+    "record_calibration",
 ]
 
 SCALE_KEY = "scale"
+ACT_SCALE_KEY = "act_scale"
+_CALIB_KEY = "calib_id"
+
+# keys a linear layout may carry on top of its structural ones; the
+# structural detection must stay blind to them
+_AUX_KEYS = {SCALE_KEY, ACT_SCALE_KEY, _CALIB_KEY}
 
 _QMAX = 127.0  # symmetric int8: values in [-127, 127], -128 unused
 
@@ -47,6 +70,11 @@ _QMAX = 127.0  # symmetric int8: values in [-127, 127], -128 unused
 def is_quantized(params: Dict[str, Any]) -> bool:
     """Structural test: quantized layouts carry a per-channel scale leaf."""
     return isinstance(params, dict) and SCALE_KEY in params
+
+
+def has_static_scales(params: Dict[str, Any]) -> bool:
+    """True when the leaf carries a calibrated static activation scale."""
+    return isinstance(params, dict) and ACT_SCALE_KEY in params
 
 
 def is_linear_leaf(tree: Any) -> bool:
@@ -59,7 +87,7 @@ def is_linear_leaf(tree: Any) -> bool:
     """
     return isinstance(tree, dict) and (
         "meta_packed" in tree or "gather_idx" in tree
-        or set(tree) - {SCALE_KEY} == {"w"})
+        or set(tree) - _AUX_KEYS == {"w"})
 
 
 def quantize_per_channel(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -83,18 +111,46 @@ def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale[..., None, :]
 
 
-def quantize_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def quantize_rows(
+    x: jax.Array, absmax: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
     """Dynamic per-row symmetric int8 quantization of activations.
 
     ``x``: ``(B, K)`` float.  Returns ``(x_q, x_scale)`` with ``x_q``
     int8 ``(B, K)`` and ``x_scale`` ``(B, 1)`` float32.  All-zero rows
     (idle batch slots) get a tiny nonzero scale so the division is safe.
+
+    ``absmax`` overrides the per-row reduction — the sharded execution
+    class passes the pmax-lifted GLOBAL row absmax so every contraction
+    shard quantizes against one coherent scale (same rounding, same
+    epsilon: the single source of the int8 quantization numerics).
     """
     x32 = x.astype(jnp.float32)
-    absmax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)   # (B, 1)
+    if absmax is None:
+        absmax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)   # (B, 1)
     scale = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny) / _QMAX
     q = jnp.clip(jnp.round(x32 / scale), -_QMAX, _QMAX)
     return q.astype(jnp.int8), scale
+
+
+def quantize_rows_static(
+    x: jax.Array, act_scale: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Static-scale int8 quantization of activations (decode fast path).
+
+    ``act_scale`` is the scalar calibrated scale attached by
+    :func:`calibrate_activation_scales`; no per-row reduction runs —
+    the whole absmax pass :func:`quantize_rows` does per call is skipped.
+    Values beyond the calibrated range saturate at ±127 (standard static
+    quantization semantics).  Returns ``(x_q, x_scale)`` with ``x_scale``
+    broadcast to the ``(B, 1)`` layout the kernels expect.
+    """
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(act_scale.astype(jnp.float32).reshape(()),
+                        jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x32 / scale), -_QMAX, _QMAX)
+    xs = jnp.full((x.shape[0], 1), scale, jnp.float32)
+    return q.astype(jnp.int8), xs
 
 
 def quantize_linear(params: Dict[str, Any]) -> Dict[str, Any]:
@@ -130,12 +186,136 @@ def quantize_tree(tree):
     and other raw-array leaves are left untouched.  Stacked-layer leading
     dims are preserved (scales become ``(L, O)``).
     """
+    return map_linear_leaves(tree, quantize_linear)
+
+
+def map_linear_leaves(tree, fn: Callable[[Dict[str, Any]], Dict[str, Any]]):
+    """Rebuild a params tree with ``fn`` applied to every SparseLinear
+    leaf dict (rowwise tier segments included, via ``quantize_linear``-
+    style recursion for the nest).  The traversal mirrors
+    ``dispatch.iter_linear_items``' structural detection, so anything the
+    engine would dispatch is exactly what gets mapped."""
     if isinstance(tree, dict):
-        if "rowwise" in tree or is_linear_leaf(tree):
-            return quantize_linear(tree)
-        return {k: quantize_tree(v) for k, v in tree.items()}
+        if "rowwise" in tree:
+            return {
+                "rowwise": {k: fn(v) for k, v in tree["rowwise"].items()},
+                **{k: v for k, v in tree.items() if k != "rowwise"},
+            }
+        if is_linear_leaf(tree):
+            return fn(tree)
+        return {k: map_linear_leaves(v, fn) for k, v in tree.items()}
     if isinstance(tree, list):
-        return [quantize_tree(v) for v in tree]
+        return [map_linear_leaves(v, fn) for v in tree]
     if isinstance(tree, tuple):
-        return tuple(quantize_tree(v) for v in tree)
+        return tuple(map_linear_leaves(v, fn) for v in tree)
     return tree
+
+
+# ---------------------------------------------------------------------------
+# static activation-scale calibration
+# ---------------------------------------------------------------------------
+#
+# The dispatch engine cannot know a linear's identity from inside a jitted/
+# scanned trace, so calibration threads a per-site integer tag through the
+# params tree itself: each quantized leaf gets a ``calib_id`` leaf whose
+# leading dims broadcast with the layer/expert stacking (scans slice it down
+# to a scalar by call time), and ``sparse_matmul`` reports (id, absmax(x))
+# pairs through an io_callback while the calibration context is active.
+
+_calib_state = threading.local()
+
+
+def calibration_active() -> bool:
+    return getattr(_calib_state, "store", None) is not None
+
+
+@contextlib.contextmanager
+def _calibrating(store: Dict[int, float]):
+    prev = getattr(_calib_state, "store", None)
+    _calib_state.store = store
+    try:
+        yield store
+    finally:
+        _calib_state.store = prev
+
+
+def record_calibration(calib_id: jax.Array, x: jax.Array) -> None:
+    """Record ``absmax(x)`` for one tagged linear site (engine hook).
+
+    Runs inside traced code (scan bodies included): the io_callback fires
+    per executed call with concrete values and folds the running max into
+    the active store.  No-op without an active calibration context.
+    """
+    store = getattr(_calib_state, "store", None)
+    if store is None:
+        return
+
+    def _fold(i, a):
+        key = int(i)
+        store[key] = max(store.get(key, 0.0), float(a))
+
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    jax.debug.callback(_fold, calib_id.reshape(()), absmax, ordered=True)
+
+
+def calibrate_activation_scales(
+    params,
+    batch_fn: Callable[[Any], Any],
+) -> Tuple[Any, int]:
+    """Attach static activation scales to every quantized linear leaf.
+
+    ``params`` is a (possibly layer-stacked) serving params tree whose
+    linears are already int8-quantized (``quantize_tree`` /
+    ``convert_to_serving(..., quantize="int8")``).  ``batch_fn`` runs one
+    representative forward over the calibration batch given a params
+    tree — e.g. ``lambda p: forward(p, cfg, tokens=batch)`` — while the
+    engine records, per linear site, the max |activation| it contracts.
+
+    Returns ``(params_with_scales, n_calibrated)``: every observed site
+    gains a scalar ``act_scale = absmax / 127`` leaf (stacked layers and
+    expert stacks share one scale — the max over all their activations,
+    the conservative choice); sites the batch never exercised keep the
+    dynamic per-row path.  Decode then skips the per-row absmax pass
+    entirely (see :func:`quantize_rows_static`).
+    """
+    counter = [0]
+
+    def _tag(leaf: Dict[str, Any]) -> Dict[str, Any]:
+        if not is_quantized(leaf):
+            return leaf
+        key = "w" if "w" in leaf else "values"
+        lead = leaf[key].shape[:-2]
+        out = dict(leaf)
+        out[_CALIB_KEY] = jnp.full(lead, counter[0], jnp.int32)
+        counter[0] += 1
+        return out
+
+    tagged = map_linear_leaves(params, _tag)
+    store: Dict[int, float] = {}
+    with _calibrating(store):
+        jax.block_until_ready(batch_fn(tagged))
+        # the debug callbacks run on JAX's callback thread and are not
+        # ordered with the output arrays — without this barrier a jitted
+        # batch_fn can leave _fold calls in flight and silently
+        # under-calibrate
+        jax.effects_barrier()
+
+    counter[0] = 0
+
+    def _attach(leaf: Dict[str, Any]) -> Dict[str, Any]:
+        if not is_quantized(leaf):
+            return leaf
+        site = counter[0]
+        counter[0] += 1
+        if site not in store:
+            return leaf          # never exercised: stays dynamic
+        out = dict(leaf)
+        # broadcast over the stacked leading dims (layer scans slice every
+        # leaf, so a bare scalar would break lax.scan over the stack)
+        key = "w" if "w" in leaf else "values"
+        out[ACT_SCALE_KEY] = jnp.full(leaf[key].shape[:-2],
+                                      max(store[site], 0.0) / _QMAX,
+                                      jnp.float32)
+        return out
+
+    return map_linear_leaves(params, _attach), len(store)

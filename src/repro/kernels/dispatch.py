@@ -27,14 +27,20 @@ non-divisibly.
 dtype is a dispatch axis: int8-quantized layouts (an extra per-channel
 ``"scale"`` leaf next to int8 values — see ``repro.core.quantize``) plan
 with ``dtype=int8`` and resolve to the VNNI-lineage ``*_int8`` kernel
-entries, which quantize activations per row on the way in, contract
-int8 x int8 into int32, and dequantize once on the way out.  The jnp
-dequantize-reference formulation is their fallback — under ``jax.grad``,
-when the int8 tiling constraints don't fit (int8 contraction blocks are
-multiples of the 32-row sublane quantum), and under any shard spec
-(int8 under shard_map is a tracked follow-on).  Autotune cache keys
-carry the dtype, so an int8 problem never shares tuned blocks with its
-fp32 twin.
+entries, which quantize activations per row on the way in (against a
+calibrated static ``act_scale`` when the leaf carries one — decode skips
+the absmax pass), pad odd row counts up to the 32-row int8 sublane
+quantum, contract int8 x int8 into int32, and dequantize once on the way
+out.  The jnp dequantize-reference formulation is their fallback — under
+``jax.grad`` and when the int8 tiling constraints don't fit (int8
+contraction blocks are multiples of the 32-row sublane quantum).  Under
+a use-site ``ShardSpec`` the int8 entries run per-shard like the float
+ones: the weight-scale leaf gets its own PartitionSpec (out-dim axes),
+activations quantize inside the shard body, and a sharded contraction
+psums the **raw int32 partials** (shards share one row scale via a pmax
+of local absmaxes) before the single dequantize on the gathered result.
+Autotune cache keys carry the dtype, so an int8 problem never shares
+tuned blocks with its fp32 twin.
 
 Block sizes come from the autotuner (in-process cache + JSON store under
 ``experiments/autotune/``, keyed by device kind) when enabled, else from
@@ -200,6 +206,7 @@ class DispatchDecision:
     local_dims: Optional[Tuple[int, int, int]] = None  # per-shard (b, ke, o)
     shards: Optional[Tuple[int, int, int]] = None      # mesh split of (b, ke, o)
     collective: Optional[str] = None                   # psum | none
+    act_scales: Optional[str] = None   # int8 entries: dynamic | static
 
     @property
     def uses_kernel(self) -> bool:
@@ -222,6 +229,8 @@ def describe(d: DispatchDecision) -> str:
         base += (f" shard_map[{d.collective}]"
                  f" shards=(b/{sb},ke/{ske},o/{so})"
                  f" local=(b={lb},ke={lke},o={lo})")
+    if d.act_scales is not None:
+        base += f" act-scales={d.act_scales}"
     return f"{base} ({d.reason})"
 
 
@@ -400,10 +409,46 @@ def _int8_ke_multiple(n: int) -> int:
     return (4 * _INT8_SUBLANE) // math.gcd(n, 4 * _INT8_SUBLANE)
 
 
+def _int8_padded_b(b: int) -> int:
+    """Row count of the int8 activation tile after final-block padding.
+
+    The quantized activation operand is int8 too, so its sublane (row)
+    axis carries the same 32-row quantum as the values tile.  Rather than
+    rejecting row counts off the quantum — which would throw every odd
+    decode batch (e.g. b=3) back to the dequantize reference — the run
+    adapters zero-pad the final row block up to the quantum and slice the
+    output back; blocks are fitted against the padded row count.
+    """
+    return b + (-b) % _INT8_SUBLANE
+
+
+def _quantize_acts(x2, params):
+    """int8 activations + (B, 1) scales: static (calibrated) when the
+    leaf carries an ``act_scale``, else the dynamic per-row absmax pass."""
+    if quant.ACT_SCALE_KEY in params:
+        return quant.quantize_rows_static(x2, params[quant.ACT_SCALE_KEY])
+    return quant.quantize_rows(x2)
+
+
+def _pad_rows(xq, xs, b_pad: int):
+    """Zero-pad quantized rows to the int8 sublane quantum (padded rows
+    contract to zero and are sliced off the output)."""
+    pad = b_pad - xq.shape[0]
+    if pad == 0:
+        return xq, xs
+    xq = jnp.pad(xq, ((0, pad), (0, 0)))
+    xs = jnp.pad(xs, ((0, pad), (0, 0)), constant_values=1.0)
+    return xq, xs
+
+
+def _fit_int8_rows(b: int):
+    return largest_fitting_block(_int8_padded_b(b), 128, _INT8_SUBLANE)
+
+
 def _fit_tile_gemm_int8(b, ke, o, n, m, dtype):
     if not _is_int8(dtype):
         return None
-    bb = largest_fitting_block(b, 128)
+    bb = _fit_int8_rows(b)
     bo = largest_fitting_block(o, 128)
     bke = largest_fitting_block(ke, 512, _INT8_SUBLANE)
     if bb is None or bo is None or bke is None:
@@ -415,17 +460,28 @@ def _run_tile_gemm_int8(x2, params, cfg, g, blocks, interpret, out_dtype):
     from repro.kernels.tile_gemm.kernel import tile_gemm_int8
 
     bb, bke, bo = blocks
-    xq, xs = quant.quantize_rows(x2)
+    b = x2.shape[0]
+    xq, xs = _pad_rows(*_quantize_acts(x2, params), _int8_padded_b(b))
     ws = params[quant.SCALE_KEY].reshape(1, -1)
-    return tile_gemm_int8(xq, g(params["w"]), xs, ws,
+    y = tile_gemm_int8(xq, g(params["w"]), xs, ws,
+                       block_b=bb, block_k=bke, block_o=bo,
+                       out_dtype=out_dtype, interpret=interpret)
+    return y[:b]
+
+
+def _partial_tile_gemm_int8(xq, params, cfg, blocks, interpret):
+    from repro.kernels.tile_gemm.kernel import tile_gemm_int8
+
+    bb, bke, bo = blocks
+    return tile_gemm_int8(xq, params["w"],
                           block_b=bb, block_k=bke, block_o=bo,
-                          out_dtype=out_dtype, interpret=interpret)
+                          interpret=interpret)
 
 
 def _fit_nm_spmm_int8(b, ke, o, n, m, dtype):
     if m != 4 or not _is_int8(dtype):
         return None
-    bb = largest_fitting_block(b, 128)
+    bb = _fit_int8_rows(b)
     bo = largest_fitting_block(o, 128)
     bke = largest_fitting_block(ke, 512, _int8_ke_multiple(n))
     if bb is None or bo is None or bke is None:
@@ -437,18 +493,30 @@ def _run_nm_spmm_int8(x2, params, cfg, g, blocks, interpret, out_dtype):
     from repro.kernels.nm_spmm.kernel import nm_spmm_int8
 
     bb, bke, bo = blocks
-    xq, xs = quant.quantize_rows(x2)
+    b = x2.shape[0]
+    xq, xs = _pad_rows(*_quantize_acts(x2, params), _int8_padded_b(b))
     ws = params[quant.SCALE_KEY].reshape(1, -1)
-    return nm_spmm_int8(xq, g(params["values"]), params["meta_packed"],
-                        xs, ws, cfg.n,
+    y = nm_spmm_int8(xq, g(params["values"]), params["meta_packed"],
+                     xs, ws, cfg.n,
+                     block_b=bb, block_o=bo, block_ke=bke,
+                     out_dtype=out_dtype, interpret=interpret)
+    return y[:b]
+
+
+def _partial_nm_spmm_int8(xq, params, cfg, blocks, interpret):
+    from repro.kernels.nm_spmm.kernel import nm_spmm_int8
+
+    bb, bke, bo = blocks
+    return nm_spmm_int8(xq, params["values"], params["meta_packed"],
+                        None, None, cfg.n,
                         block_b=bb, block_o=bo, block_ke=bke,
-                        out_dtype=out_dtype, interpret=interpret)
+                        interpret=interpret)
 
 
 def _fit_nm_gather_int8(b, ke, o, n, m, dtype):
     if m != 4 or not _is_int8(dtype):
         return None
-    bb = largest_fitting_block(b, 128)
+    bb = _fit_int8_rows(b)
     bo = largest_fitting_block(o, 128)
     bke = largest_fitting_block(ke, 512, _int8_ke_multiple(n))
     if bb is None or bo is None or bke is None:
@@ -460,31 +528,51 @@ def _run_nm_gather_int8(x2, params, cfg, g, blocks, interpret, out_dtype):
     from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_int8
 
     bb, bke, bo = blocks
-    xq, xs = quant.quantize_rows(x2)
+    b = x2.shape[0]
+    xq, xs = _pad_rows(*_quantize_acts(x2, params), _int8_padded_b(b))
     ws = params[quant.SCALE_KEY].reshape(-1, 1)
     idx = params["gather_idx"].reshape(-1, 1)
     y_t = nm_spmm_gather_int8(xq.T, g(params["values"]), idx, xs.T, ws,
                               cfg.n, block_b=bb, block_o=bo, block_ke=bke,
                               out_dtype=out_dtype, interpret=interpret)
+    return y_t.T[:b]
+
+
+def _partial_nm_gather_int8(xq, params, cfg, blocks, interpret):
+    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_int8
+
+    bb, bke, bo = blocks
+    idx = params["gather_idx"].reshape(-1, 1)
+    y_t = nm_spmm_gather_int8(xq.T, params["values"], idx, None, None,
+                              cfg.n, block_b=bb, block_o=bo, block_ke=bke,
+                              interpret=interpret)
     return y_t.T
+
+
+def _int8_candidates(b, ke, o, ke_multiple):
+    cands = _enumerate(_int8_padded_b(b), ke, o, ke_multiple)
+    return [c for c in cands if c[0] % _INT8_SUBLANE == 0] or cands
 
 
 registry.register(KernelEntry(
     name="tile_gemm_int8", mode="dense", priority=10,
     fit_blocks=_fit_tile_gemm_int8, run=_run_tile_gemm_int8,
-    candidates=lambda b, ke, o, n, m, dtype: _enumerate(
+    quantized=True, run_quantized=_partial_tile_gemm_int8,
+    candidates=lambda b, ke, o, n, m, dtype: _int8_candidates(
         b, ke, o, _INT8_SUBLANE),
 ))
 registry.register(KernelEntry(
     name="nm_spmm_int8", mode="compressed", priority=10,
     fit_blocks=_fit_nm_spmm_int8, run=_run_nm_spmm_int8,
-    candidates=lambda b, ke, o, n, m, dtype: _enumerate(
+    quantized=True, run_quantized=_partial_nm_spmm_int8,
+    candidates=lambda b, ke, o, n, m, dtype: _int8_candidates(
         b, ke, o, _int8_ke_multiple(n)),
 ))
 registry.register(KernelEntry(
     name="nm_spmm_gather_int8", mode="gather", priority=10,
     fit_blocks=_fit_nm_gather_int8, run=_run_nm_gather_int8,
-    candidates=lambda b, ke, o, n, m, dtype: _enumerate(
+    quantized=True, run_quantized=_partial_nm_gather_int8,
+    candidates=lambda b, ke, o, n, m, dtype: _int8_candidates(
         b, ke, o, _int8_ke_multiple(n)),
 ))
 
@@ -612,6 +700,7 @@ def plan(
     differentiating: bool = False,
     sharded: bool = False,
     shard: Optional[ShardSpec] = None,
+    static_scales: bool = False,
 ) -> DispatchDecision:
     """Pure decision function: what would the engine run for this problem?
 
@@ -620,6 +709,11 @@ def plan(
     ``shard_map`` over the registry kernel — fitting blocks against the
     per-shard local shape.  ``sharded`` without a spec (mesh installed but
     the call-site gave no PartitionSpecs) still falls back to jnp.
+    int8 problems keep the shard_map class too: the per-channel weight
+    scale rides along as an extra leaf with its own PartitionSpec and
+    activations quantize inside the shard body.  ``static_scales`` records
+    whether the use-site carries calibrated activation scales (decode
+    skips the per-row absmax pass); it only annotates the decision.
     """
     dcfg = dispatch or _DEFAULT
     backend = registry.resolve_backend(dcfg.backend)
@@ -635,9 +729,6 @@ def plan(
         return _jnp("under autodiff: kernels carry no VJP rules")
     if shard is not None and all(s == 1 for s in shard.shards):
         shard = None  # trivial slicing: single-device execution class
-    if shard is not None and _is_int8(dtype):
-        return _jnp("int8 under shard_map is a tracked follow-on: "
-                    "dequantize reference runs under the mesh")
     if sharded and shard is None:
         return _jnp("mesh env active with no use-site shard spec: "
                     "XLA owns the layout")
@@ -666,12 +757,14 @@ def plan(
                     f"ke={dims[1]},o={dims[2]},{n}:{m},"
                     f"{dtype_name(dtype)})")
     entry, blocks = sel
+    acts = (("static" if static_scales else "dynamic")
+            if entry.quantized else None)
 
     def _decision(blocks, reason, source):
         return DispatchDecision(
             mode, backend, entry.name, blocks, reason, blocks_source=source,
             placement=placement, local_dims=local, shards=shards if shard else None,
-            collective=collective)
+            collective=collective, act_scales=acts)
 
     if dcfg.blocks is not None:
         return _decision(tuple(dcfg.blocks), "blocks pinned by config",
@@ -697,7 +790,8 @@ def plan_for(
     fake_x = jax.ShapeDtypeStruct(tuple(x_shape), dtype)
     ke, o = _problem_dims(mode, params, fake_x)
     return plan(mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m, dtype=dtype,
-                dispatch=dispatch, sharded=_mesh_active(), shard=shard)
+                dispatch=dispatch, sharded=_mesh_active(), shard=shard,
+                static_scales=quant.has_static_scales(params))
 
 
 def iter_linear_items(tree, _names=()):
@@ -718,9 +812,13 @@ def iter_linear_items(tree, _names=()):
         if quant.is_linear_leaf(tree):
             leaf = {}
             for k, v in tree.items():
-                # per-channel quantization scales and gather indices are
-                # 1-D per layer; everything else is a 2-D operand
-                nd = 1 if k in ("gather_idx", "scale") else 2
+                # static activation scales and calibration tags are 0-D
+                # per layer; per-channel quantization scales and gather
+                # indices are 1-D; everything else is a 2-D operand
+                if k in (quant.ACT_SCALE_KEY, quant._CALIB_KEY):
+                    leaf[k] = v.reshape(-1)[0] if v.ndim > 0 else v
+                    continue
+                nd = 1 if k in ("gather_idx", quant.SCALE_KEY) else 2
                 leaf[k] = (v.reshape((-1,) + tuple(v.shape[-nd:]))[0]
                            if v.ndim > nd else v)
             yield _names, leaf
@@ -811,7 +909,8 @@ def pretune(params_tree, batch: int, cfg,
         shard = leaf_shard_spec(names, cfg)
         decision = plan(mode, b=batch, ke=ke, o=o, n=lcfg.n, m=lcfg.m,
                         dtype=dt, dispatch=dcfg, sharded=_mesh_active(),
-                        shard=shard)
+                        shard=shard,
+                        static_scales=quant.has_static_scales(leaf))
         if not decision.uses_kernel or decision.blocks_source != "fitted":
             continue  # jnp-routed or already cached: nothing to tune
         sparse_matmul(x, leaf, lcfg, dispatch=dcfg, shard=shard)
@@ -826,41 +925,79 @@ def _entry_by_name(mode: str, name: str) -> KernelEntry:
     raise KeyError(f"kernel {name!r} not registered for mode {mode!r}")
 
 
-def _shard_param_specs(mode: str, shard: ShardSpec) -> Dict[str, P]:
+def _shard_param_specs(
+    mode: str, shard: ShardSpec, params: Dict[str, Any],
+) -> Dict[str, P]:
     """Per-leaf PartitionSpecs for one SparseLinear layout under a shard
     spec.  The compressed values/meta share the contraction slicing (their
     row axes are K_c and K_c/4 — same mesh axes, scaled dims); gather_idx
-    rides the contraction axis and replicates otherwise."""
+    rides the contraction axis and replicates otherwise.  Quantized
+    layouts carry extra leaves: the per-channel weight ``scale`` (O,)
+    shards on the out-dim axes (derived from the same use-site spec as the
+    operand it scales), and the scalar ``act_scale`` replicates.
+    """
     ke, o = shard.ke, shard.o
-    if mode in ("dense", "masked"):
-        return {"w": P(ke, o)}
-    if mode == "compressed":
-        return {"values": P(ke, o), "meta_packed": P(ke, o)}
-    if mode == "gather":
-        return {"values": P(ke, o), "gather_idx": P(ke)}
-    raise ValueError(f"no shard specs for mode {mode!r}")
+
+    def spec_for(key: str) -> P:
+        if key in ("w", "values", "meta_packed"):
+            return P(ke, o)
+        if key == "gather_idx":
+            return P(ke)
+        if key == quant.SCALE_KEY:
+            return P(o)
+        return P()   # act_scale and any other scalar-ish aux leaf
+    if mode not in ("dense", "masked", "compressed", "gather"):
+        raise ValueError(f"no shard specs for mode {mode!r}")
+    return {k: spec_for(k) for k in params}
 
 
 def _shard_map_runner(
     entry: KernelEntry, mode: str, cfg, shard: ShardSpec,
-    blocks: Blocks, interpret: bool, out_dtype,
+    blocks: Blocks, interpret: bool, out_dtype, params: Dict[str, Any],
 ) -> Callable[[jax.Array, Dict[str, Any]], jax.Array]:
     """Wrap ``entry.run`` in shard_map with the use-site specs.
 
     Each shard runs the Pallas kernel on its local (b, ke, o) tile; a
     sharded contraction dim leaves partial products that are combined
-    with ``psum`` over those axes (fp32, before the output cast) — the
-    out-dim-sharded case needs no collective, the output simply stays
-    sharded on the model axis.
+    with ``psum`` over those axes — the out-dim-sharded case needs no
+    collective, the output simply stays sharded on the model axis.
+
+    int8 entries keep their ordering contract under a sharded
+    contraction: activations quantize per-row INSIDE the shard body (the
+    local absmax is lifted to the row's global absmax with a ``pmax``
+    over the contraction axes so every shard shares one scale; calibrated
+    static scales are coherent by construction), each shard contracts
+    int8 x int8 into **raw int32 partials**, the partials are psum'd
+    exactly in int32, and the gathered result is dequantized once.
+    Float entries psum fp32 partials before the output cast, as before.
     """
     from jax.experimental.shard_map import shard_map
 
     x_spec = P(shard.batch, shard.ke)
-    p_specs = _shard_param_specs(mode, shard)
+    p_specs = _shard_param_specs(mode, shard, params)
     out_spec = P(shard.batch, shard.o)
     needs_psum = shard.collective == "psum"
+    int8_psum = needs_psum and entry.run_quantized is not None
 
     def body(x_l, params_l):
+        if int8_psum:
+            b_l = x_l.shape[0]
+            if quant.ACT_SCALE_KEY in params_l:
+                xq, xs = quant.quantize_rows_static(
+                    x_l, params_l[quant.ACT_SCALE_KEY])
+            else:
+                # per-row absmax of the LOCAL slice, lifted to the global
+                # row absmax so the int32 partials share one scale
+                absmax = jnp.max(jnp.abs(x_l.astype(jnp.float32)),
+                                 axis=-1, keepdims=True)
+                xq, xs = quant.quantize_rows(
+                    x_l, absmax=jax.lax.pmax(absmax, shard.ke))
+            xq_p, _ = _pad_rows(xq, xs, _int8_padded_b(b_l))
+            acc = entry.run_quantized(xq_p, params_l, cfg, blocks, interpret)
+            acc = jax.lax.psum(acc, shard.ke)
+            ws = params_l[quant.SCALE_KEY].reshape(1, -1)
+            y = acc[:b_l].astype(jnp.float32) * xs * ws
+            return y.astype(out_dtype)
         y = entry.run(x_l, params_l, cfg, lambda w: w, blocks, interpret,
                       jnp.float32 if needs_psum else out_dtype)
         if needs_psum:
@@ -902,12 +1039,18 @@ def sparse_matmul(
     # dtype as before
     exec_dtype = jnp.int8 if quant.is_quantized(params) else x2.dtype
 
+    # static-scale calibration: report this site's activation absmax
+    # through the engine hook (no-op outside a calibration context)
+    if quant.calibration_active() and quant._CALIB_KEY in params:
+        quant.record_calibration(params[quant._CALIB_KEY], x2)
+
     decision = plan(
         mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m, dtype=exec_dtype,
         dispatch=dcfg,
         differentiating=_under_autodiff(x2, params),
         sharded=_mesh_active(),
         shard=shard,
+        static_scales=quant.has_static_scales(params),
     )
 
     if not decision.uses_kernel:
@@ -921,7 +1064,8 @@ def sparse_matmul(
     if decision.uses_shard_map:
         lb, lke, lo = decision.local_dims
         runner = lambda blk: _shard_map_runner(
-            entry, mode, cfg, shard, blk, interpret, x2.dtype)(x2, params)
+            entry, mode, cfg, shard, blk, interpret, x2.dtype,
+            params)(x2, params)
         # Autotune the per-shard local problem through the same wrapper.
         if (dcfg.autotune and decision.blocks_source == "fitted"
                 and not isinstance(x2, jax.core.Tracer)):
@@ -933,7 +1077,7 @@ def sparse_matmul(
             if tuned is not None:
                 blocks = tuned
         y2 = _shard_map_runner(entry, mode, cfg, shard, blocks, interpret,
-                               x2.dtype)(x2, params)
+                               x2.dtype, params)(x2, params)
         return y2.reshape(*lead, o)
 
     # Autotune on first concrete sighting of a problem (never mid-trace).

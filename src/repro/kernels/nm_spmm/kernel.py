@@ -65,14 +65,22 @@ def _decompress_tile(v: jax.Array, idx: jax.Array, n: int) -> jax.Array:
     return out
 
 
-def _spmm_kernel(x_ref, v_ref, pm_ref, o_ref, acc_ref, *, n: int, nk: int):
+def _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n: int, acc_dtype):
+    """The shared mux-expand + contract step: init the accumulator tile on
+    the first K step, decompress the values tile through the in-VMEM M:1
+    mux, and accumulate ``x @ w``.  ONE body for the float and int8
+    (scaled and raw) kernels, so their numerics cannot drift apart."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     idx = _unpack_meta_tile(pm_ref[...])
     w = _decompress_tile(v_ref[...], idx, n)
-    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=acc_dtype)
+
+
+def _spmm_kernel(x_ref, v_ref, pm_ref, o_ref, acc_ref, *, n: int, nk: int):
+    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, jnp.float32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
@@ -127,20 +135,25 @@ def nm_spmm(
 
 def _spmm_int8_kernel(x_ref, v_ref, pm_ref, xs_ref, ws_ref, o_ref, acc_ref,
                       *, n: int, nk: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    idx = _unpack_meta_tile(pm_ref[...])
     # the M:1 mux is exact in int8 too: at most one nonzero per expanded
     # slot, and values stay in [-127, 127]
-    w = _decompress_tile(v_ref[...], idx, n)
-    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.int32)
+    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, jnp.int32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
         deq = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
         o_ref[...] = deq.astype(o_ref.dtype)
+
+
+def _spmm_int8_raw_kernel(x_ref, v_ref, pm_ref, o_ref, acc_ref,
+                          *, n: int, nk: int):
+    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, jnp.int32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        # raw int32 accumulator out: the sharded-contraction class psums
+        # these partials exactly and dequantizes once on the result
+        o_ref[...] = acc_ref[...]
 
 
 def nm_spmm_int8(
@@ -165,13 +178,22 @@ def nm_spmm_int8(
     MXU contracts int8 x int8 into an int32 VMEM accumulator, and both
     scale vectors are applied once at the flush — int8 values + 2-bit
     metadata is exactly the paper's tile-register storage model.
+
+    ``x_scale=None``/``w_scale=None`` returns the raw int32 accumulator
+    (``out_dtype`` forced to int32) for the psum-then-dequantize sharded
+    ordering.
     """
     b, ke = x_q.shape
     kc, o = values.shape
     assert ke * n == kc * 4, (x_q.shape, values.shape, n)
     assert meta_packed.shape == (kc // 4, o), meta_packed.shape
-    assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
-        x_scale.shape, w_scale.shape)
+    raw = x_scale is None
+    assert raw == (w_scale is None), "pass both scales or neither"
+    if raw:
+        out_dtype = jnp.int32
+    else:
+        assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
+            x_scale.shape, w_scale.shape)
     block_b = min(block_b, b)
     block_o = min(block_o, o)
     block_ke = min(block_ke, ke)
@@ -179,6 +201,24 @@ def nm_spmm_int8(
     block_kc = block_ke * n // 4
     assert block_kc % 4 == 0, "block_ke*n/4 must be a multiple of 4 for packing"
     nk = ke // block_ke
+    if raw:
+        return pl.pallas_call(
+            lambda xr, vr, pr, orf, acc: _spmm_int8_raw_kernel(
+                xr, vr, pr, orf, acc, n=n, nk=nk),
+            grid=(b // block_b, o // block_o, nk),
+            in_specs=[
+                pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+                pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+            scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(x_q, values, meta_packed)
     return pl.pallas_call(
         lambda xr, vr, pr, xsr, wsr, orf, acc: _spmm_int8_kernel(
             xr, vr, pr, xsr, wsr, orf, acc, n=n, nk=nk),

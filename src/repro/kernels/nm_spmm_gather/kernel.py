@@ -25,7 +25,13 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.compat import tpu_compiler_params
 
 
-def _gather_kernel(xt_ref, v_ref, idx_ref, o_ref, acc_ref, *, n: int, nk: int):
+def _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n: int, acc_dtype):
+    """The shared sublane-gather + reduced-K contract step: init the
+    accumulator tile on the first K step, select the N kept candidates
+    per M-block (≤4 compare+selects per compressed row — exact for float
+    and int8 alike), and accumulate ``vᵀ @ x_g``.  ONE body for the
+    float and int8 (scaled and raw) kernels, so their numerics cannot
+    drift apart."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -49,8 +55,12 @@ def _gather_kernel(xt_ref, v_ref, idx_ref, o_ref, acc_ref, *, n: int, nk: int):
     acc_ref[...] += jax.lax.dot_general(
         v_ref[...], x_g,
         dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=acc_dtype,
     )
+
+
+def _gather_kernel(xt_ref, v_ref, idx_ref, o_ref, acc_ref, *, n: int, nk: int):
+    _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n, jnp.float32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
@@ -100,35 +110,22 @@ def nm_spmm_gather(
 
 def _gather_int8_kernel(xt_ref, v_ref, idx_ref, xs_ref, ws_ref, o_ref,
                         acc_ref, *, n: int, nk: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    xt = xt_ref[...]                     # (BKe, BB) int8
-    bke, bb = xt.shape
-    nb = bke // 4
-    x3 = xt.reshape(nb, 4, bb)
-    idx = idx_ref[...]
-    i3 = idx.reshape(nb, n, 1)
-    slices = []
-    for s in range(n):
-        i_s = i3[:, s, :]
-        # exact in int8: one selected candidate per block position
-        acc = jnp.zeros((nb, bb), xt.dtype)
-        for j in range(4):
-            acc = acc + jnp.where(i_s == j, x3[:, j, :], jnp.zeros_like(acc))
-        slices.append(acc)
-    x_g = jnp.stack(slices, axis=1).reshape(nb * n, bb)
-    acc_ref[...] += jax.lax.dot_general(
-        v_ref[...], x_g,
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    )
+    _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n, jnp.int32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
         deq = acc_ref[...].astype(jnp.float32) * ws_ref[...] * xs_ref[...]
         o_ref[...] = deq.astype(o_ref.dtype)
+
+
+def _gather_int8_raw_kernel(xt_ref, v_ref, idx_ref, o_ref, acc_ref,
+                            *, n: int, nk: int):
+    _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n, jnp.int32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        # raw int32 accumulator out for the psum-then-dequantize ordering
+        o_ref[...] = acc_ref[...]
 
 
 def nm_spmm_gather_int8(
@@ -152,19 +149,46 @@ def nm_spmm_gather_int8(
     per-channel.  The sublane gather selects int8 candidates exactly, the
     reduced-K contraction runs int8 x int8 into an int32 accumulator,
     and the flush dequantizes the (O, B) tile once.
+
+    ``x_scale=None``/``w_scale=None`` returns the raw int32 accumulator
+    (``out_dtype`` forced to int32) for the psum-then-dequantize sharded
+    ordering.
     """
     ke, b = x_t.shape
     kc, o = values.shape
     assert ke * n == kc * 4, (x_t.shape, values.shape, n)
     assert idx.shape == (kc, 1), idx.shape
-    assert x_scale.shape == (1, b) and w_scale.shape == (o, 1), (
-        x_scale.shape, w_scale.shape)
+    raw = x_scale is None
+    assert raw == (w_scale is None), "pass both scales or neither"
+    if raw:
+        out_dtype = jnp.int32
+    else:
+        assert x_scale.shape == (1, b) and w_scale.shape == (o, 1), (
+            x_scale.shape, w_scale.shape)
     block_b = min(block_b, b)
     block_o = min(block_o, o)
     block_ke = min(block_ke, ke)
     assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
     block_kc = block_ke * n // 4
     nk = ke // block_ke
+    if raw:
+        return pl.pallas_call(
+            lambda xr, vr, ir, orf, acc: _gather_int8_raw_kernel(
+                xr, vr, ir, orf, acc, n=n, nk=nk),
+            grid=(b // block_b, o // block_o, nk),
+            in_specs=[
+                pl.BlockSpec((block_ke, block_b), lambda i, j, kk: (kk, i)),
+                pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+                pl.BlockSpec((block_kc, 1), lambda i, j, kk: (kk, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_o, block_b), lambda i, j, kk: (j, i)),
+            out_shape=jax.ShapeDtypeStruct((o, b), jnp.int32),
+            scratch_shapes=[pltpu.VMEM((block_o, block_b), jnp.int32)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(x_t, values, idx)
     return pl.pallas_call(
         lambda xr, vr, ir, xsr, wsr, orf, acc: _gather_int8_kernel(
             xr, vr, ir, xsr, wsr, orf, acc, n=n, nk=nk),

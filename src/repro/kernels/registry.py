@@ -58,6 +58,14 @@ class KernelEntry:
     shape constraints cannot be met (the registry then falls through).
     ``candidates`` enumerates legal block choices for the autotuner.
     ``run(x2d, params, n, m, blocks, interpret, out_dtype)`` executes it.
+
+    ``quantized`` marks the int8 (VNNI-lineage) entries — the engine uses
+    it to annotate activation-scale handling and to route the sharded
+    contraction class.  ``run_quantized(x_q, params, cfg, blocks,
+    interpret) -> int32 (B, O)`` is their raw-accumulator path: it takes
+    ALREADY-quantized activations and returns undequantized int32 partial
+    products, so a contraction-sharded problem can psum the int32
+    partials exactly and dequantize once on the gathered result.
     """
 
     name: str
@@ -67,6 +75,8 @@ class KernelEntry:
     candidates: Callable[..., Sequence[Blocks]]
     backends: Tuple[str, ...] = KERNEL_BACKENDS
     priority: int = 0
+    quantized: bool = False
+    run_quantized: Optional[Callable[..., jax.Array]] = None
 
 
 _REGISTRY: Dict[str, List[KernelEntry]] = {}

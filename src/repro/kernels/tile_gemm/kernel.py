@@ -21,14 +21,20 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.compat import tpu_compiler_params
 
 
-def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+def _gemm_accumulate(x_ref, w_ref, acc_ref, acc_dtype):
+    """Shared init + accumulate step: ONE body for the float and int8
+    (scaled and raw) kernels, so their numerics cannot drift apart."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        x_ref[...], w_ref[...], preferred_element_type=acc_dtype
     )
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    _gemm_accumulate(x_ref, w_ref, acc_ref, jnp.float32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
@@ -71,13 +77,7 @@ def tile_gemm(
 
 
 def _gemm_int8_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, nk: int):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.int32
-    )
+    _gemm_accumulate(x_ref, w_ref, acc_ref, jnp.int32)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
@@ -85,11 +85,22 @@ def _gemm_int8_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, nk: int):
         o_ref[...] = deq.astype(o_ref.dtype)
 
 
+def _gemm_int8_raw_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    _gemm_accumulate(x_ref, w_ref, acc_ref, jnp.int32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        # raw int32 accumulator out, no f32 round-trip: partial products
+        # over a sharded contraction are psum'd EXACTLY before the single
+        # dequantize on the gathered result
+        o_ref[...] = acc_ref[...]
+
+
 def tile_gemm_int8(
     x_q: jax.Array,
     w_q: jax.Array,
-    x_scale: jax.Array,
-    w_scale: jax.Array,
+    x_scale: jax.Array = None,
+    w_scale: jax.Array = None,
     *,
     block_b: int = 128,
     block_o: int = 128,
@@ -103,17 +114,44 @@ def tile_gemm_int8(
     x_scale: (B, 1) f32 per-row, w_scale: (1, O) f32 per-channel.
     The int32 accumulation over K is exact; the two scale vectors are
     applied once, at the flush.
+
+    With ``x_scale=None``/``w_scale=None`` the kernel returns the **raw
+    int32 accumulator** instead (``out_dtype`` forced to int32): the
+    shard_map execution class contracts each contraction shard to int32
+    partials, psums them exactly, and dequantizes once on the result.
     """
     b, k = x_q.shape
     k2, o = w_q.shape
     assert k == k2, (x_q.shape, w_q.shape)
-    assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
-        x_scale.shape, w_scale.shape)
+    raw = x_scale is None
+    assert raw == (w_scale is None), "pass both scales or neither"
+    if raw:
+        out_dtype = jnp.int32
+    else:
+        assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
+            x_scale.shape, w_scale.shape)
     block_b = min(block_b, b)
     block_o = min(block_o, o)
     block_k = min(block_k, k)
     assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
     nk = k // block_k
+    if raw:
+        return pl.pallas_call(
+            lambda xr, wr, orf, acc: _gemm_int8_raw_kernel(
+                xr, wr, orf, acc, nk=nk),
+            grid=(b // block_b, o // block_o, nk),
+            in_specs=[
+                pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+            scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(x_q, w_q)
     return pl.pallas_call(
         lambda xr, wr, xsr, wsr, orf, acc: _gemm_int8_kernel(
             xr, wr, xsr, wsr, orf, acc, nk=nk),

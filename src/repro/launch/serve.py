@@ -2,7 +2,8 @@
 
     python -m repro.launch.serve --arch internlm2_1_8b --smoke \
         [--sparsity 2:4 --mode compressed|gather|rowwise] [--requests 16] \
-        [--quantize int8] [--kernel-backend auto|tpu|interpret|jnp] \
+        [--quantize int8] [--static-scales] \
+        [--kernel-backend auto|tpu|interpret|jnp] \
         [--autotune] [--mesh 2x4]
 
 Weights can live in any SparseLinear serving layout (dense | compressed |
@@ -14,9 +15,14 @@ with ``--kernel-backend jnp``) the documented jnp reference paths run.
 ``--quantize int8`` quantizes every linear to int8 values + per-channel
 scales (the VNNI-lineage storage format): on a kernel backend the
 ``*_int8`` registry entries contract int8 x int8 into int32 and
-dequantize on the way out; the jnp dequantize reference runs everywhere
-else (including under ``--mesh`` — int8 shard_map is a tracked
-follow-on).
+dequantize on the way out — including under ``--mesh``, where the scale
+leaf gets its own PartitionSpec, activations quantize per-shard, and a
+sharded contraction psums int32 partials before one dequantize.
+
+``--static-scales`` (with ``--quantize int8``) calibrates a static
+activation scale per linear site from one prefill-shaped batch before
+the loop starts, so the decode hot path skips the per-row absmax pass
+(``act-scales=static`` in the dispatch report).
 
 ``--mesh DxM`` installs a (data, model) mesh: weights are placed by the
 sharding rules and every hinted linear runs its kernel PER-SHARD under
@@ -80,6 +86,10 @@ def main():
     ap.add_argument("--quantize", default=None, choices=["int8"],
                     help="quantize every linear's values to int8 with "
                          "per-channel scales (VNNI-lineage serving path)")
+    ap.add_argument("--static-scales", action="store_true",
+                    help="with --quantize int8: calibrate static "
+                         "activation scales on one batch so decode skips "
+                         "the per-row absmax pass")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="install a (data, model) mesh, e.g. 2x4 — run "
                          "kernels per-shard via shard_map (needs that many "
@@ -96,6 +106,8 @@ def main():
                     help="autotune kernel block sizes (persisted under "
                          "experiments/autotune/)")
     args = ap.parse_args()
+    if args.static_scales and not args.quantize:
+        ap.error("--static-scales requires --quantize int8")
 
     import contextlib
 
@@ -116,6 +128,17 @@ def main():
         from repro.core.quantize import quantize_tree
 
         params = quantize_tree(params)
+    if args.static_scales:
+        from repro.core.quantize import calibrate_activation_scales
+        from repro.models import forward
+
+        calib_tokens = jax.random.randint(
+            jax.random.PRNGKey(2), (args.batch, min(args.max_len, 32)),
+            1, cfg.vocab_size)
+        params, n_sites = calibrate_activation_scales(
+            params, lambda p: forward(p, cfg, tokens=calib_tokens))
+        print(f"static activation scales calibrated for {n_sites} "
+              f"linear site(s) — decode skips the per-row absmax pass")
     nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
     print(f"serving {cfg.name}: {nbytes/1e6:.1f} MB weights "
           f"({args.sparsity or 'dense'}/{args.mode}"

@@ -88,8 +88,14 @@ def _attn_fwd_impl(q, k, v, causal: bool, chunk: int, q_offset: int,
             p = p.astype(jnp.bfloat16)
         alpha = jnp.exp(m - m_new)
         l = l * alpha + jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+        # p_bf16=False means the probability tensor stays fp32 INCLUDING
+        # through this contraction: unconditionally casting p to the value
+        # dtype here injected bf16 rounding of chunk-local (shifted,
+        # unnormalized) quantities that the single-token decode path cannot
+        # reproduce — the resulting ~1e-2 drift flips near-tied MoE router
+        # top-k picks and broke decode-vs-forward consistency (qwen3).
         acc = acc * alpha + jnp.einsum(
-            "bhgqk,bhkd->bhgqd", p.astype(vj.dtype), vj,
+            "bhgqk,bhkd->bhgqd", p if p_bf16 else p.astype(jnp.float32), vj,
             preferred_element_type=jnp.float32,
         )
         return (m_new, l, acc), None
@@ -155,13 +161,14 @@ def _attn_bwd(causal, chunk, q_offset, p_bf16, s_bf16, res, dout):
         p = jnp.exp(s - lse.astype(s.dtype))                  # exact probs
         if p_bf16 and p.dtype != jnp.bfloat16:
             p = p.astype(jnp.bfloat16)
-        pb = p.astype(v.dtype)
+        # score-sized tensors (p, ds) only drop to bf16 when p_bf16 opts in
+        pb = p.astype(v.dtype) if p_bf16 else p.astype(jnp.float32)
         dv_j = jnp.einsum("bhgqk,bhgqd->bhkd", pb, do_b,
                           preferred_element_type=jnp.float32)
         dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_b, vj,
                         preferred_element_type=jnp.float32)
         ds = p.astype(jnp.float32) * (dp - delta) * scale      # (B,Hkv,G,Tq,chunk)
-        dsb = ds.astype(q.dtype)
+        dsb = ds.astype(q.dtype) if p_bf16 else ds
         dq_acc = dq_acc + jnp.einsum(
             "bhgqk,bhkd->bhgqd", dsb, kj, preferred_element_type=jnp.float32)
         dk_j = jnp.einsum("bhgqk,bhgqd->bhkd", dsb, q,
@@ -184,6 +191,7 @@ def local_attention(
     v: jax.Array,
     *,
     window: int,
+    p_bf16: bool = False,
 ) -> jax.Array:
     """Banded causal attention: position t attends to (t-window, t].
 
@@ -213,8 +221,10 @@ def local_attention(
         mask = (delta >= 0) & (delta < window) & (k_pos[None, :] >= 0)
         s = jnp.where(mask[None, None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
+        # same fp32-probability contract as chunked_attention: only p_bf16
+        # opts the probability tensor into bf16 (keeps decode consistent)
         return jnp.einsum(
-            "bhgqk,bkhd->bhgqd", p.astype(vs.dtype), vs,
+            "bhgqk,bkhd->bhgqd", p.astype(vs.dtype) if p_bf16 else p, vs,
             preferred_element_type=jnp.float32,
         )
 
@@ -247,7 +257,8 @@ def attention_block(
                              p_bf16=cfg.attn_p_bf16,
                              s_bf16=cfg.attn_scores_bf16)
     else:
-        o = local_attention(qg, k, v, window=cfg.window)
+        o = local_attention(qg, k, v, window=cfg.window,
+                            p_bf16=cfg.attn_p_bf16)
     o = o.transpose(0, 3, 1, 2, 4).reshape(b, t, cfg.attn_dim)
     o = o.astype(x.dtype)
     return apply_linear(p["wo"], o, cfg.sparsity, gather="row")
@@ -302,8 +313,12 @@ def decode_attention_block(
         valid = j <= pos
     s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
+    # mirror the forward paths: probabilities stay fp32 unless the config
+    # opts into bf16 score tensors — decode must round at the same points
+    # as the parallel forward or MoE routing flips on near-ties
     o = jnp.einsum(
-        "bhgqk,bkhd->bhgqd", pr.astype(v.dtype), v,
+        "bhgqk,bkhd->bhgqd",
+        pr.astype(v.dtype) if cfg.attn_p_bf16 else pr, v,
         preferred_element_type=jnp.float32,
     )
     o = o.transpose(0, 3, 1, 2, 4).reshape(b, 1, cfg.attn_dim).astype(x.dtype)

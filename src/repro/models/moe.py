@@ -74,6 +74,17 @@ def _route(router: jax.Array, xf: jax.Array, cfg: ModelConfig):
 
 
 def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    """Per-expert gather capacity for one routed token set.
+
+    Note the length-1 decode semantics: a step routes only B tokens, so
+    ``min(tokens, ...)`` caps at B and — since an expert can receive at
+    most ``tokens`` tokens — step decode NEVER drops, while a parallel
+    forward with a small capacity factor may.  Decode-vs-forward parity
+    therefore needs a drop-free capacity factor on the forward side
+    (tests use moe_capacity_factor=16); routing itself is step-invariant:
+    ``lax.top_k`` tie-breaks deterministically by lowest index in both
+    paths, and router logits are fp32.
+    """
     c = int(math.ceil(tokens * cfg.top_k / cfg.num_experts * cfg.moe_capacity_factor))
     return min(tokens, max(8, c))
 
@@ -149,11 +160,21 @@ def _moe_shardmap(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     replicated = x.shape[0] % dp_total != 0
     x_spec = P() if replicated else P(batch_phys)
 
+    def _batch_sliced_dim(key: str, leaf_key: str, v) -> int:
+        """Size of the dim espec() slices over the batch axes, or 0 when
+        the leaf keeps no batch-axis slicing (gather_idx, act_scale,
+        w_out's per-out-channel scale)."""
+        if leaf_key == "scale":
+            return 0 if key == "w_out" else v.shape[-1]
+        if leaf_key == "gather_idx" or v.ndim < 3:
+            return 0
+        return v.shape[-2] if key == "w_out" else v.shape[-1]
+
     def _ff_dim_divisible() -> bool:
         for k, sub in experts.items():
-            for v in jax.tree.leaves(sub):
-                dim = v.shape[-2] if k == "w_out" else v.shape[-1]
-                if dim % dp_total != 0:
+            for lk, v in sub.items():
+                dim = _batch_sliced_dim(k, lk, v)
+                if dim and dim % dp_total != 0:
                     return False
         return True
 
@@ -164,13 +185,22 @@ def _moe_shardmap(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         # ff-partial for its expert slice and one psum over (model + batch
         # axes) combines; no per-layer expert all-gather (EXPERIMENTS
         # §Perf hillclimb 2).
-        def espec(key):
+        def espec(key, leaf_key, v):
+            if leaf_key == "scale":
+                # per-out-channel quantization scale (E, O): slice O with
+                # the operand's out dim (w_in/w_gate shard ff over the
+                # batch axes; w_out's sliced dim is its contraction)
+                return P(model, None) if key == "w_out" else P(model, batch_phys)
+            if leaf_key == "gather_idx" or v.ndim < 3:
+                # contraction-indexed metadata and scalar-ish aux leaves
+                # (act_scale): expert dim only
+                return P(model) if v.ndim else P()
             if key == "w_out":
                 return P(model, batch_phys, None)
             return P(model, None, batch_phys)
 
         expert_specs = {
-            k: jax.tree.map(lambda _, k=k: espec(k), sub)
+            k: {lk: espec(k, lk, lv) for lk, lv in sub.items()}
             for k, sub in experts.items()
         }
         psum_axes = (model,) + bp

@@ -81,6 +81,42 @@ def test_main_fails_on_regression_unless_overridden(tmp_path, monkeypatch):
     assert main([csv, "--baseline", baseline]) == 0
 
 
+def test_new_csv_row_passes_with_note_not_crash(tmp_path, monkeypatch):
+    """A smoke CSV carrying a kernel row the committed baseline has never
+    seen (a freshly-landed kernel/sweep) must exit 0 and report it as a
+    new row with no baseline — never a stack trace or a gate failure."""
+    monkeypatch.delenv("PERF_OVERRIDE", raising=False)
+    csv = _write(tmp_path, "base.csv", SMOKE)
+    baseline = str(tmp_path / "baseline.json")
+    assert main([csv, "--baseline", baseline, "--update"]) == 0
+    grown = SMOKE + (
+        "kernel_int8-sharded/2:4/row@2x4,us_jnp_mesh=2000,"
+        "us_shard_map=9000,dispatch=nm_spmm_int8[interpret]\n")
+    cur = _write(tmp_path, "grown.csv", grown)
+    assert main([cur, "--baseline", baseline]) == 0
+    _, notes = compare(parse_smoke_csv(grown), json.loads(
+        Path(baseline).read_text()), 1.25)
+    assert any("new row, no baseline" in n and "int8-sharded" in n
+               for n in notes)
+
+
+def test_malformed_baseline_rows_fail_without_stack_trace(tmp_path, monkeypatch):
+    """Hand-edited/legacy baseline entries (non-dict row, non-numeric
+    field) must surface as gate messages, not AttributeError crashes."""
+    monkeypatch.delenv("PERF_OVERRIDE", raising=False)
+    csv = _write(tmp_path, "smoke.csv", SMOKE)
+    bad = {"kernel_BERT-L1/2:4": 1000.0,             # row is a bare number
+           "kernel_BERT-L1/1:4/int8": {"us_fp32": "fast"}}  # non-numeric
+    baseline = _write(tmp_path, "bad.json", json.dumps(bad))
+    assert main([csv, "--baseline", baseline]) == 1   # fails, no crash
+    failures, notes = compare(parse_smoke_csv(SMOKE), bad, 1.25)
+    assert any("malformed baseline row" in f[1] for f in failures)
+    assert any("malformed baseline field" in f[1] for f in failures)
+    # a baseline that isn't a JSON object at all: clean error, exit 1
+    not_obj = _write(tmp_path, "list.json", "[1, 2]")
+    assert main([csv, "--baseline", not_obj]) == 1
+
+
 def test_main_errors_without_rows_or_baseline(tmp_path, monkeypatch):
     monkeypatch.delenv("PERF_OVERRIDE", raising=False)
     empty = _write(tmp_path, "empty.csv", "### kernels\nnothing here\n")
