@@ -12,7 +12,11 @@ nothing failed when a kernel regressed.
 
 Rules:
   * every ``kernel_*`` row in the baseline must still be present (a
-    vanished row is a coverage regression and fails);
+    vanished row is a coverage regression and fails) — UNLESS the CSV
+    carries a ``kernel_<prefix>,SKIP,<reason>`` marker covering it
+    (e.g. the mesh sweep on a runner without enough devices, or the fp8
+    sweeps on a TPU without a native fp8 dot): a sweep that announces
+    itself as unsupported on this runner passes with a note;
   * new rows (new kernels/sweeps) pass with a note — commit a refreshed
     baseline in the same PR to start guarding them;
   * timing fields are the ``us_*`` keys; non-timing fields (dispatch
@@ -71,14 +75,38 @@ def parse_smoke_csv(text: str) -> Dict[str, Dict[str, float]]:
     return rows
 
 
+def parse_skip_markers(text: str) -> Dict[str, str]:
+    """``kernel_<prefix>,SKIP,<reason>`` lines -> {prefix: reason}.
+
+    Sweeps that cannot run on the executing runner announce themselves
+    with a SKIP marker instead of timing rows; the gate then excuses
+    every baseline row the prefix covers rather than failing it as a
+    vanished row.
+    """
+    skips: Dict[str, str] = {}
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if (len(parts) >= 2 and parts[0].startswith("kernel_")
+                and parts[1] == "SKIP"):
+            skips[parts[0]] = parts[2] if len(parts) > 2 else ""
+    return skips
+
+
 def compare(current: Dict[str, Dict[str, float]],
             baseline: Dict[str, Dict[str, float]],
-            threshold: float):
+            threshold: float,
+            skips: Dict[str, str] = None):
     """Returns (failures, notes): failures are (row, field, ratio|None)."""
     failures, notes = [], []
+    skips = skips or {}
     for row, base_fields in sorted(baseline.items()):
         if row.startswith("_"):
             continue  # provenance metadata, not a gated row
+        skip = next((r for p, r in skips.items() if row.startswith(p)), None)
+        if skip is not None and row not in current:
+            notes.append(f"skip {row}: sweep skipped on this runner "
+                         f"({skip or 'no reason given'}) — passes")
+            continue
         if not isinstance(base_fields, dict):
             # a malformed/hand-edited baseline row used to surface as an
             # AttributeError stack trace; report it as a gate failure
@@ -136,7 +164,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     with open(args.csv) as f:
-        current = parse_smoke_csv(f.read())
+        text = f.read()
+    current = parse_smoke_csv(text)
     if not current:
         print("check_regression: no kernel rows found in", args.csv)
         return 1
@@ -166,7 +195,8 @@ def main(argv=None) -> int:
               f"object — regenerate with --update")
         return 1
 
-    failures, notes = compare(current, baseline, args.threshold)
+    failures, notes = compare(current, baseline, args.threshold,
+                              skips=parse_skip_markers(text))
     for n in notes:
         print(n)
     override = bool(os.environ.get("PERF_OVERRIDE"))

@@ -3,7 +3,7 @@
 CI caches ``experiments/autotune/`` across runs (actions/cache keyed on
 the registry+autotuner sources).  This script tunes a small,
 representative set of engine problems — dense / 2:4 / 1:4, fp32 AND
-their int8-quantized twins — through the interpret backend and prints
+their int8- and fp8-quantized twins — through the interpret backend and prints
 the store path plus the hit/miss counters, which CI appends to
 ``$GITHUB_STEP_SUMMARY``.  On a warm cache every lookup hits and the
 script is near-instant; on a cold cache it repopulates the store the
@@ -32,11 +32,11 @@ def main() -> None:
     for sp_n in (4, 2, 1):
         mode = "dense" if sp_n == 4 else "compressed"
         cfg = SparsityConfig(n=sp_n, m=4, mode=mode)
-        for quantize in (None, "int8"):
+        for quantize, dt in ((None, jnp.float32), ("int8", jnp.int8),
+                             ("fp8", jnp.float8_e4m3fn)):
             p = convert_to_serving({"w": w}, cfg, mode, quantize=quantize)
-            d = dispatch.plan_for(
-                p, (b, k), cfg,
-                dtype=jnp.int8 if quantize else jnp.float32, dispatch=dcfg)
+            d = dispatch.plan_for(p, (b, k), cfg, dtype=dt,
+                                  dispatch=dcfg)
             if not d.uses_kernel:
                 continue
             if d.blocks_source == "fitted":

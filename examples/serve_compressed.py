@@ -11,8 +11,12 @@ reference path runs (force kernels with REPRO_KERNEL_BACKEND=interpret).
 with per-channel scales — the engine then serves the decode loop through
 the ``nm_spmm_int8`` entry on kernel backends (jnp dequantize reference
 elsewhere) at a further ~2x weight-byte reduction over bf16 values.
+``--quantize fp8`` stores fp8 (e4m3fn) values instead: same byte
+footprint and scale layout, served through ``nm_spmm_fp8`` with fp32
+accumulation on hardware with a native fp8 dot (interpret emulates).
 
-Run: PYTHONPATH=src python examples/serve_compressed.py [--quantize int8]
+Run: PYTHONPATH=src python examples/serve_compressed.py \
+        [--quantize int8|fp8]
 """
 
 import argparse
@@ -35,14 +39,14 @@ BATCH = 4
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quantize", default=None, choices=["int8"],
-                    help="serve int8 values + per-channel scales")
+    ap.add_argument("--quantize", default=None, choices=["int8", "fp8"],
+                    help="serve narrow values + per-channel scales")
     args = ap.parse_args()
     cfg = get_smoke_config("internlm2_1_8b").with_sparsity(
         SparsityConfig(n=2, m=4, mode="compressed"))
     params = init_params(jax.random.PRNGKey(0), cfg)
     if args.quantize:
-        params = quantize_tree(params)
+        params = quantize_tree(params, args.quantize)
     n_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
     print(f"serving {cfg.name} (reduced) with 2:4-compressed "
           f"{args.quantize or 'bf16'} weights "

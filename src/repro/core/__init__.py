@@ -4,7 +4,7 @@
 - ``rowwise``: unstructured -> row-wise N:M lossless cover (paper §III-D/V-E)
 - ``ste``: SR-STE sparse training
 - ``sparse_linear``: the user-facing projection with 4 execution modes
-- ``quantize``: int8 values + per-channel scales (VNNI-lineage storage)
+- ``quantize``: narrow values (int8 | fp8) + per-channel scales
 """
 
 from . import nm, quantize, rowwise, ste, sparse_linear

@@ -1,39 +1,55 @@
-"""Int8 weight quantization for serving layouts (the VNNI-lineage path).
+"""Low-precision weight quantization for serving layouts (int8 + fp8).
 
-The paper's engine extends the VNNI/TMUL dense int8 lineage: tile
-registers hold low-precision values next to 2-bit N:M metadata.  This
+The paper's engine extends the VNNI/TMUL dense low-precision lineage:
+tile registers hold narrow values next to 2-bit N:M metadata.  This
 module is the storage side of that model for every SparseLinear serving
-layout:
+layout, with the **quantized dtype as a parameter** — the same scale
+machinery serves two execution classes:
 
-- **weights** are quantized offline (at ``convert_to_serving`` time) to
-  int8 with **per-output-channel symmetric scales**:
-  ``w ~= q.astype(f32) * scale`` with ``scale = absmax(channel) / 127``;
+- ``int8``: symmetric integers in [-127, 127], kernels contract
+  int8 x int8 into an exact **int32** accumulator;
+- ``fp8`` (``float8_e4m3fn``): 4-bit-mantissa floats up to ±448,
+  kernels contract fp8 x fp8 into an **fp32** accumulator
+  (``preferred_element_type``), the Mosaic-native mixed-precision path.
+
+In both classes:
+
+- **weights** are quantized offline (at ``convert_to_serving`` time)
+  with **per-output-channel symmetric scales**:
+  ``w ~= q.astype(f32) * scale`` with ``scale = absmax(channel) / qmax``
+  (``qmax`` = 127 for int8, 448 for fp8 e4m3fn);
 - **activations** are quantized dynamically per flattened batch row just
-  before an int8 kernel runs (``quantize_rows``), so the MXU contracts
-  int8 x int8 into an int32 accumulator and the output is dequantized
-  once, on the way out: ``y = acc * x_scale[:, None] * w_scale[None, :]``.
+  before a quantized kernel runs (``quantize_rows``), so the MXU
+  contracts narrow x narrow into the wide accumulator and the output is
+  dequantized once, on the way out:
+  ``y = acc * x_scale[:, None] * w_scale[None, :]``.
 
 A quantized layout is an ordinary params dict with one extra ``"scale"``
 leaf (``(O,)`` float32), so it checkpoints, shards, and jits like every
 other linear layout and ``iter_linear_items`` / the dispatch engine
-recognize it structurally.  N:M metadata is untouched: int8 values +
-2-bit indices is exactly the tile-register storage model the paper
-assumes, and the compression/pruning step stays dtype-agnostic.
+recognize it structurally.  Which execution class a layout belongs to is
+carried by the **value leaf's dtype** (int8 vs float8_e4m3fn) — the
+dispatch engine plans on it (see :func:`quant_dtype`).  N:M metadata is
+untouched: narrow values + 2-bit indices is exactly the tile-register
+storage model the paper assumes, and the compression/pruning step stays
+dtype-agnostic.
 
 **Static activation scales** are the decode-side analogue: instead of the
-per-row dynamic absmax pass before every int8 contraction,
+per-row dynamic absmax pass before every quantized contraction,
 :func:`calibrate_activation_scales` runs one forward over a calibration
 batch, records the per-site activation absmax through the dispatch
 engine, and attaches a scalar ``"act_scale"`` leaf to every quantized
 linear.  Kernels then quantize activations against the fixed scale —
 no reduction over the row on the decode hot path — and the scale rides
 the params tree (replicated under any mesh) like every other leaf.
+
+See ``docs/quantization.md`` for the full serving guide (scale layouts,
+calibration workflow, and the sharded pmax/psum/dequantize ordering).
 """
 
 from __future__ import annotations
 
 import contextlib
-import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -42,7 +58,12 @@ import jax.numpy as jnp
 __all__ = [
     "SCALE_KEY",
     "ACT_SCALE_KEY",
+    "QUANT_DTYPES",
+    "canonical_qdtype",
     "is_quantized",
+    "is_quantized_dtype",
+    "quant_dtype",
+    "qmax",
     "has_static_scales",
     "is_linear_leaf",
     "quantize_per_channel",
@@ -64,12 +85,67 @@ _CALIB_KEY = "calib_id"
 # structural detection must stay blind to them
 _AUX_KEYS = {SCALE_KEY, ACT_SCALE_KEY, _CALIB_KEY}
 
-_QMAX = 127.0  # symmetric int8: values in [-127, 127], -128 unused
+# the quantized execution classes and their symmetric dynamic range:
+# int8 keeps [-127, 127] (-128 unused); fp8 e4m3fn saturates at ±448
+# (the format has no inf — an unclipped overflow casts to NaN, so every
+# quantizer here clips BEFORE the cast)
+QUANT_DTYPES: Dict[Any, float] = {
+    jnp.dtype(jnp.int8): 127.0,
+    jnp.dtype(jnp.float8_e4m3fn): 448.0,
+}
+
+# user-facing aliases (launcher flags, convert_to_serving targets)
+_DTYPE_ALIASES = {
+    "int8": jnp.int8,
+    "fp8": jnp.float8_e4m3fn,
+    "float8_e4m3fn": jnp.float8_e4m3fn,
+}
+
+
+def canonical_qdtype(dtype):
+    """Normalize a quantized-dtype spec ("int8" | "fp8" | a dtype) to the
+    jnp dtype, or raise ValueError for anything outside the table."""
+    if isinstance(dtype, str):
+        if dtype not in _DTYPE_ALIASES:
+            raise ValueError(
+                f"unknown quantize target {dtype!r} "
+                f"(expected one of {sorted(_DTYPE_ALIASES)})")
+        dtype = _DTYPE_ALIASES[dtype]
+    dt = jnp.dtype(dtype)
+    if dt not in QUANT_DTYPES:
+        raise ValueError(f"{dt.name} is not a quantized execution dtype "
+                         f"(expected one of "
+                         f"{sorted(d.name for d in QUANT_DTYPES)})")
+    return dt
+
+
+def is_quantized_dtype(dtype) -> bool:
+    """True for the narrow storage dtypes the engine plans as quantized."""
+    try:
+        return jnp.dtype(dtype) in QUANT_DTYPES
+    except TypeError:
+        return False
+
+
+def qmax(dtype) -> float:
+    """Symmetric dynamic range of one quantized dtype (127 / 448)."""
+    return QUANT_DTYPES[canonical_qdtype(dtype)]
 
 
 def is_quantized(params: Dict[str, Any]) -> bool:
     """Structural test: quantized layouts carry a per-channel scale leaf."""
     return isinstance(params, dict) and SCALE_KEY in params
+
+
+def quant_dtype(params: Dict[str, Any]):
+    """The quantized execution dtype of one layout (int8 | float8_e4m3fn),
+    or ``None`` for float layouts.  THE dispatch axis: the engine plans a
+    quantized problem on its value leaf's storage dtype."""
+    if not is_quantized(params):
+        return None
+    key = "w" if "w" in params else "values"
+    dt = jnp.dtype(params[key].dtype)
+    return dt if dt in QUANT_DTYPES else None
 
 
 def has_static_scales(params: Dict[str, Any]) -> bool:
@@ -90,71 +166,98 @@ def is_linear_leaf(tree: Any) -> bool:
         or set(tree) - _AUX_KEYS == {"w"})
 
 
-def quantize_per_channel(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric int8 quantization along the contraction axis.
+def _cast_quantized(x32: jax.Array, dtype) -> jax.Array:
+    """f32 values (already divided by their scale) -> the narrow dtype.
+
+    int8 rounds-to-nearest explicitly; fp8 relies on the cast's
+    round-to-nearest-even.  Both clip to the symmetric range first —
+    for fp8 e4m3fn an unclipped overflow would cast to NaN (the format
+    has no inf), which would silently poison the accumulator.
+    """
+    dt = canonical_qdtype(dtype)
+    q = jnp.clip(x32, -QUANT_DTYPES[dt], QUANT_DTYPES[dt])
+    if dt == jnp.dtype(jnp.int8):
+        q = jnp.round(q)
+    return q.astype(dt)
+
+
+def quantize_per_channel(
+    w: jax.Array, dtype=jnp.int8
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric quantization along the contraction axis.
 
     ``w``: ``(..., K, O)`` float weights (leading dims are stacked
-    layers).  Returns ``(q, scale)`` with ``q`` int8 of the same shape
-    and ``scale`` ``(..., O)`` float32 such that
-    ``dequantize(q, scale) ~= w`` with per-channel absolute error at
-    most ``absmax(channel) / 127``.
+    layers).  Returns ``(q, scale)`` with ``q`` of the requested narrow
+    ``dtype`` (int8 | fp8) in the same shape and ``scale`` ``(..., O)``
+    float32 such that ``dequantize(q, scale) ~= w`` with per-channel
+    absolute error bounded by the dtype's step at the channel absmax
+    (``absmax/127`` for int8; one fp8 ulp at absmax — tighter for most
+    of the distribution, since fp8 steps shrink toward zero).
     """
+    dt = canonical_qdtype(dtype)
     w32 = w.astype(jnp.float32)
     absmax = jnp.max(jnp.abs(w32), axis=-2)                  # (..., O)
-    scale = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny) / _QMAX
-    q = jnp.clip(jnp.round(w32 / scale[..., None, :]), -_QMAX, _QMAX)
-    return q.astype(jnp.int8), scale.astype(jnp.float32)
+    # floor AFTER the division: tiny/qmax is a denormal that XLA may
+    # flush to zero, which would turn all-zero channels into 0/0 = NaN
+    scale = jnp.maximum(absmax / QUANT_DTYPES[dt],
+                        jnp.finfo(jnp.float32).tiny)
+    q = _cast_quantized(w32 / scale[..., None, :], dt)
+    return q, scale.astype(jnp.float32)
 
 
 def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
-    """``(..., K, O)`` int8 + ``(..., O)`` scales -> float32 weights."""
+    """``(..., K, O)`` narrow values + ``(..., O)`` scales -> f32 weights."""
     return q.astype(jnp.float32) * scale[..., None, :]
 
 
 def quantize_rows(
-    x: jax.Array, absmax: Optional[jax.Array] = None
+    x: jax.Array, absmax: Optional[jax.Array] = None, dtype=jnp.int8
 ) -> Tuple[jax.Array, jax.Array]:
-    """Dynamic per-row symmetric int8 quantization of activations.
+    """Dynamic per-row symmetric quantization of activations.
 
     ``x``: ``(B, K)`` float.  Returns ``(x_q, x_scale)`` with ``x_q``
-    int8 ``(B, K)`` and ``x_scale`` ``(B, 1)`` float32.  All-zero rows
-    (idle batch slots) get a tiny nonzero scale so the division is safe.
+    of the narrow ``dtype`` ``(B, K)`` and ``x_scale`` ``(B, 1)``
+    float32.  All-zero rows (idle batch slots) get a tiny nonzero scale
+    so the division is safe.
 
     ``absmax`` overrides the per-row reduction — the sharded execution
     class passes the pmax-lifted GLOBAL row absmax so every contraction
     shard quantizes against one coherent scale (same rounding, same
-    epsilon: the single source of the int8 quantization numerics).
+    epsilon: the single source of the quantization numerics).
     """
+    dt = canonical_qdtype(dtype)
     x32 = x.astype(jnp.float32)
     if absmax is None:
         absmax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)   # (B, 1)
-    scale = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny) / _QMAX
-    q = jnp.clip(jnp.round(x32 / scale), -_QMAX, _QMAX)
-    return q.astype(jnp.int8), scale
+    # same denormal-flush guard as quantize_per_channel: floor the
+    # DIVIDED scale so all-zero rows never divide by a flushed zero
+    scale = jnp.maximum(absmax / QUANT_DTYPES[dt],
+                        jnp.finfo(jnp.float32).tiny)
+    return _cast_quantized(x32 / scale, dt), scale
 
 
 def quantize_rows_static(
-    x: jax.Array, act_scale: jax.Array
+    x: jax.Array, act_scale: jax.Array, dtype=jnp.int8
 ) -> Tuple[jax.Array, jax.Array]:
-    """Static-scale int8 quantization of activations (decode fast path).
+    """Static-scale quantization of activations (decode fast path).
 
     ``act_scale`` is the scalar calibrated scale attached by
     :func:`calibrate_activation_scales`; no per-row reduction runs —
     the whole absmax pass :func:`quantize_rows` does per call is skipped.
-    Values beyond the calibrated range saturate at ±127 (standard static
-    quantization semantics).  Returns ``(x_q, x_scale)`` with ``x_scale``
-    broadcast to the ``(B, 1)`` layout the kernels expect.
+    Values beyond the calibrated range saturate at ±qmax (standard
+    static quantization semantics).  Returns ``(x_q, x_scale)`` with
+    ``x_scale`` broadcast to the ``(B, 1)`` layout the kernels expect.
     """
+    dt = canonical_qdtype(dtype)
     x32 = x.astype(jnp.float32)
     scale = jnp.maximum(act_scale.astype(jnp.float32).reshape(()),
                         jnp.finfo(jnp.float32).tiny)
-    q = jnp.clip(jnp.round(x32 / scale), -_QMAX, _QMAX)
     xs = jnp.full((x.shape[0], 1), scale, jnp.float32)
-    return q.astype(jnp.int8), xs
+    return _cast_quantized(x32 / scale, dt), xs
 
 
-def quantize_linear(params: Dict[str, Any]) -> Dict[str, Any]:
-    """Quantize one SparseLinear serving leaf (any layout) to int8.
+def quantize_linear(params: Dict[str, Any], dtype=jnp.int8) -> Dict[str, Any]:
+    """Quantize one SparseLinear serving leaf (any layout) to ``dtype``.
 
     dense ``{"w"}``, compressed ``{"values", "meta_packed"}`` and gather
     ``{"values", "gather_idx"}`` layouts all quantize their float operand
@@ -166,27 +269,29 @@ def quantize_linear(params: Dict[str, Any]) -> Dict[str, Any]:
         return params
     if "rowwise" in params:
         return {
-            "rowwise": {k: quantize_linear(v)
+            "rowwise": {k: quantize_linear(v, dtype)
                         for k, v in params["rowwise"].items()},
             "inv_perm": params["inv_perm"],
         }
     key = "w" if "w" in params else "values"
-    q, scale = quantize_per_channel(params[key])
+    q, scale = quantize_per_channel(params[key], dtype)
     out = dict(params)
     out[key] = q
     out[SCALE_KEY] = scale
     return out
 
 
-def quantize_tree(tree):
-    """Quantize every SparseLinear leaf in a model params tree to int8.
+def quantize_tree(tree, dtype=jnp.int8):
+    """Quantize every SparseLinear leaf in a model params tree.
 
+    ``dtype`` may be a jnp dtype or an alias string ("int8" | "fp8").
     Keys off :func:`is_linear_leaf` — the same structural detection
     ``dispatch.iter_linear_items`` uses — so embeddings, norms, routers,
     and other raw-array leaves are left untouched.  Stacked-layer leading
     dims are preserved (scales become ``(L, O)``).
     """
-    return map_linear_leaves(tree, quantize_linear)
+    dt = canonical_qdtype(dtype)
+    return map_linear_leaves(tree, lambda leaf: quantize_linear(leaf, dt))
 
 
 def map_linear_leaves(tree, fn: Callable[[Dict[str, Any]], Dict[str, Any]]):
@@ -221,22 +326,45 @@ def map_linear_leaves(tree, fn: Callable[[Dict[str, Any]], Dict[str, Any]]):
 # leading dims broadcast with the layer/expert stacking (scans slice it down
 # to a scalar by call time), and ``sparse_matmul`` reports (id, absmax(x))
 # pairs through an io_callback while the calibration context is active.
+#
+# The active store lives in a module-level slot that the callback resolves
+# AT RUN TIME, not a closure captured at trace time: a jitted batch_fn is
+# traced once and cached, so a closure would bake the FIRST calibration's
+# store into the jaxpr and every later calibration through the cached
+# function would silently write to a discarded dict (n_sites == 0).  The
+# slot is also what makes the callback safe on JAX's callback thread — a
+# threading.local would read as unset there.
 
-_calib_state = threading.local()
+_ACTIVE_STORE: list = [None]
 
 
 def calibration_active() -> bool:
-    return getattr(_calib_state, "store", None) is not None
+    return _ACTIVE_STORE[0] is not None
 
 
 @contextlib.contextmanager
 def _calibrating(store: Dict[int, float]):
-    prev = getattr(_calib_state, "store", None)
-    _calib_state.store = store
+    # one process-global slot means one calibration at a time: a second
+    # concurrent calibration would interleave its absmaxes into this
+    # store (silent accuracy corruption), so fail loudly instead
+    if _ACTIVE_STORE[0] is not None:
+        raise RuntimeError(
+            "a calibration is already active in this process — "
+            "calibrate_activation_scales calls cannot run concurrently "
+            "(the engine's io_callback resolves one process-global store)")
+    _ACTIVE_STORE[0] = store
     try:
         yield store
     finally:
-        _calib_state.store = prev
+        _ACTIVE_STORE[0] = None
+
+
+def _fold(i, a) -> None:
+    store = _ACTIVE_STORE[0]
+    if store is None:
+        return   # baked into a cached trace, re-run outside calibration
+    key = int(i)
+    store[key] = max(store.get(key, 0.0), float(a))
 
 
 def record_calibration(calib_id: jax.Array, x: jax.Array) -> None:
@@ -244,16 +372,11 @@ def record_calibration(calib_id: jax.Array, x: jax.Array) -> None:
 
     Runs inside traced code (scan bodies included): the io_callback fires
     per executed call with concrete values and folds the running max into
-    the active store.  No-op without an active calibration context.
+    whatever store is active WHEN IT FIRES.  No-op without an active
+    calibration context.
     """
-    store = getattr(_calib_state, "store", None)
-    if store is None:
+    if not calibration_active():
         return
-
-    def _fold(i, a):
-        key = int(i)
-        store[key] = max(store.get(key, 0.0), float(a))
-
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
     jax.debug.callback(_fold, calib_id.reshape(()), absmax, ordered=True)
 
@@ -265,18 +388,20 @@ def calibrate_activation_scales(
     """Attach static activation scales to every quantized linear leaf.
 
     ``params`` is a (possibly layer-stacked) serving params tree whose
-    linears are already int8-quantized (``quantize_tree`` /
-    ``convert_to_serving(..., quantize="int8")``).  ``batch_fn`` runs one
-    representative forward over the calibration batch given a params
-    tree — e.g. ``lambda p: forward(p, cfg, tokens=batch)`` — while the
-    engine records, per linear site, the max |activation| it contracts.
+    linears are already quantized (``quantize_tree`` /
+    ``convert_to_serving(..., quantize="int8"|"fp8")``).  ``batch_fn``
+    runs one representative forward over the calibration batch given a
+    params tree — e.g. ``lambda p: forward(p, cfg, tokens=batch)`` —
+    while the engine records, per linear site, the max |activation| it
+    contracts.
 
     Returns ``(params_with_scales, n_calibrated)``: every observed site
-    gains a scalar ``act_scale = absmax / 127`` leaf (stacked layers and
-    expert stacks share one scale — the max over all their activations,
-    the conservative choice); sites the batch never exercised keep the
-    dynamic per-row path.  Decode then skips the per-row absmax pass
-    entirely (see :func:`quantize_rows_static`).
+    gains a scalar ``act_scale = absmax / qmax`` leaf (``qmax`` follows
+    the site's own storage dtype, so int8 and fp8 leaves can coexist in
+    one tree; stacked layers and expert stacks share one scale — the max
+    over all their activations, the conservative choice); sites the batch
+    never exercised keep the dynamic per-row path.  Decode then skips the
+    per-row absmax pass entirely (see :func:`quantize_rows_static`).
     """
     counter = [0]
 
@@ -310,11 +435,14 @@ def calibrate_activation_scales(
         if site not in store:
             return leaf          # never exercised: stays dynamic
         out = dict(leaf)
-        # broadcast over the stacked leading dims (layer scans slice every
-        # leaf, so a bare scalar would break lax.scan over the stack)
+        # the scale follows the leaf's own storage dtype (int8 -> /127,
+        # fp8 -> /448) and broadcasts over the stacked leading dims
+        # (layer scans slice every leaf, so a bare scalar would break
+        # lax.scan over the stack)
         key = "w" if "w" in leaf else "values"
+        dt = quant_dtype(leaf) or jnp.dtype(jnp.int8)
         out[ACT_SCALE_KEY] = jnp.full(leaf[key].shape[:-2],
-                                      max(store[site], 0.0) / _QMAX,
+                                      max(store[site], 0.0) / QUANT_DTYPES[dt],
                                       jnp.float32)
         return out
 

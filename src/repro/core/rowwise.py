@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import nm
+from .quantize import is_quantized_dtype
 
 __all__ = [
     "rowwise_tiers",
@@ -214,10 +215,10 @@ def rowwise_apply(
     for key in sorted(segs, key=lambda k: int(k[1:])):
         n = int(key[1:])
         scfg = SparsityConfig(n=n, m=cfg.m, mode="compressed")
-        # int8-quantized segments keep float activations (the engine owns
-        # activation quantization); float segments cast x to match
+        # quantized segments (int8 | fp8) keep float activations (the
+        # engine owns activation quantization); float segments cast x
         vdt = segs[key]["values"].dtype
-        xin = x if vdt == jnp.int8 else x.astype(vdt)
+        xin = x if is_quantized_dtype(vdt) else x.astype(vdt)
         outs.append(sparse_matmul(xin, segs[key], scfg, shard=shard,
                                   dispatch=dispatch))
     y_perm = jnp.concatenate(outs, axis=-1)

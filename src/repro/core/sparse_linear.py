@@ -188,20 +188,24 @@ def convert_to_serving(
 ) -> Dict[str, Any]:
     """Offline conversion: dense/masked trained weights -> serving layout.
 
-    ``quantize="int8"`` additionally quantizes the layout's float operand
-    to int8 with per-output-channel symmetric scales (all serving modes,
-    dense and rowwise included) — the VNNI-lineage storage format the
-    int8 kernel path consumes.  Quantization happens after pruning and
-    compression, so the scales are computed on the kept values.
+    ``quantize="int8"`` / ``quantize="fp8"`` additionally quantizes the
+    layout's float operand to the narrow dtype with per-output-channel
+    symmetric scales (all serving modes, dense and rowwise included) —
+    the storage format the matching quantized kernel path consumes
+    (int8: VNNI lineage, int32 accumulation; fp8 e4m3fn: fp32
+    accumulation).  Quantization happens after pruning and compression,
+    so the scales are computed on the kept values.
     """
-    if quantize not in (None, "int8"):
-        raise ValueError(f"unknown quantize target {quantize!r}")
+    qdtype = None
+    if quantize is not None:
+        from .quantize import canonical_qdtype
+        qdtype = canonical_qdtype(quantize)   # raises on unknown targets
 
     def _q(layout: Dict[str, Any]) -> Dict[str, Any]:
-        if quantize is None:
+        if qdtype is None:
             return layout
         from .quantize import quantize_linear
-        return quantize_linear(layout)
+        return quantize_linear(layout, qdtype)
 
     if "w" not in params:
         return _q(params)

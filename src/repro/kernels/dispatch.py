@@ -24,27 +24,36 @@ no collective.  The jnp reference remains the fallback whenever the local
 shape doesn't fit a kernel or a spec slices the N:M metadata axis
 non-divisibly.
 
-dtype is a dispatch axis: int8-quantized layouts (an extra per-channel
-``"scale"`` leaf next to int8 values — see ``repro.core.quantize``) plan
-with ``dtype=int8`` and resolve to the VNNI-lineage ``*_int8`` kernel
-entries, which quantize activations per row on the way in (against a
-calibrated static ``act_scale`` when the leaf carries one — decode skips
-the absmax pass), pad odd row counts up to the 32-row int8 sublane
-quantum, contract int8 x int8 into int32, and dequantize once on the way
-out.  The jnp dequantize-reference formulation is their fallback — under
-``jax.grad`` and when the int8 tiling constraints don't fit (int8
-contraction blocks are multiples of the 32-row sublane quantum).  Under
-a use-site ``ShardSpec`` the int8 entries run per-shard like the float
-ones: the weight-scale leaf gets its own PartitionSpec (out-dim axes),
-activations quantize inside the shard body, and a sharded contraction
-psums the **raw int32 partials** (shards share one row scale via a pmax
-of local absmaxes) before the single dequantize on the gathered result.
-Autotune cache keys carry the dtype, so an int8 problem never shares
-tuned blocks with its fp32 twin.
+dtype is a dispatch axis with THREE execution classes: float, int8, and
+fp8.  Quantized layouts (an extra per-channel ``"scale"`` leaf next to
+narrow values — see ``repro.core.quantize``) plan on their storage dtype
+(``int8`` or ``float8_e4m3fn``) and resolve to the matching ``*_int8`` /
+``*_fp8`` kernel entries, which quantize activations per row on the way
+in (against a calibrated static ``act_scale`` when the leaf carries one
+— decode skips the absmax pass), pad odd row counts up to the 32-row
+narrow-dtype sublane quantum, contract narrow x narrow into the wide
+accumulator (int32 for int8, fp32 for fp8 via
+``preferred_element_type``), and dequantize once on the way out.  The
+jnp dequantize-reference formulation is their fallback — under
+``jax.grad``, when the quantized tiling constraints don't fit
+(quantized contraction blocks are multiples of the 32-row sublane
+quantum), and for fp8 on TPUs without a native fp8 MXU dot
+(``registry.fp8_native_dot``; interpret mode always emulates).  Under
+a use-site ``ShardSpec`` the quantized entries run per-shard like the
+float ones: the weight-scale leaf gets its own PartitionSpec (out-dim
+axes), activations quantize inside the shard body, and a sharded
+contraction psums the **raw accumulator partials** (shards share one
+row scale via a pmax of local absmaxes) before the single dequantize on
+the gathered result.  Autotune cache keys carry the dtype, so the three
+execution classes of one problem shape never share tuned blocks.
 
 Block sizes come from the autotuner (in-process cache + JSON store under
 ``experiments/autotune/``, keyed by device kind) when enabled, else from
 per-problem fitting.
+
+``docs/architecture.md`` walks the full dispatch lifecycle (ShardSpec ->
+plan -> fit_blocks -> shard_map body -> psum/dequantize) and catalogs
+every fallback reason string this module can emit.
 """
 
 from __future__ import annotations
@@ -206,7 +215,8 @@ class DispatchDecision:
     local_dims: Optional[Tuple[int, int, int]] = None  # per-shard (b, ke, o)
     shards: Optional[Tuple[int, int, int]] = None      # mesh split of (b, ke, o)
     collective: Optional[str] = None                   # psum | none
-    act_scales: Optional[str] = None   # int8 entries: dynamic | static
+    act_scales: Optional[str] = None   # quantized entries: dynamic | static
+    dtype: Optional[str] = None    # canonical execution dtype the plan ran on
 
     @property
     def uses_kernel(self) -> bool:
@@ -223,6 +233,8 @@ def describe(d: DispatchDecision) -> str:
     bb, bke, bo = d.blocks
     base = (f"{d.mode}: {d.kernel}[{d.backend}] "
             f"blocks=(b={bb},ke={bke},o={bo})")
+    if d.dtype is not None:
+        base += f" dtype={d.dtype}"
     if d.uses_shard_map:
         lb, lke, lo = d.local_dims
         sb, ske, so = d.shards
@@ -301,15 +313,20 @@ def _is_int8(dtype) -> bool:
     return jnp.dtype(dtype) == jnp.int8
 
 
-# int8 packs 4x more values per 32-bit lane register than fp32, so the
-# sublane quantum of an int8 operand tile is 32 rows (vs 8 for fp32) —
-# int8 contraction blocks must be multiples of 32, and the float entries
-# decline int8 problems outright (casting would break the storage model).
-_INT8_SUBLANE = 32
+def _is_fp8(dtype) -> bool:
+    return jnp.dtype(dtype) == jnp.float8_e4m3fn
+
+
+# the narrow dtypes (int8, fp8) pack 4x more values per 32-bit lane
+# register than fp32, so the sublane quantum of a quantized operand tile
+# is 32 rows (vs 8 for fp32) — quantized contraction blocks must be
+# multiples of 32, and the float entries decline quantized problems
+# outright (casting would break the storage model).
+_Q_SUBLANE = 32
 
 
 def _fit_tile_gemm(b, ke, o, n, m, dtype):
-    if _is_int8(dtype):
+    if quant.is_quantized_dtype(dtype):
         return None
     bb = largest_fitting_block(b, 128)
     bo = largest_fitting_block(o, 128)
@@ -335,7 +352,7 @@ def _nm_ke_multiple(n: int) -> int:
 
 
 def _fit_nm_spmm(b, ke, o, n, m, dtype):
-    if m != 4 or _is_int8(dtype):
+    if m != 4 or quant.is_quantized_dtype(dtype):
         return None  # kernel fixes M=4 (paper's detailed design)
     bb = largest_fitting_block(b, 128)
     bo = largest_fitting_block(o, 128)
@@ -356,7 +373,7 @@ def _run_nm_spmm(x2, params, cfg, g, blocks, interpret, out_dtype):
 
 
 def _fit_nm_gather(b, ke, o, n, m, dtype):
-    if m != 4 or _is_int8(dtype):
+    if m != 4 or quant.is_quantized_dtype(dtype):
         return None
     bb = largest_fitting_block(b, 128)
     bo = largest_fitting_block(o, 128)
@@ -397,41 +414,48 @@ registry.register(KernelEntry(
 ))
 
 
-# --- int8 (VNNI-lineage) entries: int8 values x int8 row-quantized
-# activations contracted into int32, dequantized once on the way out.
-# Registered at higher priority; their fit_blocks only accept int8
-# problems, so float dispatch is untouched.
+# --- quantized entries (int8 VNNI lineage + fp8 e4m3fn): narrow values
+# x narrow row-quantized activations contracted into the wide
+# accumulator (int32 / fp32), dequantized once on the way out.
+# Registered at higher priority; their fit_blocks only accept problems
+# of their own storage dtype, so float dispatch is untouched and the
+# two quantized classes never collide.
 
-def _int8_ke_multiple(n: int) -> int:
+def _q_ke_multiple(n: int) -> int:
     # the compressed values tile (block_kc = block_ke*n/4 rows) must hit
-    # the 32-row int8 sublane quantum: block_ke*n % 128 == 0.  This also
-    # covers meta packing (block_ke*n % 16) and the dense/gather cases.
-    return (4 * _INT8_SUBLANE) // math.gcd(n, 4 * _INT8_SUBLANE)
+    # the 32-row narrow-dtype sublane quantum: block_ke*n % 128 == 0.
+    # This also covers meta packing (block_ke*n % 16) and the
+    # dense/gather cases.
+    return (4 * _Q_SUBLANE) // math.gcd(n, 4 * _Q_SUBLANE)
 
 
-def _int8_padded_b(b: int) -> int:
-    """Row count of the int8 activation tile after final-block padding.
+def _q_padded_b(b: int) -> int:
+    """Row count of the quantized activation tile after final-block
+    padding.
 
-    The quantized activation operand is int8 too, so its sublane (row)
+    The quantized activation operand is narrow too, so its sublane (row)
     axis carries the same 32-row quantum as the values tile.  Rather than
     rejecting row counts off the quantum — which would throw every odd
     decode batch (e.g. b=3) back to the dequantize reference — the run
     adapters zero-pad the final row block up to the quantum and slice the
     output back; blocks are fitted against the padded row count.
     """
-    return b + (-b) % _INT8_SUBLANE
+    return b + (-b) % _Q_SUBLANE
 
 
-def _quantize_acts(x2, params):
-    """int8 activations + (B, 1) scales: static (calibrated) when the
-    leaf carries an ``act_scale``, else the dynamic per-row absmax pass."""
+def _quantize_acts(x2, params, dtype):
+    """Narrow activations + (B, 1) scales: static (calibrated) when the
+    leaf carries an ``act_scale``, else the dynamic per-row absmax pass.
+    ``dtype`` is the layout's storage dtype (int8 | fp8) — activations
+    quantize to the same class the weights live in."""
     if quant.ACT_SCALE_KEY in params:
-        return quant.quantize_rows_static(x2, params[quant.ACT_SCALE_KEY])
-    return quant.quantize_rows(x2)
+        return quant.quantize_rows_static(x2, params[quant.ACT_SCALE_KEY],
+                                          dtype)
+    return quant.quantize_rows(x2, dtype=dtype)
 
 
 def _pad_rows(xq, xs, b_pad: int):
-    """Zero-pad quantized rows to the int8 sublane quantum (padded rows
+    """Zero-pad quantized rows to the narrow sublane quantum (padded rows
     contract to zero and are sliced off the output)."""
     pad = b_pad - xq.shape[0]
     if pad == 0:
@@ -441,139 +465,189 @@ def _pad_rows(xq, xs, b_pad: int):
     return xq, xs
 
 
-def _fit_int8_rows(b: int):
-    return largest_fitting_block(_int8_padded_b(b), 128, _INT8_SUBLANE)
+def _fit_q_rows(b: int):
+    return largest_fitting_block(_q_padded_b(b), 128, _Q_SUBLANE)
 
 
-def _fit_tile_gemm_int8(b, ke, o, n, m, dtype):
-    if not _is_int8(dtype):
-        return None
-    bb = _fit_int8_rows(b)
+def _fit_dense_q(b, ke, o):
+    bb = _fit_q_rows(b)
     bo = largest_fitting_block(o, 128)
-    bke = largest_fitting_block(ke, 512, _INT8_SUBLANE)
+    bke = largest_fitting_block(ke, 512, _Q_SUBLANE)
     if bb is None or bo is None or bke is None:
         return None
     return (bb, bke, bo)
 
 
-def _run_tile_gemm_int8(x2, params, cfg, g, blocks, interpret, out_dtype):
-    from repro.kernels.tile_gemm.kernel import tile_gemm_int8
-
-    bb, bke, bo = blocks
-    b = x2.shape[0]
-    xq, xs = _pad_rows(*_quantize_acts(x2, params), _int8_padded_b(b))
-    ws = params[quant.SCALE_KEY].reshape(1, -1)
-    y = tile_gemm_int8(xq, g(params["w"]), xs, ws,
-                       block_b=bb, block_k=bke, block_o=bo,
-                       out_dtype=out_dtype, interpret=interpret)
-    return y[:b]
+def _fit_nm_q(b, ke, o, n):
+    bb = _fit_q_rows(b)
+    bo = largest_fitting_block(o, 128)
+    bke = largest_fitting_block(ke, 512, _q_ke_multiple(n))
+    if bb is None or bo is None or bke is None:
+        return None
+    return (bb, bke, bo)
 
 
-def _partial_tile_gemm_int8(xq, params, cfg, blocks, interpret):
-    from repro.kernels.tile_gemm.kernel import tile_gemm_int8
+def _fit_tile_gemm_int8(b, ke, o, n, m, dtype):
+    return _fit_dense_q(b, ke, o) if _is_int8(dtype) else None
 
-    bb, bke, bo = blocks
-    return tile_gemm_int8(xq, params["w"],
-                          block_b=bb, block_k=bke, block_o=bo,
-                          interpret=interpret)
+
+def _fit_tile_gemm_fp8(b, ke, o, n, m, dtype):
+    return _fit_dense_q(b, ke, o) if _is_fp8(dtype) else None
 
 
 def _fit_nm_spmm_int8(b, ke, o, n, m, dtype):
     if m != 4 or not _is_int8(dtype):
         return None
-    bb = _fit_int8_rows(b)
-    bo = largest_fitting_block(o, 128)
-    bke = largest_fitting_block(ke, 512, _int8_ke_multiple(n))
-    if bb is None or bo is None or bke is None:
+    return _fit_nm_q(b, ke, o, n)
+
+
+def _fit_nm_spmm_fp8(b, ke, o, n, m, dtype):
+    if m != 4 or not _is_fp8(dtype):
         return None
-    return (bb, bke, bo)
-
-
-def _run_nm_spmm_int8(x2, params, cfg, g, blocks, interpret, out_dtype):
-    from repro.kernels.nm_spmm.kernel import nm_spmm_int8
-
-    bb, bke, bo = blocks
-    b = x2.shape[0]
-    xq, xs = _pad_rows(*_quantize_acts(x2, params), _int8_padded_b(b))
-    ws = params[quant.SCALE_KEY].reshape(1, -1)
-    y = nm_spmm_int8(xq, g(params["values"]), params["meta_packed"],
-                     xs, ws, cfg.n,
-                     block_b=bb, block_o=bo, block_ke=bke,
-                     out_dtype=out_dtype, interpret=interpret)
-    return y[:b]
-
-
-def _partial_nm_spmm_int8(xq, params, cfg, blocks, interpret):
-    from repro.kernels.nm_spmm.kernel import nm_spmm_int8
-
-    bb, bke, bo = blocks
-    return nm_spmm_int8(xq, params["values"], params["meta_packed"],
-                        None, None, cfg.n,
-                        block_b=bb, block_o=bo, block_ke=bke,
-                        interpret=interpret)
+    return _fit_nm_q(b, ke, o, n)
 
 
 def _fit_nm_gather_int8(b, ke, o, n, m, dtype):
     if m != 4 or not _is_int8(dtype):
         return None
-    bb = _fit_int8_rows(b)
-    bo = largest_fitting_block(o, 128)
-    bke = largest_fitting_block(ke, 512, _int8_ke_multiple(n))
-    if bb is None or bo is None or bke is None:
+    return _fit_nm_q(b, ke, o, n)
+
+
+def _fit_nm_gather_fp8(b, ke, o, n, m, dtype):
+    if m != 4 or not _is_fp8(dtype):
         return None
-    return (bb, bke, bo)
+    return _fit_nm_q(b, ke, o, n)
 
 
-def _run_nm_gather_int8(x2, params, cfg, g, blocks, interpret, out_dtype):
-    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_int8
+def _dense_q_kernel(dtype):
+    from repro.kernels.tile_gemm.kernel import tile_gemm_fp8, tile_gemm_int8
 
+    return tile_gemm_fp8 if _is_fp8(dtype) else tile_gemm_int8
+
+
+def _nm_q_kernel(dtype):
+    from repro.kernels.nm_spmm.kernel import nm_spmm_fp8, nm_spmm_int8
+
+    return nm_spmm_fp8 if _is_fp8(dtype) else nm_spmm_int8
+
+
+def _gather_q_kernel(dtype):
+    from repro.kernels.nm_spmm_gather.kernel import (nm_spmm_gather_fp8,
+                                                     nm_spmm_gather_int8)
+
+    return nm_spmm_gather_fp8 if _is_fp8(dtype) else nm_spmm_gather_int8
+
+
+def _run_tile_gemm_q(x2, params, cfg, g, blocks, interpret, out_dtype):
     bb, bke, bo = blocks
     b = x2.shape[0]
-    xq, xs = _pad_rows(*_quantize_acts(x2, params), _int8_padded_b(b))
+    qdt = params["w"].dtype
+    xq, xs = _pad_rows(*_quantize_acts(x2, params, qdt), _q_padded_b(b))
+    ws = params[quant.SCALE_KEY].reshape(1, -1)
+    y = _dense_q_kernel(qdt)(xq, g(params["w"]), xs, ws,
+                             block_b=bb, block_k=bke, block_o=bo,
+                             out_dtype=out_dtype, interpret=interpret)
+    return y[:b]
+
+
+def _partial_tile_gemm_q(xq, params, cfg, blocks, interpret):
+    bb, bke, bo = blocks
+    return _dense_q_kernel(params["w"].dtype)(
+        xq, params["w"], block_b=bb, block_k=bke, block_o=bo,
+        interpret=interpret)
+
+
+def _run_nm_spmm_q(x2, params, cfg, g, blocks, interpret, out_dtype):
+    bb, bke, bo = blocks
+    b = x2.shape[0]
+    qdt = params["values"].dtype
+    xq, xs = _pad_rows(*_quantize_acts(x2, params, qdt), _q_padded_b(b))
+    ws = params[quant.SCALE_KEY].reshape(1, -1)
+    y = _nm_q_kernel(qdt)(xq, g(params["values"]), params["meta_packed"],
+                          xs, ws, cfg.n,
+                          block_b=bb, block_o=bo, block_ke=bke,
+                          out_dtype=out_dtype, interpret=interpret)
+    return y[:b]
+
+
+def _partial_nm_spmm_q(xq, params, cfg, blocks, interpret):
+    bb, bke, bo = blocks
+    return _nm_q_kernel(params["values"].dtype)(
+        xq, params["values"], params["meta_packed"], None, None, cfg.n,
+        block_b=bb, block_o=bo, block_ke=bke, interpret=interpret)
+
+
+def _run_nm_gather_q(x2, params, cfg, g, blocks, interpret, out_dtype):
+    bb, bke, bo = blocks
+    b = x2.shape[0]
+    qdt = params["values"].dtype
+    xq, xs = _pad_rows(*_quantize_acts(x2, params, qdt), _q_padded_b(b))
     ws = params[quant.SCALE_KEY].reshape(-1, 1)
     idx = params["gather_idx"].reshape(-1, 1)
-    y_t = nm_spmm_gather_int8(xq.T, g(params["values"]), idx, xs.T, ws,
-                              cfg.n, block_b=bb, block_o=bo, block_ke=bke,
-                              out_dtype=out_dtype, interpret=interpret)
+    y_t = _gather_q_kernel(qdt)(xq.T, g(params["values"]), idx, xs.T, ws,
+                                cfg.n, block_b=bb, block_o=bo, block_ke=bke,
+                                out_dtype=out_dtype, interpret=interpret)
     return y_t.T[:b]
 
 
-def _partial_nm_gather_int8(xq, params, cfg, blocks, interpret):
-    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_int8
-
+def _partial_nm_gather_q(xq, params, cfg, blocks, interpret):
     bb, bke, bo = blocks
     idx = params["gather_idx"].reshape(-1, 1)
-    y_t = nm_spmm_gather_int8(xq.T, params["values"], idx, None, None,
-                              cfg.n, block_b=bb, block_o=bo, block_ke=bke,
-                              interpret=interpret)
+    y_t = _gather_q_kernel(params["values"].dtype)(
+        xq.T, params["values"], idx, None, None, cfg.n,
+        block_b=bb, block_o=bo, block_ke=bke, interpret=interpret)
     return y_t.T
 
 
-def _int8_candidates(b, ke, o, ke_multiple):
-    cands = _enumerate(_int8_padded_b(b), ke, o, ke_multiple)
-    return [c for c in cands if c[0] % _INT8_SUBLANE == 0] or cands
+def _q_candidates(b, ke, o, ke_multiple):
+    cands = _enumerate(_q_padded_b(b), ke, o, ke_multiple)
+    return [c for c in cands if c[0] % _Q_SUBLANE == 0] or cands
 
 
 registry.register(KernelEntry(
     name="tile_gemm_int8", mode="dense", priority=10,
-    fit_blocks=_fit_tile_gemm_int8, run=_run_tile_gemm_int8,
-    quantized=True, run_quantized=_partial_tile_gemm_int8,
-    candidates=lambda b, ke, o, n, m, dtype: _int8_candidates(
-        b, ke, o, _INT8_SUBLANE),
+    fit_blocks=_fit_tile_gemm_int8, run=_run_tile_gemm_q,
+    quantized=True, run_quantized=_partial_tile_gemm_q,
+    candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
+        b, ke, o, _Q_SUBLANE),
 ))
 registry.register(KernelEntry(
     name="nm_spmm_int8", mode="compressed", priority=10,
-    fit_blocks=_fit_nm_spmm_int8, run=_run_nm_spmm_int8,
-    quantized=True, run_quantized=_partial_nm_spmm_int8,
-    candidates=lambda b, ke, o, n, m, dtype: _int8_candidates(
-        b, ke, o, _int8_ke_multiple(n)),
+    fit_blocks=_fit_nm_spmm_int8, run=_run_nm_spmm_q,
+    quantized=True, run_quantized=_partial_nm_spmm_q,
+    candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
+        b, ke, o, _q_ke_multiple(n)),
 ))
 registry.register(KernelEntry(
     name="nm_spmm_gather_int8", mode="gather", priority=10,
-    fit_blocks=_fit_nm_gather_int8, run=_run_nm_gather_int8,
-    quantized=True, run_quantized=_partial_nm_gather_int8,
-    candidates=lambda b, ke, o, n, m, dtype: _int8_candidates(
-        b, ke, o, _int8_ke_multiple(n)),
+    fit_blocks=_fit_nm_gather_int8, run=_run_nm_gather_q,
+    quantized=True, run_quantized=_partial_nm_gather_q,
+    candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
+        b, ke, o, _q_ke_multiple(n)),
+))
+registry.register(KernelEntry(
+    name="tile_gemm_fp8", mode="dense", priority=10,
+    fit_blocks=_fit_tile_gemm_fp8, run=_run_tile_gemm_q,
+    quantized=True, run_quantized=_partial_tile_gemm_q,
+    supported=registry.supports_fp8,
+    candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
+        b, ke, o, _Q_SUBLANE),
+))
+registry.register(KernelEntry(
+    name="nm_spmm_fp8", mode="compressed", priority=10,
+    fit_blocks=_fit_nm_spmm_fp8, run=_run_nm_spmm_q,
+    quantized=True, run_quantized=_partial_nm_spmm_q,
+    supported=registry.supports_fp8,
+    candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
+        b, ke, o, _q_ke_multiple(n)),
+))
+registry.register(KernelEntry(
+    name="nm_spmm_gather_fp8", mode="gather", priority=10,
+    fit_blocks=_fit_nm_gather_fp8, run=_run_nm_gather_q,
+    quantized=True, run_quantized=_partial_nm_gather_q,
+    supported=registry.supports_fp8,
+    candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
+        b, ke, o, _q_ke_multiple(n)),
 ))
 
 
@@ -709,17 +783,20 @@ def plan(
     ``shard_map`` over the registry kernel — fitting blocks against the
     per-shard local shape.  ``sharded`` without a spec (mesh installed but
     the call-site gave no PartitionSpecs) still falls back to jnp.
-    int8 problems keep the shard_map class too: the per-channel weight
-    scale rides along as an extra leaf with its own PartitionSpec and
-    activations quantize inside the shard body.  ``static_scales`` records
+    Quantized problems (int8 | fp8) keep the shard_map class too: the
+    per-channel weight scale rides along as an extra leaf with its own
+    PartitionSpec and activations quantize inside the shard body.
+    ``static_scales`` records
     whether the use-site carries calibrated activation scales (decode
     skips the per-row absmax pass); it only annotates the decision.
     """
     dcfg = dispatch or _DEFAULT
     backend = registry.resolve_backend(dcfg.backend)
+    dt_name = dtype_name(dtype)
 
     def _jnp(reason):
-        return DispatchDecision(mode, "jnp", JNP_REFERENCE, None, reason)
+        return DispatchDecision(mode, "jnp", JNP_REFERENCE, None, reason,
+                                dtype=dt_name)
 
     if mode == "masked":
         return _jnp("SR-STE training path needs its custom VJP")
@@ -764,7 +841,7 @@ def plan(
         return DispatchDecision(
             mode, backend, entry.name, blocks, reason, blocks_source=source,
             placement=placement, local_dims=local, shards=shards if shard else None,
-            collective=collective, act_scales=acts)
+            collective=collective, act_scales=acts, dtype=dt_name)
 
     if dcfg.blocks is not None:
         return _decision(tuple(dcfg.blocks), "blocks pinned by config",
@@ -895,15 +972,18 @@ def pretune(params_tree, batch: int, cfg,
         except ValueError:
             continue
         hint = gather_hint(names)
-        sig = (hint, lcfg.n, lcfg.m) + tuple(
+        dt = leaf.get("values", leaf.get("w")).dtype
+        # the storage dtype is part of the problem identity: an int8 and
+        # an fp8 twin of the same shapes are DIFFERENT tuning problems
+        sig = (hint, lcfg.n, lcfg.m, dtype_name(dt)) + tuple(
             sorted((k, tuple(v.shape)) for k, v in leaf.items()))
         if sig in seen:
             continue
         seen.add(sig)
-        dt = leaf.get("values", leaf.get("w")).dtype
-        # int8-quantized leaves plan on dtype=int8 but consume float
-        # activations (the engine row-quantizes them itself)
-        x = jnp.zeros((batch, ke), jnp.float32 if dt == jnp.int8 else dt)
+        # quantized leaves plan on their storage dtype (int8 | fp8) but
+        # consume float activations (the engine row-quantizes them)
+        x = jnp.zeros((batch, ke),
+                      jnp.float32 if quant.is_quantized_dtype(dt) else dt)
         mode = _mode_of(leaf, lcfg)
         _, o = _problem_dims(mode, leaf, x)
         shard = leaf_shard_spec(names, cfg)
@@ -962,13 +1042,14 @@ def _shard_map_runner(
     with ``psum`` over those axes — the out-dim-sharded case needs no
     collective, the output simply stays sharded on the model axis.
 
-    int8 entries keep their ordering contract under a sharded
-    contraction: activations quantize per-row INSIDE the shard body (the
-    local absmax is lifted to the row's global absmax with a ``pmax``
-    over the contraction axes so every shard shares one scale; calibrated
-    static scales are coherent by construction), each shard contracts
-    int8 x int8 into **raw int32 partials**, the partials are psum'd
-    exactly in int32, and the gathered result is dequantized once.
+    Quantized entries (int8 and fp8 alike) keep their ordering contract
+    under a sharded contraction: activations quantize per-row INSIDE the
+    shard body (the local absmax is lifted to the row's global absmax
+    with a ``pmax`` over the contraction axes so every shard shares one
+    scale; calibrated static scales are coherent by construction), each
+    shard contracts narrow x narrow into **raw accumulator partials**
+    (int32 for int8 — exact; fp32 for fp8), the partials are psum'd in
+    the accumulator dtype, and the gathered result is dequantized once.
     Float entries psum fp32 partials before the output cast, as before.
     """
     from jax.experimental.shard_map import shard_map
@@ -977,22 +1058,23 @@ def _shard_map_runner(
     p_specs = _shard_param_specs(mode, shard, params)
     out_spec = P(shard.batch, shard.o)
     needs_psum = shard.collective == "psum"
-    int8_psum = needs_psum and entry.run_quantized is not None
+    quantized_psum = needs_psum and entry.run_quantized is not None
+    qdt = quant.quant_dtype(params)
 
     def body(x_l, params_l):
-        if int8_psum:
+        if quantized_psum:
             b_l = x_l.shape[0]
             if quant.ACT_SCALE_KEY in params_l:
                 xq, xs = quant.quantize_rows_static(
-                    x_l, params_l[quant.ACT_SCALE_KEY])
+                    x_l, params_l[quant.ACT_SCALE_KEY], qdt)
             else:
                 # per-row absmax of the LOCAL slice, lifted to the global
-                # row absmax so the int32 partials share one scale
+                # row absmax so the raw partials share one scale
                 absmax = jnp.max(jnp.abs(x_l.astype(jnp.float32)),
                                  axis=-1, keepdims=True)
                 xq, xs = quant.quantize_rows(
-                    x_l, absmax=jax.lax.pmax(absmax, shard.ke))
-            xq_p, _ = _pad_rows(xq, xs, _int8_padded_b(b_l))
+                    x_l, absmax=jax.lax.pmax(absmax, shard.ke), dtype=qdt)
+            xq_p, _ = _pad_rows(xq, xs, _q_padded_b(b_l))
             acc = entry.run_quantized(xq_p, params_l, cfg, blocks, interpret)
             acc = jax.lax.psum(acc, shard.ke)
             ws = params_l[quant.SCALE_KEY].reshape(1, -1)
@@ -1034,10 +1116,10 @@ def sparse_matmul(
     x2 = x.reshape(-1, x.shape[-1])
     b = x2.shape[0]
     ke, o = _problem_dims(mode, params, x2)
-    # the dtype axis the engine plans on: int8 for quantized layouts
-    # (the weight operand drives kernel selection), else the activation
-    # dtype as before
-    exec_dtype = jnp.int8 if quant.is_quantized(params) else x2.dtype
+    # the dtype axis the engine plans on: the storage dtype (int8 | fp8)
+    # for quantized layouts — the weight operand drives kernel selection
+    # — else the activation dtype as before
+    exec_dtype = quant.quant_dtype(params) or x2.dtype
 
     # static-scale calibration: report this site's activation absmax
     # through the engine hook (no-op outside a calibration context)

@@ -133,11 +133,11 @@ def nm_spmm(
     )(x, values, meta_packed)
 
 
-def _spmm_int8_kernel(x_ref, v_ref, pm_ref, xs_ref, ws_ref, o_ref, acc_ref,
-                      *, n: int, nk: int):
-    # the M:1 mux is exact in int8 too: at most one nonzero per expanded
-    # slot, and values stay in [-127, 127]
-    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, jnp.int32)
+def _spmm_q_kernel(x_ref, v_ref, pm_ref, xs_ref, ws_ref, o_ref, acc_ref,
+                   *, n: int, nk: int, acc_dtype):
+    # the M:1 mux is exact for narrow dtypes too: at most one nonzero per
+    # expanded slot (int8 stays in [-127, 127]; fp8 x + 0 is exact)
+    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, acc_dtype)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
@@ -145,15 +145,78 @@ def _spmm_int8_kernel(x_ref, v_ref, pm_ref, xs_ref, ws_ref, o_ref, acc_ref,
         o_ref[...] = deq.astype(o_ref.dtype)
 
 
-def _spmm_int8_raw_kernel(x_ref, v_ref, pm_ref, o_ref, acc_ref,
-                          *, n: int, nk: int):
-    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, jnp.int32)
+def _spmm_q_raw_kernel(x_ref, v_ref, pm_ref, o_ref, acc_ref,
+                       *, n: int, nk: int, acc_dtype):
+    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, acc_dtype)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
-        # raw int32 accumulator out: the sharded-contraction class psums
-        # these partials exactly and dequantizes once on the result
+        # raw accumulator out (int32 / fp32): the sharded-contraction
+        # class psums these partials and dequantizes once on the result
         o_ref[...] = acc_ref[...]
+
+
+def _nm_spmm_quantized(
+    x_q, values, meta_packed, x_scale, w_scale, n, *, acc_dtype,
+    block_b, block_o, block_ke, out_dtype, interpret,
+) -> jax.Array:
+    """Shared pallas_call plumbing for the int8 and fp8 N:M SpMMs —
+    ONE implementation parameterized by the accumulator dtype."""
+    b, ke = x_q.shape
+    kc, o = values.shape
+    assert ke * n == kc * 4, (x_q.shape, values.shape, n)
+    assert meta_packed.shape == (kc // 4, o), meta_packed.shape
+    raw = x_scale is None
+    assert raw == (w_scale is None), "pass both scales or neither"
+    if raw:
+        out_dtype = acc_dtype
+    else:
+        assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
+            x_scale.shape, w_scale.shape)
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    assert block_kc % 4 == 0, "block_ke*n/4 must be a multiple of 4 for packing"
+    nk = ke // block_ke
+    if raw:
+        return pl.pallas_call(
+            lambda xr, vr, pr, orf, acc: _spmm_q_raw_kernel(
+                xr, vr, pr, orf, acc, n=n, nk=nk, acc_dtype=acc_dtype),
+            grid=(b // block_b, o // block_o, nk),
+            in_specs=[
+                pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+                pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((b, o), acc_dtype),
+            scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(x_q, values, meta_packed)
+    return pl.pallas_call(
+        lambda xr, vr, pr, xsr, wsr, orf, acc: _spmm_q_kernel(
+            xr, vr, pr, xsr, wsr, orf, acc, n=n, nk=nk, acc_dtype=acc_dtype),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=[
+            pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, values, meta_packed, x_scale, w_scale)
 
 
 def nm_spmm_int8(
@@ -183,58 +246,36 @@ def nm_spmm_int8(
     (``out_dtype`` forced to int32) for the psum-then-dequantize sharded
     ordering.
     """
-    b, ke = x_q.shape
-    kc, o = values.shape
-    assert ke * n == kc * 4, (x_q.shape, values.shape, n)
-    assert meta_packed.shape == (kc // 4, o), meta_packed.shape
-    raw = x_scale is None
-    assert raw == (w_scale is None), "pass both scales or neither"
-    if raw:
-        out_dtype = jnp.int32
-    else:
-        assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
-            x_scale.shape, w_scale.shape)
-    block_b = min(block_b, b)
-    block_o = min(block_o, o)
-    block_ke = min(block_ke, ke)
-    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
-    block_kc = block_ke * n // 4
-    assert block_kc % 4 == 0, "block_ke*n/4 must be a multiple of 4 for packing"
-    nk = ke // block_ke
-    if raw:
-        return pl.pallas_call(
-            lambda xr, vr, pr, orf, acc: _spmm_int8_raw_kernel(
-                xr, vr, pr, orf, acc, n=n, nk=nk),
-            grid=(b // block_b, o // block_o, nk),
-            in_specs=[
-                pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
-                pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
-                pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j)),
-            ],
-            out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
-            scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
-            compiler_params=tpu_compiler_params(
-                dimension_semantics=("parallel", "parallel", "arbitrary"),
-            ),
-            interpret=interpret,
-        )(x_q, values, meta_packed)
-    return pl.pallas_call(
-        lambda xr, vr, pr, xsr, wsr, orf, acc: _spmm_int8_kernel(
-            xr, vr, pr, xsr, wsr, orf, acc, n=n, nk=nk),
-        grid=(b // block_b, o // block_o, nk),
-        in_specs=[
-            pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
-            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(x_q, values, meta_packed, x_scale, w_scale)
+    return _nm_spmm_quantized(
+        x_q, values, meta_packed, x_scale, w_scale, n, acc_dtype=jnp.int32,
+        block_b=block_b, block_o=block_o, block_ke=block_ke,
+        out_dtype=out_dtype, interpret=interpret)
+
+
+def nm_spmm_fp8(
+    x_q: jax.Array,
+    values: jax.Array,
+    meta_packed: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    n: int,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """fp8 (e4m3fn) variant: same contract as :func:`nm_spmm_int8` with
+    fp8 operands and an **fp32** VMEM accumulator.  The in-VMEM M:1 mux
+    is exact for fp8 (each expanded slot receives one value or zero),
+    the MXU contracts fp8 x fp8 with ``preferred_element_type=float32``,
+    and both scales are applied once at the flush.
+
+    ``x_scale=None``/``w_scale=None`` returns the raw fp32 accumulator
+    for the psum-then-dequantize sharded ordering.
+    """
+    return _nm_spmm_quantized(
+        x_q, values, meta_packed, x_scale, w_scale, n, acc_dtype=jnp.float32,
+        block_b=block_b, block_o=block_o, block_ke=block_ke,
+        out_dtype=out_dtype, interpret=interpret)

@@ -108,9 +108,9 @@ def nm_spmm_gather(
     )(x_t, values, idx)
 
 
-def _gather_int8_kernel(xt_ref, v_ref, idx_ref, xs_ref, ws_ref, o_ref,
-                        acc_ref, *, n: int, nk: int):
-    _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n, jnp.int32)
+def _gather_q_kernel(xt_ref, v_ref, idx_ref, xs_ref, ws_ref, o_ref,
+                     acc_ref, *, n: int, nk: int, acc_dtype):
+    _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n, acc_dtype)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
@@ -118,14 +118,77 @@ def _gather_int8_kernel(xt_ref, v_ref, idx_ref, xs_ref, ws_ref, o_ref,
         o_ref[...] = deq.astype(o_ref.dtype)
 
 
-def _gather_int8_raw_kernel(xt_ref, v_ref, idx_ref, o_ref, acc_ref,
-                            *, n: int, nk: int):
-    _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n, jnp.int32)
+def _gather_q_raw_kernel(xt_ref, v_ref, idx_ref, o_ref, acc_ref,
+                         *, n: int, nk: int, acc_dtype):
+    _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n, acc_dtype)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
-        # raw int32 accumulator out for the psum-then-dequantize ordering
+        # raw accumulator out for the psum-then-dequantize ordering
         o_ref[...] = acc_ref[...]
+
+
+def _nm_spmm_gather_quantized(
+    x_t, values, idx, x_scale, w_scale, n, *, acc_dtype,
+    block_b, block_o, block_ke, out_dtype, interpret,
+) -> jax.Array:
+    """Shared pallas_call plumbing for the int8 and fp8 reduced-K
+    gather SpMMs — ONE implementation parameterized by the accumulator
+    dtype."""
+    ke, b = x_t.shape
+    kc, o = values.shape
+    assert ke * n == kc * 4, (x_t.shape, values.shape, n)
+    assert idx.shape == (kc, 1), idx.shape
+    raw = x_scale is None
+    assert raw == (w_scale is None), "pass both scales or neither"
+    if raw:
+        out_dtype = acc_dtype
+    else:
+        assert x_scale.shape == (1, b) and w_scale.shape == (o, 1), (
+            x_scale.shape, w_scale.shape)
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    nk = ke // block_ke
+    if raw:
+        return pl.pallas_call(
+            lambda xr, vr, ir, orf, acc: _gather_q_raw_kernel(
+                xr, vr, ir, orf, acc, n=n, nk=nk, acc_dtype=acc_dtype),
+            grid=(b // block_b, o // block_o, nk),
+            in_specs=[
+                pl.BlockSpec((block_ke, block_b), lambda i, j, kk: (kk, i)),
+                pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+                pl.BlockSpec((block_kc, 1), lambda i, j, kk: (kk, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_o, block_b), lambda i, j, kk: (j, i)),
+            out_shape=jax.ShapeDtypeStruct((o, b), acc_dtype),
+            scratch_shapes=[pltpu.VMEM((block_o, block_b), acc_dtype)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(x_t, values, idx)
+    return pl.pallas_call(
+        lambda xr, vr, ir, xsr, wsr, orf, acc: _gather_q_kernel(
+            xr, vr, ir, xsr, wsr, orf, acc, n=n, nk=nk, acc_dtype=acc_dtype),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=[
+            pl.BlockSpec((block_ke, block_b), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_kc, 1), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((1, block_b), lambda i, j, kk: (0, i)),
+            pl.BlockSpec((block_o, 1), lambda i, j, kk: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_o, block_b), lambda i, j, kk: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((o, b), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_o, block_b), acc_dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_t, values, idx, x_scale, w_scale)
 
 
 def nm_spmm_gather_int8(
@@ -154,57 +217,37 @@ def nm_spmm_gather_int8(
     (``out_dtype`` forced to int32) for the psum-then-dequantize sharded
     ordering.
     """
-    ke, b = x_t.shape
-    kc, o = values.shape
-    assert ke * n == kc * 4, (x_t.shape, values.shape, n)
-    assert idx.shape == (kc, 1), idx.shape
-    raw = x_scale is None
-    assert raw == (w_scale is None), "pass both scales or neither"
-    if raw:
-        out_dtype = jnp.int32
-    else:
-        assert x_scale.shape == (1, b) and w_scale.shape == (o, 1), (
-            x_scale.shape, w_scale.shape)
-    block_b = min(block_b, b)
-    block_o = min(block_o, o)
-    block_ke = min(block_ke, ke)
-    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
-    block_kc = block_ke * n // 4
-    nk = ke // block_ke
-    if raw:
-        return pl.pallas_call(
-            lambda xr, vr, ir, orf, acc: _gather_int8_raw_kernel(
-                xr, vr, ir, orf, acc, n=n, nk=nk),
-            grid=(b // block_b, o // block_o, nk),
-            in_specs=[
-                pl.BlockSpec((block_ke, block_b), lambda i, j, kk: (kk, i)),
-                pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
-                pl.BlockSpec((block_kc, 1), lambda i, j, kk: (kk, 0)),
-            ],
-            out_specs=pl.BlockSpec((block_o, block_b), lambda i, j, kk: (j, i)),
-            out_shape=jax.ShapeDtypeStruct((o, b), jnp.int32),
-            scratch_shapes=[pltpu.VMEM((block_o, block_b), jnp.int32)],
-            compiler_params=tpu_compiler_params(
-                dimension_semantics=("parallel", "parallel", "arbitrary"),
-            ),
-            interpret=interpret,
-        )(x_t, values, idx)
-    return pl.pallas_call(
-        lambda xr, vr, ir, xsr, wsr, orf, acc: _gather_int8_kernel(
-            xr, vr, ir, xsr, wsr, orf, acc, n=n, nk=nk),
-        grid=(b // block_b, o // block_o, nk),
-        in_specs=[
-            pl.BlockSpec((block_ke, block_b), lambda i, j, kk: (kk, i)),
-            pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((block_kc, 1), lambda i, j, kk: (kk, 0)),
-            pl.BlockSpec((1, block_b), lambda i, j, kk: (0, i)),
-            pl.BlockSpec((block_o, 1), lambda i, j, kk: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_o, block_b), lambda i, j, kk: (j, i)),
-        out_shape=jax.ShapeDtypeStruct((o, b), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_o, block_b), jnp.int32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(x_t, values, idx, x_scale, w_scale)
+    return _nm_spmm_gather_quantized(
+        x_t, values, idx, x_scale, w_scale, n, acc_dtype=jnp.int32,
+        block_b=block_b, block_o=block_o, block_ke=block_ke,
+        out_dtype=out_dtype, interpret=interpret)
+
+
+def nm_spmm_gather_fp8(
+    x_t: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    n: int,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """fp8 (e4m3fn) reduced-K variant: same contract as
+    :func:`nm_spmm_gather_int8` with fp8 operands and an **fp32** VMEM
+    accumulator.  The sublane gather selects fp8 candidates exactly
+    (one value or zero per compressed row), the reduced-K contraction
+    runs fp8 x fp8 with ``preferred_element_type=float32``, and the
+    flush dequantizes the (O, B) tile once.
+
+    ``x_scale=None``/``w_scale=None`` returns the raw fp32 accumulator
+    for the psum-then-dequantize sharded ordering.
+    """
+    return _nm_spmm_gather_quantized(
+        x_t, values, idx, x_scale, w_scale, n, acc_dtype=jnp.float32,
+        block_b=block_b, block_o=block_o, block_ke=block_ke,
+        out_dtype=out_dtype, interpret=interpret)

@@ -9,11 +9,17 @@ dtype) problems it can legally tile.  ``select`` walks the entries in
 priority order and returns the first (entry, blocks) that fits; a ``None``
 result means "no kernel applies, use the jnp reference formulation".
 
-dtype is a real selection axis, not a cast: the int8 (VNNI-lineage)
-entries fit only int8-quantized problems, and because int8 packs 4x more
-values per 32-bit lane register than fp32, their legal contraction
-blocks are multiples of the 32-row sublane quantum (vs 8 for fp32) — the
-float entries decline int8 problems rather than silently upcasting.
+dtype is a real selection axis, not a cast: the int8 (VNNI-lineage) and
+fp8 (e4m3fn) entries fit only problems whose quantized storage dtype
+matches, and because the narrow dtypes pack 4x more values per 32-bit
+lane register than fp32, their legal contraction blocks are multiples of
+the 32-row sublane quantum (vs 8 for fp32) — the float entries decline
+quantized problems rather than silently upcasting, and each quantized
+class declines the other's.  An entry may additionally carry a
+``supported(backend)`` predicate for constraints the (shape, dtype)
+signature can't express — the fp8 entries use it to require a native
+fp8 MXU dot on the ``tpu`` backend (see :func:`fp8_native_dot`) while
+``interpret`` mode always emulates.
 
 Backends
 --------
@@ -40,6 +46,8 @@ __all__ = [
     "resolve_backend",
     "largest_fitting_block",
     "dtype_name",
+    "fp8_native_dot",
+    "supports_fp8",
     "KERNEL_BACKENDS",
 ]
 
@@ -59,13 +67,19 @@ class KernelEntry:
     ``candidates`` enumerates legal block choices for the autotuner.
     ``run(x2d, params, n, m, blocks, interpret, out_dtype)`` executes it.
 
-    ``quantized`` marks the int8 (VNNI-lineage) entries — the engine uses
-    it to annotate activation-scale handling and to route the sharded
-    contraction class.  ``run_quantized(x_q, params, cfg, blocks,
-    interpret) -> int32 (B, O)`` is their raw-accumulator path: it takes
-    ALREADY-quantized activations and returns undequantized int32 partial
-    products, so a contraction-sharded problem can psum the int32
-    partials exactly and dequantize once on the gathered result.
+    ``quantized`` marks the narrow-dtype entries (int8 VNNI lineage and
+    fp8) — the engine uses it to annotate activation-scale handling and
+    to route the sharded contraction class.  ``run_quantized(x_q, params,
+    cfg, blocks, interpret) -> (B, O)`` is their raw-accumulator path: it
+    takes ALREADY-quantized activations and returns undequantized partial
+    products in the accumulator dtype (int32 for int8, fp32 for fp8), so
+    a contraction-sharded problem can psum the raw partials and
+    dequantize once on the gathered result.
+
+    ``supported(backend) -> bool``, when set, vetoes the entry on
+    backends whose hardware can't execute it — constraints the
+    (shape, dtype) signature handed to ``fit_blocks`` cannot express
+    (e.g. the fp8 entries require a native fp8 MXU dot on ``tpu``).
     """
 
     name: str
@@ -77,6 +91,7 @@ class KernelEntry:
     priority: int = 0
     quantized: bool = False
     run_quantized: Optional[Callable[..., jax.Array]] = None
+    supported: Optional[Callable[[str], bool]] = None
 
 
 _REGISTRY: Dict[str, List[KernelEntry]] = {}
@@ -131,6 +146,8 @@ def select(
     for entry in _REGISTRY.get(mode, []):
         if backend not in entry.backends:
             continue
+        if entry.supported is not None and not entry.supported(backend):
+            continue
         blocks = entry.fit_blocks(b, ke, o, n, m, dtype)
         if blocks is not None:
             return entry, blocks
@@ -167,6 +184,48 @@ def largest_fitting_block(dim: int, cap: int, multiple_of: int = 1) -> Optional[
         if dim % c == 0 and c % multiple_of == 0:
             return c
     return None
+
+
+_ENV_FP8 = "REPRO_FP8_NATIVE"
+
+# TPU generations with a native fp8 MXU dot (Mosaic lowers
+# preferred_element_type=f32 over fp8 operands without an upcast);
+# earlier chips would silently upcast-and-slow, so the fp8 entries
+# decline them and the engine falls back to the dequantize reference
+_FP8_TPU_KINDS = ("v6", "v7")
+
+
+def fp8_native_dot() -> bool:
+    """Does the executing TPU contract fp8 x fp8 natively on the MXU?
+
+    Gates the fp8 registry entries on the ``tpu`` backend only —
+    ``interpret`` mode always emulates the fp8 bodies on CPU.  The
+    ``REPRO_FP8_NATIVE`` env var (1/0) overrides the device-kind probe,
+    for new chips the allowlist hasn't caught up with (and for tests).
+    """
+    env = os.environ.get(_ENV_FP8, "").strip().lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    try:
+        devices = jax.devices()
+    except Exception:
+        return False
+    if not devices:
+        return False
+    kind = str(getattr(devices[0], "device_kind", "")).lower()
+    return any(tag in kind for tag in _FP8_TPU_KINDS)
+
+
+def supports_fp8(backend: str) -> bool:
+    """Can this backend execute the *_fp8 entries?  THE one fp8
+    capability predicate — the registry entries' ``supported`` hook and
+    the benchmark acceptance checks both call it, so the benchmark's
+    SKIP decision can never drift from the engine's actual routing.
+    interpret mode always emulates; compiled Mosaic execution needs a
+    native fp8 MXU dot (:func:`fp8_native_dot`)."""
+    return backend != "tpu" or fp8_native_dot()
 
 
 def dtype_name(dtype) -> str:

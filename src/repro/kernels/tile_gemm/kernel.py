@@ -9,6 +9,11 @@ accumulating steps — see DESIGN.md §2).
 contract into an **int32** accumulator held in VMEM across the K grid,
 and the output is dequantized exactly once on the final flush with the
 per-row activation scales and per-channel weight scales.
+``tile_gemm_fp8`` is the same contract for the fp8 (e4m3fn) execution
+class — fp8 x fp8 tiles contract into an **fp32** VMEM accumulator
+(``preferred_element_type``) with the identical single-dequantize flush;
+the two share one parameterized pallas_call so the quantized plumbing
+cannot drift between dtypes.
 """
 
 from __future__ import annotations
@@ -76,8 +81,9 @@ def tile_gemm(
     )(x, w)
 
 
-def _gemm_int8_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, nk: int):
-    _gemm_accumulate(x_ref, w_ref, acc_ref, jnp.int32)
+def _gemm_q_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref,
+                   *, nk: int, acc_dtype):
+    _gemm_accumulate(x_ref, w_ref, acc_ref, acc_dtype)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
@@ -85,15 +91,74 @@ def _gemm_int8_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, nk: int):
         o_ref[...] = deq.astype(o_ref.dtype)
 
 
-def _gemm_int8_raw_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
-    _gemm_accumulate(x_ref, w_ref, acc_ref, jnp.int32)
+def _gemm_q_raw_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int, acc_dtype):
+    _gemm_accumulate(x_ref, w_ref, acc_ref, acc_dtype)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
-        # raw int32 accumulator out, no f32 round-trip: partial products
-        # over a sharded contraction are psum'd EXACTLY before the single
+        # raw accumulator out (int32 / fp32), no extra round-trip: partial
+        # products over a sharded contraction are psum'd before the single
         # dequantize on the gathered result
         o_ref[...] = acc_ref[...]
+
+
+def _tile_gemm_quantized(
+    x_q, w_q, x_scale, w_scale, *, acc_dtype,
+    block_b, block_o, block_k, out_dtype, interpret,
+) -> jax.Array:
+    """Shared pallas_call plumbing for the int8 and fp8 tile GEMMs —
+    ONE implementation parameterized by the accumulator dtype, so the
+    two quantized execution classes cannot drift apart."""
+    b, k = x_q.shape
+    k2, o = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    raw = x_scale is None
+    assert raw == (w_scale is None), "pass both scales or neither"
+    if raw:
+        out_dtype = acc_dtype
+    else:
+        assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
+            x_scale.shape, w_scale.shape)
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_k = min(block_k, k)
+    assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
+    nk = k // block_k
+    if raw:
+        return pl.pallas_call(
+            lambda xr, wr, orf, acc: _gemm_q_raw_kernel(
+                xr, wr, orf, acc, nk=nk, acc_dtype=acc_dtype),
+            grid=(b // block_b, o // block_o, nk),
+            in_specs=[
+                pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((b, o), acc_dtype),
+            scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(x_q, w_q)
+    return pl.pallas_call(
+        lambda xr, wr, xsr, wsr, orf, acc: _gemm_q_kernel(
+            xr, wr, xsr, wsr, orf, acc, nk=nk, acc_dtype=acc_dtype),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, w_q, x_scale, w_scale)
 
 
 def tile_gemm_int8(
@@ -120,53 +185,33 @@ def tile_gemm_int8(
     shard_map execution class contracts each contraction shard to int32
     partials, psums them exactly, and dequantizes once on the result.
     """
-    b, k = x_q.shape
-    k2, o = w_q.shape
-    assert k == k2, (x_q.shape, w_q.shape)
-    raw = x_scale is None
-    assert raw == (w_scale is None), "pass both scales or neither"
-    if raw:
-        out_dtype = jnp.int32
-    else:
-        assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
-            x_scale.shape, w_scale.shape)
-    block_b = min(block_b, b)
-    block_o = min(block_o, o)
-    block_k = min(block_k, k)
-    assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
-    nk = k // block_k
-    if raw:
-        return pl.pallas_call(
-            lambda xr, wr, orf, acc: _gemm_int8_raw_kernel(
-                xr, wr, orf, acc, nk=nk),
-            grid=(b // block_b, o // block_o, nk),
-            in_specs=[
-                pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
-                pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
-            ],
-            out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
-            scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
-            compiler_params=tpu_compiler_params(
-                dimension_semantics=("parallel", "parallel", "arbitrary"),
-            ),
-            interpret=interpret,
-        )(x_q, w_q)
-    return pl.pallas_call(
-        lambda xr, wr, xsr, wsr, orf, acc: _gemm_int8_kernel(
-            xr, wr, xsr, wsr, orf, acc, nk=nk),
-        grid=(b // block_b, o // block_o, nk),
-        in_specs=[
-            pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
-            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(x_q, w_q, x_scale, w_scale)
+    return _tile_gemm_quantized(
+        x_q, w_q, x_scale, w_scale, acc_dtype=jnp.int32,
+        block_b=block_b, block_o=block_o, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret)
+
+
+def tile_gemm_fp8(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    x_scale: jax.Array = None,
+    w_scale: jax.Array = None,
+    *,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = (x_q * x_scale) @ (w_q * w_scale), contracted in fp8 (e4m3fn).
+
+    Same contract as :func:`tile_gemm_int8` with fp8 operands and an
+    **fp32** VMEM accumulator (``preferred_element_type=float32`` — the
+    Mosaic-native mixed-precision dot).  Scales are applied once at the
+    flush; ``x_scale=None``/``w_scale=None`` returns the raw fp32
+    accumulator for the psum-then-dequantize sharded ordering.
+    """
+    return _tile_gemm_quantized(
+        x_q, w_q, x_scale, w_scale, acc_dtype=jnp.float32,
+        block_b=block_b, block_o=block_o, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret)

@@ -2,7 +2,7 @@
 
     python -m repro.launch.serve --arch internlm2_1_8b --smoke \
         [--sparsity 2:4 --mode compressed|gather|rowwise] [--requests 16] \
-        [--quantize int8] [--static-scales] \
+        [--quantize int8|fp8] [--static-scales] \
         [--kernel-backend auto|tpu|interpret|jnp] \
         [--autotune] [--mesh 2x4]
 
@@ -12,14 +12,17 @@ engine (``repro.kernels.dispatch``): on TPU the registry resolves the
 layouts to the ``nm_spmm*`` / ``tile_gemm`` Pallas kernels; elsewhere (or
 with ``--kernel-backend jnp``) the documented jnp reference paths run.
 
-``--quantize int8`` quantizes every linear to int8 values + per-channel
-scales (the VNNI-lineage storage format): on a kernel backend the
-``*_int8`` registry entries contract int8 x int8 into int32 and
-dequantize on the way out — including under ``--mesh``, where the scale
-leaf gets its own PartitionSpec, activations quantize per-shard, and a
-sharded contraction psums int32 partials before one dequantize.
+``--quantize int8|fp8`` quantizes every linear to narrow values +
+per-channel scales: on a kernel backend the matching ``*_int8`` /
+``*_fp8`` registry entries contract narrow x narrow into the wide
+accumulator (int32 / fp32) and dequantize on the way out — including
+under ``--mesh``, where the scale leaf gets its own PartitionSpec,
+activations quantize per-shard, and a sharded contraction psums raw
+accumulator partials before one dequantize.  fp8 needs a TPU with a
+native fp8 MXU dot (or the interpret backend, which emulates); other
+hardware serves the jnp dequantize reference.
 
-``--static-scales`` (with ``--quantize int8``) calibrates a static
+``--static-scales`` (with ``--quantize``) calibrates a static
 activation scale per linear site from one prefill-shaped batch before
 the loop starts, so the decode hot path skips the per-row absmax pass
 (``act-scales=static`` in the dispatch report).
@@ -83,13 +86,14 @@ def main():
     ap.add_argument("--sparsity", default=None)
     ap.add_argument("--mode", default="compressed",
                     choices=["dense", "compressed", "gather", "rowwise"])
-    ap.add_argument("--quantize", default=None, choices=["int8"],
-                    help="quantize every linear's values to int8 with "
-                         "per-channel scales (VNNI-lineage serving path)")
+    ap.add_argument("--quantize", default=None, choices=["int8", "fp8"],
+                    help="quantize every linear's values to the narrow "
+                         "dtype with per-channel scales (int8: VNNI "
+                         "lineage; fp8: e4m3fn + fp32 accumulation)")
     ap.add_argument("--static-scales", action="store_true",
-                    help="with --quantize int8: calibrate static "
-                         "activation scales on one batch so decode skips "
-                         "the per-row absmax pass")
+                    help="with --quantize: calibrate static activation "
+                         "scales on one batch so decode skips the "
+                         "per-row absmax pass")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="install a (data, model) mesh, e.g. 2x4 — run "
                          "kernels per-shard via shard_map (needs that many "
@@ -107,7 +111,7 @@ def main():
                          "experiments/autotune/)")
     args = ap.parse_args()
     if args.static_scales and not args.quantize:
-        ap.error("--static-scales requires --quantize int8")
+        ap.error("--static-scales requires --quantize int8|fp8")
 
     import contextlib
 
@@ -127,7 +131,7 @@ def main():
     if args.quantize:
         from repro.core.quantize import quantize_tree
 
-        params = quantize_tree(params)
+        params = quantize_tree(params, args.quantize)
     if args.static_scales:
         from repro.core.quantize import calibrate_activation_scales
         from repro.models import forward

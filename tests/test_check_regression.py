@@ -7,7 +7,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.check_regression import compare, main, parse_smoke_csv
+from benchmarks.check_regression import (compare, main, parse_skip_markers,
+                                         parse_smoke_csv)
 
 SMOKE = """\
 ### kernels
@@ -98,6 +99,66 @@ def test_new_csv_row_passes_with_note_not_crash(tmp_path, monkeypatch):
         Path(baseline).read_text()), 1.25)
     assert any("new row, no baseline" in n and "int8-sharded" in n
                for n in notes)
+
+
+def test_skip_marker_excuses_vanished_baseline_rows(tmp_path, monkeypatch):
+    """A sweep that announces itself unsupported on this runner with a
+    ``kernel_<prefix>,SKIP,<reason>`` marker (mesh sweep without enough
+    devices, fp8 sweeps without a native fp8 dot) must excuse every
+    baseline row the prefix covers — pass with a note, not fail as a
+    vanished row.  Rows that vanish WITHOUT a marker still fail."""
+    monkeypatch.delenv("PERF_OVERRIDE", raising=False)
+    grown = SMOKE + (
+        "kernel_fp8-sharded/2:4/col@2x4,us_jnp_mesh=2000,us_shard_map=9000\n"
+        "kernel_fp8-sharded/2:4/row@2x4,us_jnp_mesh=2000,us_shard_map=9000\n")
+    csv = _write(tmp_path, "base.csv", grown)
+    baseline = str(tmp_path / "baseline.json")
+    assert main([csv, "--baseline", baseline, "--update"]) == 0
+    # same runner later lacks fp8 kernels: rows replaced by one marker
+    skipped = SMOKE + "kernel_fp8-sharded,SKIP,no native fp8 dot on this backend\n"
+    cur = _write(tmp_path, "skipped.csv", skipped)
+    assert main([cur, "--baseline", baseline]) == 0
+    skips = parse_skip_markers(skipped)
+    assert skips == {"kernel_fp8-sharded": "no native fp8 dot on this backend"}
+    failures, notes = compare(parse_smoke_csv(skipped), json.loads(
+        Path(baseline).read_text()), 1.25, skips=skips)
+    assert failures == []
+    assert sum("sweep skipped on this runner" in n for n in notes) == 2
+    # without the marker the vanished rows still fail the gate
+    cur2 = _write(tmp_path, "vanished.csv", SMOKE)
+    assert main([cur2, "--baseline", baseline]) == 1
+
+
+def test_baseline_predating_new_dtype_column_passes(tmp_path, monkeypatch):
+    """A baseline committed BEFORE a new dtype execution class landed
+    (e.g. pre-fp8) must keep gating its own rows while every row of the
+    new dtype sweep passes with a "new row" note — exit 0, and a new
+    ``us_*`` field appearing inside an EXISTING row is ignored rather
+    than failed, so adding a dtype column never requires PERF_OVERRIDE.
+    The refreshed baseline then lands in the same PR to start guarding
+    the new rows."""
+    monkeypatch.delenv("PERF_OVERRIDE", raising=False)
+    csv = _write(tmp_path, "base.csv", SMOKE)
+    baseline = str(tmp_path / "baseline.json")
+    assert main([csv, "--baseline", baseline, "--update"]) == 0
+    grown = SMOKE.replace(
+        "kernel_BERT-L1/1:4/int8,us_fp32=500,us_int8=400,",
+        "kernel_BERT-L1/1:4/int8,us_fp32=500,us_int8=400,us_extra=9999,"
+    ) + (
+        "kernel_BERT-L1/2:4/fp8,us_fp32=500,us_fp8=450,speedup=1.11x,"
+        "dispatch=nm_spmm_fp8(b128/ke384/o128)\n"
+        "kernel_fp8-exec/2:4,dispatch=nm_spmm_fp8[interpret],"
+        "rel_err_vs_dequant_ref=0.03\n")
+    cur = _write(tmp_path, "grown.csv", grown)
+    assert main([cur, "--baseline", baseline]) == 0
+    failures, notes = compare(parse_smoke_csv(grown), json.loads(
+        Path(baseline).read_text()), 1.25)
+    assert failures == []
+    assert any("new row, no baseline" in n and "/fp8" in n for n in notes)
+    # ...but the old rows are still gated: regress one and the gate fires
+    regressed = grown.replace("us_dense=1000", "us_dense=2000")
+    cur2 = _write(tmp_path, "regressed.csv", regressed)
+    assert main([cur2, "--baseline", baseline]) == 1
 
 
 def test_malformed_baseline_rows_fail_without_stack_trace(tmp_path, monkeypatch):

@@ -330,6 +330,30 @@ def test_calibrate_activation_scales_stacked_tree():
     assert "act-scales=static" in dispatch.describe(d)
 
 
+def test_recalibration_through_cached_jit_records_fresh_store():
+    """Calibrating twice through the SAME jitted batch_fn must record
+    into the second store too: the io_callback resolves the active store
+    at run time, so the jit cache hit on the second call (identical
+    shapes/tags) cannot bake in the first, discarded store."""
+    cfg = SparsityConfig(n=2, m=4, mode="compressed")
+    p_q = q.quantize_linear(_family_params("compressed", _w(64, 32), 2))
+    tree = {"blk": {"w_in": p_q}}
+
+    @jax.jit
+    def fwd(p, x):
+        with dispatch.use_dispatch(backend="jnp"):
+            return apply_linear(p["blk"]["w_in"], x, cfg)
+
+    x1 = jax.random.normal(jax.random.PRNGKey(5), (4, 64))
+    x2 = 3.0 * x1      # same shapes -> jit cache hit on the second call
+    c1, n1 = q.calibrate_activation_scales(tree, lambda p: fwd(p, x1))
+    c2, n2 = q.calibrate_activation_scales(tree, lambda p: fwd(p, x2))
+    assert n1 == 1 and n2 == 1
+    s1 = float(c1["blk"]["w_in"][q.ACT_SCALE_KEY])
+    s2 = float(c2["blk"]["w_in"][q.ACT_SCALE_KEY])
+    assert np.isclose(s2, 3.0 * s1, rtol=1e-5)
+
+
 def test_static_vs_dynamic_scale_accuracy_bound():
     """Static (calibrated, tensor-wise) activation scales cost accuracy
     vs the per-row dynamic pass, but both stay within int8 round-trip
