@@ -1,19 +1,24 @@
-"""CI perf-regression gate for the kernel smoke benchmark.
+"""CI perf-regression gate for the kernel + serving smoke benchmarks.
 
-Compares the fast-lane smoke CSV (``benchmarks.run --only kernels``
-output) against the committed baseline
+Compares the fast-lane smoke CSV (``benchmarks.run --only
+kernels,serving`` output) against the committed baseline
 ``benchmarks/baselines/kernel-smoke.json`` and **fails** (exit 1) when
-any timing field of any kernel row slowed down by more than the
+any timing field of any gated row slowed down by more than the
 threshold (default 1.25x).  Before this gate, CI only uploaded the CSV —
 nothing failed when a kernel regressed.
+
+Gated rows are the ``kernel_*`` microbenchmark rows (``us_dense`` etc.)
+and the ``serving_*`` trace rows (``us_p50`` / ``us_p99`` request
+latency from ``benchmarks.serving_bench``) — same machinery, one
+baseline file.
 
   python -m benchmarks.check_regression kernel-smoke.csv
   python -m benchmarks.check_regression --update kernel-smoke.csv  # rebaseline
 
 Rules:
-  * every ``kernel_*`` row in the baseline must still be present (a
+  * every gated row in the baseline must still be present (a
     vanished row is a coverage regression and fails) — UNLESS the CSV
-    carries a ``kernel_<prefix>,SKIP,<reason>`` marker covering it
+    carries a ``<prefix>,SKIP,<reason>`` marker covering it
     (e.g. the mesh sweep on a runner without enough devices, or the fp8
     sweeps on a TPU without a native fp8 dot): a sweep that announces
     itself as unsupported on this runner passes with a note;
@@ -43,18 +48,19 @@ from typing import Dict
 BASELINE_DEFAULT = os.path.join(
     os.path.dirname(__file__), "baselines", "kernel-smoke.json")
 THRESHOLD_DEFAULT = 1.25
+GATED_PREFIXES = ("kernel_", "serving_")
 
 
 def parse_smoke_csv(text: str) -> Dict[str, Dict[str, float]]:
-    """``kernel_<row>,us_x=..,us_y=..,...`` lines -> {row: {field: us}}.
+    """``<gated-row>,us_x=..,us_y=..,...`` lines -> {row: {field: us}}.
 
-    Non-kernel lines (section headers, wall-clock totals, backend tag)
-    and non-timing fields are skipped.
+    Ungated lines (section headers, wall-clock totals, backend tag) and
+    non-timing fields are skipped.
     """
     rows: Dict[str, Dict[str, float]] = {}
     for line in text.splitlines():
         line = line.strip()
-        if not line.startswith("kernel_") or "," not in line:
+        if not line.startswith(GATED_PREFIXES) or "," not in line:
             continue
         name, *fields = line.split(",")
         if name == "kernel_backend":
@@ -76,7 +82,7 @@ def parse_smoke_csv(text: str) -> Dict[str, Dict[str, float]]:
 
 
 def parse_skip_markers(text: str) -> Dict[str, str]:
-    """``kernel_<prefix>,SKIP,<reason>`` lines -> {prefix: reason}.
+    """``<gated-prefix>,SKIP,<reason>`` lines -> {prefix: reason}.
 
     Sweeps that cannot run on the executing runner announce themselves
     with a SKIP marker instead of timing rows; the gate then excuses
@@ -86,7 +92,7 @@ def parse_skip_markers(text: str) -> Dict[str, str]:
     skips: Dict[str, str] = {}
     for line in text.splitlines():
         parts = line.strip().split(",", 2)
-        if (len(parts) >= 2 and parts[0].startswith("kernel_")
+        if (len(parts) >= 2 and parts[0].startswith(GATED_PREFIXES)
                 and parts[1] == "SKIP"):
             skips[parts[0]] = parts[2] if len(parts) > 2 else ""
     return skips
@@ -167,7 +173,7 @@ def main(argv=None) -> int:
         text = f.read()
     current = parse_smoke_csv(text)
     if not current:
-        print("check_regression: no kernel rows found in", args.csv)
+        print("check_regression: no gated rows found in", args.csv)
         return 1
 
     if args.update:
@@ -201,7 +207,7 @@ def main(argv=None) -> int:
         print(n)
     override = bool(os.environ.get("PERF_OVERRIDE"))
     if failures:
-        print(f"\ncheck_regression: {len(failures)} kernel row(s) exceed "
+        print(f"\ncheck_regression: {len(failures)} gated row(s) exceed "
               f"the {args.threshold:.2f}x slowdown gate")
         if override:
             print("check_regression: PERF_OVERRIDE set — reporting only, "

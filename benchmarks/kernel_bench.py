@@ -19,10 +19,21 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import serving
 from repro.core import nm
-from repro.core.sparse_linear import SparsityConfig, convert_to_serving
+from repro.core.sparse_linear import SparsityConfig
 from repro.kernels import dispatch as kdispatch
 from repro.kernels.registry import detect_backend
+
+
+def _prep(w, sp_n: int, qdtype: Optional[str] = None) -> dict:
+    """Serving-layout weights via the public prep entry point: the
+    benchmark times exactly what ``repro.serving.prepare`` produces."""
+    mode = "dense" if sp_n == 4 else "compressed"
+    spec = serving.ServingSpec(
+        layout=mode, sparsity=None if sp_n == 4 else (sp_n, 4),
+        qdtype=qdtype)
+    return serving.prepare({"w": w}, spec).params
 
 try:
     from .cycle_model import WORKLOADS
@@ -158,8 +169,8 @@ def run_quantized(workloads=QUANT_WORKLOADS, qdtype="int8") -> List[dict]:
         for sp_n in (4, 2, 1):
             mode = "dense" if sp_n == 4 else "compressed"
             cfg = SparsityConfig(n=sp_n, m=4, mode=mode)
-            p_fp = convert_to_serving({"w": w}, cfg, mode)
-            p_q = convert_to_serving({"w": w}, cfg, mode, quantize=qdtype)
+            p_fp = _prep(w, sp_n)
+            p_q = _prep(w, sp_n, qdtype)
             mm = jax.jit(lambda x, p, cfg=cfg: kdispatch.sparse_matmul(
                 x, p, cfg))
             t_fp = _FP32_TIMES.get((name, sp_n, m, k, n))
@@ -202,7 +213,7 @@ def run_quantized_registry(shape=(128, 512, 256), qdtype="int8") -> List[dict]:
     for sp_n in (4, 2, 1):
         mode = "dense" if sp_n == 4 else "compressed"
         cfg = SparsityConfig(n=sp_n, m=4, mode=mode)
-        p_q = convert_to_serving({"w": w}, cfg, mode, quantize=qdtype)
+        p_q = _prep(w, sp_n, qdtype)
         d = kdispatch.plan_for(p_q, (b, k), cfg, dtype=_qdtype(qdtype),
                                dispatch=dcfg)
         if not d.uses_kernel or not d.kernel.endswith(f"_{qdtype}"):
@@ -302,7 +313,7 @@ def run_mesh_quantized(mesh_shape, shape=(128, 512, 256),
     x = jax.random.normal(key, (b, k), jnp.float32)
     w = jax.random.normal(key, (k, o), jnp.float32)
     cfg = SparsityConfig(n=2, m=4, mode="compressed")
-    p_q = convert_to_serving({"w": w}, cfg, "compressed", quantize=qdtype)
+    p_q = _prep(w, 2, qdtype)
     rows = []
     with use_axis_env(env):
         # the dequantize reference is hint-invariant: one timing + one

@@ -6,6 +6,7 @@
   E3 fig3   vector-vs-matrix roofline     (paper Fig. 3)
   E4 fig4   instruction counts            (paper Fig. 4)
   E5 kernels  Table-IV-shape kernel contracts + XLA wall-clock
+  E6 serving  continuous-batching engine on a seeded Poisson trace
   E7 roofline  dry-run-driven roofline table (reads experiments/dryrun)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig13,...]
@@ -27,7 +28,7 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from . import cycle_model, fig3_roofline, fig4_instr_counts
-    from . import fig15_unstructured, kernel_bench, roofline
+    from . import fig15_unstructured, kernel_bench, roofline, serving_bench
 
     jobs = [
         ("fig13_cycle_model", cycle_model.main),
@@ -38,6 +39,9 @@ def main() -> None:
         # process has fewer than 8 devices; CI's smoke step forces 8 host
         # devices so the sharded fp32 + int8 rows land in the gated CSV
         ("kernels", lambda: kernel_bench.main(["--mesh", "2x4"])),
+        # p50/p99 request latency + throughput rows, gated like the
+        # kernel rows (serving_ prefix in check_regression)
+        ("serving", serving_bench.main),
         ("roofline", roofline.main),
     ]
     for name, fn in jobs:

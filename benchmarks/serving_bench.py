@@ -1,0 +1,98 @@
+"""Serving smoke benchmark: the continuous-batching engine on a seeded
+Poisson trace, emitting perf-gated ``serving_*`` CSV rows.
+
+Three rows land in the fast-lane smoke CSV (same gate as the kernel
+rows, ``benchmarks.check_regression`` with the ``serving_`` prefix):
+
+  serving_trace/continuous   fp32 weights, fp32 KV blocks
+  serving_trace/int8         int8 weights + int8 KV blocks
+  serving_trace/lockstep     the pre-paging shared-``pos`` loop
+
+Each row reports request-latency percentiles (``us_p50`` / ``us_p99`` —
+the gated timing fields), generated-token throughput, and
+completed-requests-per-model-call, the wall-clock-free axis on which the
+continuous engine must beat lockstep (asserted here, not just printed:
+a scheduler regression that loses the throughput win fails the smoke
+step even if nothing got slower).
+
+Every engine runs the trace TWICE and reports the second pass: the first
+pass pays jit compilation for the prefill/decode traces, which would
+otherwise dominate the latency percentiles and gate on compiler noise
+rather than serving behavior.
+
+Run: PYTHONPATH=src python -m benchmarks.serving_bench
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+TRACE_SEED = 0
+TRACE_REQUESTS = 16
+TRACE_RATE = 1.0
+
+
+def _row(name: str, report) -> str:
+    return (f"serving_{name},us_p50={report.p50_latency_s * 1e6:.0f},"
+            f"us_p99={report.p99_latency_s * 1e6:.0f},"
+            f"tok_s={report.tokens_per_s:.1f},"
+            f"req_per_call={report.completed_per_call:.3f},"
+            f"completed={report.completed}/{report.total},"
+            f"model_calls={report.model_calls},"
+            f"evictions={report.evictions},"
+            f"peak_blocks={report.max_blocks_in_use}/{report.num_blocks}")
+
+
+def run(arch: str = "internlm2_1_8b") -> List[str]:
+    import jax
+
+    from repro import serving
+    from repro.configs import get_smoke_config
+
+    lines = []
+    trace_kw = dict(seed=TRACE_SEED, num_requests=TRACE_REQUESTS,
+                    rate=TRACE_RATE)
+
+    def _serve(name: str, qdtype: Optional[str], kv_qdtype: Optional[str]):
+        from repro.models import init_params
+
+        spec = serving.ServingSpec(
+            layout="dense", qdtype=qdtype, kv_qdtype=kv_qdtype,
+            slots=4, max_len=64, block_len=8, prefill_chunk=8)
+        cfg = spec.apply_to(get_smoke_config(arch))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prepared = serving.prepare(params, spec, cfg=cfg)
+        trace = serving.make_poisson_trace(vocab_size=cfg.vocab_size,
+                                           **trace_kw)
+        engine = serving.Engine(prepared)
+        engine.run(trace, collect_tokens=False)       # compile pass
+        report = engine.run(trace, collect_tokens=False)
+        lines.append(_row(name, report))
+        return prepared, trace, report
+
+    prepared, trace, cont = _serve("trace/continuous", None, None)
+    _serve("trace/int8", "int8", "int8")
+
+    serving.run_lockstep(prepared, trace, collect_tokens=False)
+    base = serving.run_lockstep(prepared, trace, collect_tokens=False)
+    lines.append(_row("trace/lockstep", base))
+
+    if cont.completed != cont.total:
+        raise RuntimeError(
+            f"continuous engine finished only {cont.completed}/{cont.total} "
+            f"requests on the smoke trace")
+    if cont.completed_per_call <= base.completed_per_call:
+        raise RuntimeError(
+            f"continuous batching lost its throughput win: "
+            f"{cont.completed_per_call:.3f} requests/model-call vs "
+            f"lockstep {base.completed_per_call:.3f}")
+    return lines
+
+
+def main() -> None:
+    for line in run():
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_linear import SparsityConfig, convert_to_serving
+from repro import serving
+from repro.core.sparse_linear import SparsityConfig
 from repro.kernels import autotune, dispatch
 
 
@@ -34,7 +35,10 @@ def main() -> None:
         cfg = SparsityConfig(n=sp_n, m=4, mode=mode)
         for quantize, dt in ((None, jnp.float32), ("int8", jnp.int8),
                              ("fp8", jnp.float8_e4m3fn)):
-            p = convert_to_serving({"w": w}, cfg, mode, quantize=quantize)
+            spec = serving.ServingSpec(
+                layout=mode, sparsity=None if sp_n == 4 else (sp_n, 4),
+                qdtype=quantize)
+            p = serving.prepare({"w": w}, spec).params
             d = dispatch.plan_for(p, (b, k), cfg, dtype=dt,
                                   dispatch=dcfg)
             if not d.uses_kernel:

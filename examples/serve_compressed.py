@@ -1,11 +1,14 @@
-"""Batched serving with N:M-compressed weights (Tier-1 memory win).
+"""Continuous-batching serving with N:M-compressed weights.
 
-A miniature continuous-batching server: requests with different prompt
-lengths join a running decode batch; weights live in the compressed
-(values + packed 2-bit metadata) layout the whole time.  Every projection
-lowers through the kernel dispatch engine: on TPU the registry resolves
-the layout to the ``kernels/nm_spmm`` Pallas kernel, on CPU the jnp
-reference path runs (force kernels with REPRO_KERNEL_BACKEND=interpret).
+The whole example is three ``repro.serving`` calls: build a frozen
+:class:`ServingSpec`, run :func:`prepare` (layout conversion + optional
+quantization in one pass), and let :class:`Engine` serve a seeded
+Poisson trace over the paged KV cache.  Weights live in the compressed
+(values + packed 2-bit metadata) layout the whole time.  Every
+projection lowers through the kernel dispatch engine: on TPU the
+registry resolves the layout to the ``kernels/nm_spmm`` Pallas kernel,
+on CPU the jnp reference path runs (force kernels with
+REPRO_KERNEL_BACKEND=interpret).
 
 ``--quantize int8`` additionally stores the compressed values as int8
 with per-channel scales — the engine then serves the decode loop through
@@ -14,93 +17,56 @@ elsewhere) at a further ~2x weight-byte reduction over bf16 values.
 ``--quantize fp8`` stores fp8 (e4m3fn) values instead: same byte
 footprint and scale layout, served through ``nm_spmm_fp8`` with fp32
 accumulation on hardware with a native fp8 dot (interpret emulates).
+``--kv-quantize`` applies the same idea to the KV block pools.
 
 Run: PYTHONPATH=src python examples/serve_compressed.py \
-        [--quantize int8|fp8]
+        [--quantize int8|fp8] [--kv-quantize int8|fp8]
 """
 
 import argparse
-import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
 
+from repro import serving
 from repro.configs import get_smoke_config
-from repro.core.quantize import quantize_tree
-from repro.core.sparse_linear import SparsityConfig
-from repro.kernels import dispatch as kdispatch
-from repro.launch.serve import _dispatch_report
-from repro.models import decode_step, init_caches, init_params
-
-MAX_LEN = 64
-BATCH = 4
+from repro.models import init_params
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quantize", default=None, choices=["int8", "fp8"],
                     help="serve narrow values + per-channel scales")
+    ap.add_argument("--kv-quantize", default=None, choices=["int8", "fp8"],
+                    help="store KV blocks narrow with per-position scales")
     args = ap.parse_args()
-    cfg = get_smoke_config("internlm2_1_8b").with_sparsity(
-        SparsityConfig(n=2, m=4, mode="compressed"))
+
+    spec = serving.ServingSpec(
+        layout="compressed", sparsity=(2, 4), qdtype=args.quantize,
+        slots=4, max_len=64, block_len=8, kv_qdtype=args.kv_quantize)
+    cfg = spec.apply_to(get_smoke_config("internlm2_1_8b"))
     params = init_params(jax.random.PRNGKey(0), cfg)
-    if args.quantize:
-        params = quantize_tree(params, args.quantize)
-    n_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    prepared = serving.prepare(params, spec, cfg=cfg)
+
+    n_bytes = sum(x.size * x.dtype.itemsize
+                  for x in jax.tree.leaves(prepared.params))
     print(f"serving {cfg.name} (reduced) with 2:4-compressed "
           f"{args.quantize or 'bf16'} weights "
           f"({n_bytes/1e6:.2f} MB resident)")
     print("dispatch engine plan:")
-    for line in _dispatch_report(params, BATCH, cfg.sparsity,
-                                 kdispatch.current_dispatch()):
+    for line in prepared.dispatch_report():
         print(line)
 
-    caches = init_caches(cfg, BATCH, MAX_LEN)
-    sstep = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))
-
-    # request queue: (arrival_step, prompt)
-    rng = jax.random.PRNGKey(1)
-    queue = [(0, [1, 5, 9]), (0, [2, 2]), (3, [7, 7, 7, 7]), (6, [4])]
-    active = [None] * BATCH   # per-slot: remaining prompt + generated
-    results = {}
-    tok = jnp.zeros((BATCH, 1), jnp.int32)
-
-    t0 = time.perf_counter()
-    for step in range(24):
-        # admit arrivals into free slots (continuous batching)
-        for slot in range(BATCH):
-            if active[slot] is None and queue and queue[0][0] <= step:
-                _, prompt = queue.pop(0)
-                active[slot] = {"prompt": prompt, "pos": 0, "out": [],
-                                "id": len(results) + sum(a is not None for a in active)}
-        feed = []
-        for slot in range(BATCH):
-            a = active[slot]
-            if a is None:
-                feed.append(0)
-            elif a["pos"] < len(a["prompt"]):
-                feed.append(a["prompt"][a["pos"]])
-            else:
-                feed.append(a["out"][-1] if a["out"] else 0)
-        tok = jnp.asarray(feed, jnp.int32)[:, None]
-        logits, caches = sstep(params, caches, tok, jnp.int32(step))
-        nxt = jnp.argmax(logits[:, -1], axis=-1)
-        for slot in range(BATCH):
-            a = active[slot]
-            if a is None:
-                continue
-            a["pos"] += 1
-            if a["pos"] >= len(a["prompt"]):
-                a["out"].append(int(nxt[slot]))
-            if len(a["out"]) >= 6:           # max new tokens
-                results[tuple(a["prompt"])] = a["out"]
-                active[slot] = None
-    dt = time.perf_counter() - t0
-    for prompt, out in results.items():
-        print(f"prompt {list(prompt)} -> {out}")
-    print(f"served {len(results)} requests, {24*BATCH} slot-steps "
-          f"in {dt:.2f}s ({24*BATCH/dt:.1f} tok/s on 1 CPU core)")
+    engine = serving.Engine(prepared)
+    trace = serving.make_poisson_trace(seed=1, num_requests=6, rate=0.8,
+                                       vocab_size=cfg.vocab_size)
+    report = engine.run(trace)
+    for s in report.stats:
+        print(f"request {s.rid} (prompt {s.prompt_len} tok, arrived "
+              f"iter {s.arrival:.1f}) -> {list(s.tokens)} "
+              f"[{s.tokens_per_s:.1f} tok/s]")
+    print(f"served {report.describe()}")
+    print(f"completed-request throughput: "
+          f"{report.completed_per_call:.3f} requests/model-call")
 
 
 if __name__ == "__main__":

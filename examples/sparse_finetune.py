@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core import nm, rowwise
-from repro.core.sparse_linear import SparsityConfig, convert_to_serving
+from repro.core.sparse_linear import SparsityConfig, convert_layout
 from repro.data import DataConfig, TokenDataset
 from repro.models import forward, make_train_step
 from repro.models.lm import init_train_state
@@ -49,10 +49,10 @@ def main():
         if isinstance(p, dict) and "w" in p and hasattr(p["w"], "ndim"):
             w = p["w"]
             if w.ndim == 2:
-                return convert_to_serving(p, c_cfg, "compressed")
+                return convert_layout(p, c_cfg, "compressed")
             if w.ndim == 4:  # stacked (count, repeat, K, O) scan layers
                 conv = jax.vmap(jax.vmap(
-                    lambda w: convert_to_serving({"w": w}, c_cfg, "compressed")))
+                    lambda w: convert_layout({"w": w}, c_cfg, "compressed")))
                 return conv(w)
             return p
         if isinstance(p, dict):

@@ -42,6 +42,7 @@ from .quantize import (
 from .sparse_linear import (
     SparsityConfig,
     apply_linear,
+    convert_layout,
     convert_to_serving,
     gather_hint,
     init_linear,

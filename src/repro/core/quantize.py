@@ -50,6 +50,7 @@ calibration workflow, and the sharded pmax/psum/dequantize ordering).
 from __future__ import annotations
 
 import contextlib
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -80,6 +81,26 @@ __all__ = [
 SCALE_KEY = "scale"
 ACT_SCALE_KEY = "act_scale"
 _CALIB_KEY = "calib_id"
+
+# names that have already fired their one DeprecationWarning this process.
+# Tests reset this (``_DEPRECATION_WARNED.clear()``) to re-arm a shim.
+_DEPRECATION_WARNED: set = set()
+
+
+def warn_deprecated_once(name: str, hint: str) -> None:
+    """Fire ``DeprecationWarning`` for ``name`` once per process.
+
+    The thin shims left behind by the ``repro.serving.prepare`` API
+    collapse (``convert_to_serving``, ``quantize_tree``,
+    ``calibrate_activation_scales``) all funnel through here so old call
+    sites keep working but nudge — once, not per call — toward the one
+    supported offline-prep entry point.
+    """
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(f"{name} is deprecated; {hint}",
+                  DeprecationWarning, stacklevel=3)
 
 # keys a linear layout may carry on top of its structural ones; the
 # structural detection must stay blind to them
@@ -281,7 +302,7 @@ def quantize_linear(params: Dict[str, Any], dtype=jnp.int8) -> Dict[str, Any]:
     return out
 
 
-def quantize_tree(tree, dtype=jnp.int8):
+def _quantize_tree(tree, dtype=jnp.int8):
     """Quantize every SparseLinear leaf in a model params tree.
 
     ``dtype`` may be a jnp dtype or an alias string ("int8" | "fp8").
@@ -292,6 +313,15 @@ def quantize_tree(tree, dtype=jnp.int8):
     """
     dt = canonical_qdtype(dtype)
     return map_linear_leaves(tree, lambda leaf: quantize_linear(leaf, dt))
+
+
+def quantize_tree(tree, dtype=jnp.int8):
+    """Deprecated: whole-tree quantization now rides
+    ``repro.serving.prepare(params, ServingSpec(qdtype=...))``."""
+    warn_deprecated_once(
+        "quantize_tree",
+        "use repro.serving.prepare(params, ServingSpec(qdtype=...))")
+    return _quantize_tree(tree, dtype)
 
 
 def map_linear_leaves(tree, fn: Callable[[Dict[str, Any]], Dict[str, Any]]):
@@ -382,6 +412,19 @@ def record_calibration(calib_id: jax.Array, x: jax.Array) -> None:
 
 
 def calibrate_activation_scales(
+    params,
+    batch_fn: Callable[[Any], Any],
+) -> Tuple[Any, int]:
+    """Deprecated: calibration now rides ``repro.serving.prepare`` with
+    ``ServingSpec(static_scales=True)`` and a calibration batch."""
+    warn_deprecated_once(
+        "calibrate_activation_scales",
+        "use repro.serving.prepare(params, ServingSpec(static_scales=True), "
+        "cfg=..., calib_tokens=...)")
+    return _calibrate_activation_scales(params, batch_fn)
+
+
+def _calibrate_activation_scales(
     params,
     batch_fn: Callable[[Any], Any],
 ) -> Tuple[Any, int]:

@@ -33,6 +33,7 @@ __all__ = [
     "SparsityConfig",
     "init_linear",
     "apply_linear",
+    "convert_layout",
     "convert_to_serving",
     "COLUMN_PARALLEL",
     "ROW_PARALLEL",
@@ -182,7 +183,7 @@ def apply_linear(
     return sparse_matmul(x, params, cfg, constrain_fn=_g, shard=shard)
 
 
-def convert_to_serving(
+def convert_layout(
     params: Dict[str, Any], cfg: SparsityConfig, target_mode: str = "compressed",
     quantize: Optional[str] = None,
 ) -> Dict[str, Any]:
@@ -233,3 +234,22 @@ def convert_to_serving(
         vals = w.reshape(k, o)[blk + idx, :]
         return _q({"values": vals, "gather_idx": idx})
     raise ValueError(f"unknown target {target_mode}")
+
+
+def convert_to_serving(
+    params: Dict[str, Any], cfg: SparsityConfig, target_mode: str = "compressed",
+    quantize: Optional[str] = None,
+) -> Dict[str, Any]:
+    """Deprecated alias for :func:`convert_layout`.
+
+    Offline serving preparation now goes through
+    ``repro.serving.prepare(params, ServingSpec(...))``, which composes
+    layout conversion, quantization, scale calibration and mesh placement
+    in one step; ``convert_layout`` remains as the bare layout mechanism.
+    """
+    from .quantize import warn_deprecated_once
+    warn_deprecated_once(
+        "convert_to_serving",
+        "use repro.serving.prepare(params, ServingSpec(...)) or "
+        "repro.core.sparse_linear.convert_layout for the bare mechanism")
+    return convert_layout(params, cfg, target_mode, quantize=quantize)

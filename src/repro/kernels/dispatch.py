@@ -93,6 +93,7 @@ __all__ = [
     "iter_linear_items",
     "plan_for",
     "pretune",
+    "dispatch_report",
     "JNP_REFERENCE",
 ]
 
@@ -996,6 +997,57 @@ def pretune(params_tree, batch: int, cfg,
         sparse_matmul(x, leaf, lcfg, dispatch=dcfg, shard=shard)
         count += 1
     return count
+
+
+def dispatch_report(params_tree, batches, cfg,
+                    dispatch: Optional[DispatchConfig] = None) -> List[str]:
+    """Distinct (shape -> engine decision) plan lines for a params tree.
+
+    ``batches`` is the tuple of leading batch widths the serving path
+    will actually run (e.g. ``(slots, prefill_chunk)`` — decode steps
+    and prefill chunks can plan differently, and the report shows both).
+    Shard-aware: under a mesh env each line carries global -> local
+    shapes and the chosen collective.  Ends with the autotune cache
+    counters.  This is the engine-owned successor of the plan report
+    ``launch/serve.py`` used to build privately; the launcher, the
+    examples, and ``Prepared.dispatch_report`` all render these lines.
+    """
+    from repro.core.sparse_linear import gather_hint
+    from . import autotune as kautotune
+
+    if isinstance(batches, int):
+        batches = (batches,)
+    dcfg = dispatch or _DEFAULT
+    seen = {}
+    for batch in batches:
+        for names, leaf in iter_linear_items(params_tree):
+            lcfg = leaf_config(names, cfg)
+            try:
+                ke = input_features(leaf, lcfg)
+            except ValueError:
+                continue
+            hint = gather_hint(names)
+            shard = leaf_shard_spec(names, cfg)
+            dt = leaf.get("values", leaf.get("w")).dtype
+            d = plan_for(leaf, (batch, 1, ke), lcfg,
+                         dtype=dt, dispatch=dcfg, shard=shard)
+            o = leaf["w"].shape[-1] if "w" in leaf else leaf["values"].shape[-1]
+            seen.setdefault((batch, d.mode, lcfg.n, ke, o, hint), d)
+    lines = []
+    for (batch, _, n, ke, o, hint), d in sorted(seen.items(), key=lambda kv: (
+            kv[0][0], kv[0][1], kv[0][2], kv[0][3], kv[0][4],
+            str(kv[0][5]))):
+        loc = ""
+        if d.uses_shard_map:
+            lb, lke, lo = d.local_dims
+            loc = f" -> local (B={lb}, K={lke}, O={lo})"
+        lines.append(f"  [{hint or 'rep'}] {n}:{cfg.m} "
+                     f"global (B={batch}, K={ke}, O={o})"
+                     f"{loc} {describe(d)}")
+    st = kautotune.stats()
+    lines.append(f"  autotune cache: {st['hits']} hit(s) / "
+                 f"{st['misses']} miss(es)")
+    return lines
 
 
 def _entry_by_name(mode: str, name: str) -> KernelEntry:

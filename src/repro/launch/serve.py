@@ -1,82 +1,38 @@
-"""Production serving launcher: continuous-batching decode loop.
+"""Production serving launcher: thin adapter over ``repro.serving``.
 
     python -m repro.launch.serve --arch internlm2_1_8b --smoke \
         [--sparsity 2:4 --mode compressed|gather|rowwise] [--requests 16] \
-        [--quantize int8|fp8] [--static-scales] \
+        [--quantize int8|fp8] [--static-scales] [--kv-quantize int8|fp8] \
         [--kernel-backend auto|tpu|interpret|jnp] \
-        [--autotune] [--mesh 2x4]
+        [--autotune] [--mesh 2x4] \
+        [--block-len 8] [--kv-blocks N] [--admission reserve|optimistic]
 
-Weights can live in any SparseLinear serving layout (dense | compressed |
-gather | rowwise).  Every projection lowers through the kernel dispatch
-engine (``repro.kernels.dispatch``): on TPU the registry resolves the
-layouts to the ``nm_spmm*`` / ``tile_gemm`` Pallas kernels; elsewhere (or
-with ``--kernel-backend jnp``) the documented jnp reference paths run.
+This module only parses flags: it builds a frozen
+:class:`repro.serving.ServingSpec`, runs :func:`repro.serving.prepare`
+(layout conversion -> weight quantization -> static-scale calibration ->
+mesh placement, in that order), and hands the result to
+:class:`repro.serving.Engine` — a genuine continuous-batching loop over
+a paged KV cache: per-request block tables, per-slot positions (ragged
+lengths retire independently), prefill chunks interleaved with batched
+decode steps, and admission/eviction under the ``--kv-blocks`` budget.
 
-``--quantize int8|fp8`` quantizes every linear to narrow values +
-per-channel scales: on a kernel backend the matching ``*_int8`` /
-``*_fp8`` registry entries contract narrow x narrow into the wide
-accumulator (int32 / fp32) and dequantize on the way out — including
-under ``--mesh``, where the scale leaf gets its own PartitionSpec,
-activations quantize per-shard, and a sharded contraction psums raw
-accumulator partials before one dequantize.  fp8 needs a TPU with a
-native fp8 MXU dot (or the interpret backend, which emulates); other
-hardware serves the jnp dequantize reference.
+Every projection still lowers through the kernel dispatch engine; the
+``--quantize``, ``--static-scales``, ``--mesh``, ``--kernel-backend``
+and ``--autotune`` semantics are unchanged from the lockstep era — they
+are ServingSpec fields now.  ``--kv-quantize int8|fp8`` additionally
+stores the KV block pools in the narrow dtype with per-(position, head)
+scales, riding the same dtype-parametric scale machinery as weights.
 
-``--static-scales`` (with ``--quantize``) calibrates a static
-activation scale per linear site from one prefill-shaped batch before
-the loop starts, so the decode hot path skips the per-row absmax pass
-(``act-scales=static`` in the dispatch report).
-
-``--mesh DxM`` installs a (data, model) mesh: weights are placed by the
-sharding rules and every hinted linear runs its kernel PER-SHARD under
-``shard_map`` (column-parallel: out dim sharded, no collective;
-row-parallel: contraction sharded + psum).  The startup dispatch report
-shows, for every linear: global shape, per-shard local shape, chosen
-kernel/blocks, and the collective.
+Reported metrics are honest serving numbers: per-request tokens/sec
+(generated tokens over that request's enqueue->done wall time), p50/p99
+request latency, and completed-request throughput — NOT the old padded
+``slot-tokens/s``, which counted idle slots and prompt re-feeding as
+throughput.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
-
-
-def _dispatch_report(params, batch, sp_cfg, dcfg):
-    """Distinct (shape -> engine decision) lines for the model's linears,
-    shard-aware: under a mesh env each line carries global -> local shapes
-    and the chosen collective.  Ends with the autotune cache counters."""
-    from repro.core.sparse_linear import gather_hint
-    from repro.kernels import autotune as kautotune
-    from repro.kernels import dispatch as kdispatch
-
-    seen = {}
-    for names, leaf in kdispatch.iter_linear_items(params):
-        lcfg = kdispatch.leaf_config(names, sp_cfg)
-        try:
-            ke = kdispatch.input_features(leaf, lcfg)
-        except ValueError:
-            continue
-        hint = gather_hint(names)
-        shard = kdispatch.leaf_shard_spec(names, sp_cfg)
-        dt = leaf.get("values", leaf.get("w")).dtype
-        d = kdispatch.plan_for(leaf, (batch, 1, ke), lcfg,
-                               dtype=dt, dispatch=dcfg, shard=shard)
-        o = leaf["w"].shape[1] if "w" in leaf else leaf["values"].shape[1]
-        seen.setdefault((d.mode, lcfg.n, ke, o, hint), d)
-    lines = []
-    for (_, n, ke, o, hint), d in sorted(seen.items(), key=lambda kv: (
-            kv[0][0], kv[0][1], kv[0][2], kv[0][3], str(kv[0][4]))):
-        loc = ""
-        if d.uses_shard_map:
-            lb, lke, lo = d.local_dims
-            loc = f" -> local (B={lb}, K={lke}, O={lo})"
-        lines.append(f"  [{hint or 'rep'}] {n}:{sp_cfg.m} "
-                     f"global (B={batch}, K={ke}, O={o})"
-                     f"{loc} {kdispatch.describe(d)}")
-    st = kautotune.stats()
-    lines.append(f"  autotune cache: {st['hits']} hit(s) / "
-                 f"{st['misses']} miss(es)")
-    return lines
 
 
 def main():
@@ -94,85 +50,99 @@ def main():
                     help="with --quantize: calibrate static activation "
                          "scales on one batch so decode skips the "
                          "per-row absmax pass")
+    ap.add_argument("--kv-quantize", default=None, choices=["int8", "fp8"],
+                    help="store the paged KV cache in the narrow dtype "
+                         "with per-(position, head) scales")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="install a (data, model) mesh, e.g. 2x4 — run "
                          "kernels per-shard via shard_map (needs that many "
                          "devices; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (concurrent streams)")
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--block-len", type=int, default=8,
+                    help="tokens per KV block")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="total KV block budget (default: enough for "
+                         "every slot at --max-len; smaller values force "
+                         "admission queueing / eviction)")
+    ap.add_argument("--admission", default="reserve",
+                    choices=["reserve", "optimistic"])
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="Poisson arrival rate (requests per scheduler "
+                         "iteration)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kernel-backend", default="auto",
                     choices=["auto", "tpu", "interpret", "jnp"],
                     help="dispatch-engine backend override")
     ap.add_argument("--autotune", action="store_true",
                     help="autotune kernel block sizes (persisted under "
                          "experiments/autotune/)")
+    ap.add_argument("--lockstep", action="store_true",
+                    help="ALSO run the pre-paging lockstep loop on the "
+                         "same trace and print the comparison")
     args = ap.parse_args()
     if args.static_scales and not args.quantize:
         ap.error("--static-scales requires --quantize int8|fp8")
 
-    import contextlib
-
     import jax
-    import jax.numpy as jnp
 
+    from repro import serving
     from repro.configs import get_config, get_smoke_config
-    from repro.core.sparse_linear import SparsityConfig
-    from repro.kernels import dispatch as kdispatch
-    from repro.models import decode_step, init_caches, init_params
+    from repro.models import init_params
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    sparsity = None
     if args.sparsity:
         n, m = map(int, args.sparsity.split(":"))
-        cfg = cfg.with_sparsity(SparsityConfig(n=n, m=m, mode=args.mode))
+        sparsity = (n, m)
+    mesh = None
+    if args.mesh:
+        d_, m_ = map(int, args.mesh.lower().split("x"))
+        mesh = (d_, m_)
+    spec = serving.ServingSpec(
+        layout=args.mode, sparsity=sparsity, qdtype=args.quantize,
+        static_scales=args.static_scales, mesh=mesh,
+        backend=args.kernel_backend, autotune=args.autotune,
+        slots=args.batch, max_len=args.max_len, block_len=args.block_len,
+        kv_blocks=args.kv_blocks, kv_qdtype=args.kv_quantize,
+        admission=args.admission, prefill_chunk=args.prefill_chunk)
+
+    cfg = spec.apply_to(
+        get_smoke_config(args.arch) if args.smoke else get_config(args.arch))
     params = init_params(jax.random.PRNGKey(0), cfg)
-    if args.quantize:
-        from repro.core.quantize import quantize_tree
-
-        params = quantize_tree(params, args.quantize)
+    calib_tokens = None
     if args.static_scales:
-        from repro.core.quantize import calibrate_activation_scales
-        from repro.models import forward
-
         calib_tokens = jax.random.randint(
             jax.random.PRNGKey(2), (args.batch, min(args.max_len, 32)),
             1, cfg.vocab_size)
-        params, n_sites = calibrate_activation_scales(
-            params, lambda p: forward(p, cfg, tokens=calib_tokens))
-        print(f"static activation scales calibrated for {n_sites} "
-              f"linear site(s) — decode skips the per-row absmax pass")
-    nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    prepared = serving.prepare(params, spec, cfg=cfg,
+                               calib_tokens=calib_tokens)
+    if prepared.calibrated_sites:
+        print(f"static activation scales calibrated for "
+              f"{prepared.calibrated_sites} linear site(s) — decode skips "
+              f"the per-row absmax pass")
+    nbytes = sum(x.size * x.dtype.itemsize
+                 for x in jax.tree.leaves(prepared.params))
     print(f"serving {cfg.name}: {nbytes/1e6:.1f} MB weights "
           f"({args.sparsity or 'dense'}/{args.mode}"
           f"{'/' + args.quantize if args.quantize else ''})")
+    if mesh:
+        print(f"mesh installed: data={mesh[0]} x model={mesh[1]} "
+              f"({prepared.mesh.devices.size} devices)")
 
-    # engine override + optional mesh env stay active for the whole decode
-    # loop (main() owns the process lifetime: the stack closes at exit)
-    engine_ctx = contextlib.ExitStack()
-    if args.mesh:
-        from repro.launch.mesh import make_axis_env
-        from repro.launch.shardings import ShardingRules
-        from repro.models.pjit_utils import use_axis_env
-
-        d_, m_ = map(int, args.mesh.lower().split("x"))
-        mesh = jax.make_mesh((d_, m_), ("data", "model"))
-        env = make_axis_env(mesh)
-        rules = ShardingRules(env, cfg)
-        params = jax.device_put(params, rules.tree_shardings(params))
-        engine_ctx.enter_context(use_axis_env(env))
-        print(f"mesh installed: data={d_} x model={m_} "
-              f"({mesh.devices.size} devices)")
-
-    dcfg = kdispatch.DispatchConfig(backend=args.kernel_backend,
-                                    autotune=args.autotune)
     if args.autotune:
         from repro.kernels import autotune as kautotune
+        from repro.kernels import dispatch as kdispatch
         from repro.kernels.registry import resolve_backend
 
         # the decode loop is jitted (tracers only): tune eagerly up front
-        tuned = kdispatch.pretune(params, args.batch, cfg.sparsity, dcfg)
+        with prepared.activate():
+            tuned = kdispatch.pretune(prepared.params, args.batch,
+                                      cfg.sparsity, prepared.dispatch)
         if tuned:
             store = kautotune.store_path(resolve_backend(args.kernel_backend))
             print(f"autotuned {tuned} linear problem(s) -> {store}")
@@ -180,55 +150,31 @@ def main():
             print("autotune: nothing to tune "
                   "(jnp-routed, unfittable, or cache already warm)")
     print("dispatch engine plan:")
-    for line in _dispatch_report(params, args.batch, cfg.sparsity, dcfg):
+    for line in prepared.dispatch_report():
         print(line)
-    engine_ctx.enter_context(kdispatch.use_dispatch(
-        backend=args.kernel_backend, autotune=args.autotune))
 
-    caches = init_caches(cfg, args.batch, args.max_len)
-    step = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))
-    rng = jax.random.PRNGKey(1)
-    pending = [
-        list(jax.random.randint(jax.random.fold_in(rng, i), (3,), 1,
-                                cfg.vocab_size))
-        for i in range(args.requests)
-    ]
-    slots = [None] * args.batch
-    done = 0
-    t0 = time.perf_counter()
-    pos = 0
-    while done < args.requests and pos < args.max_len - 1:
-        for s in range(args.batch):
-            if slots[s] is None and pending:
-                slots[s] = {"prompt": [int(x) for x in pending.pop(0)],
-                            "i": 0, "out": []}
-        feed = []
-        for s in range(args.batch):
-            a = slots[s]
-            if a is None:
-                feed.append(0)
-            elif a["i"] < len(a["prompt"]):
-                feed.append(a["prompt"][a["i"]])
-            else:
-                feed.append(a["out"][-1])
-        logits, caches = step(params, caches,
-                              jnp.asarray(feed, jnp.int32)[:, None],
-                              jnp.int32(pos))
-        nxt = jnp.argmax(logits[:, -1], axis=-1)
-        for s in range(args.batch):
-            a = slots[s]
-            if a is None:
-                continue
-            a["i"] += 1
-            if a["i"] >= len(a["prompt"]):
-                a["out"].append(int(nxt[s]))
-            if len(a["out"]) >= args.new_tokens:
-                done += 1
-                slots[s] = None
-        pos += 1
-    dt = time.perf_counter() - t0
-    print(f"served {done}/{args.requests} requests in {dt:.1f}s "
-          f"({pos * args.batch / dt:.1f} slot-tokens/s)")
+    engine = serving.Engine(prepared)
+    print(f"paged KV: {engine.num_blocks} block(s) x {spec.block_len} "
+          f"tokens, {engine.kv_bytes()/1e6:.1f} MB pools, "
+          f"admission={spec.admission}")
+    trace = serving.make_poisson_trace(
+        seed=args.seed, num_requests=args.requests, rate=args.rate,
+        new_mix=((args.new_tokens, 1.0),), vocab_size=cfg.vocab_size)
+    report = engine.run(trace)
+    print(f"served {report.describe()}")
+    per_req = ", ".join(f"r{s.rid}:{s.tokens_per_s:.1f}"
+                        for s in report.stats[:8])
+    print(f"per-request tokens/s: {per_req}"
+          f"{' ...' if len(report.stats) > 8 else ''}")
+    print(f"completed-request throughput: "
+          f"{report.completed_per_call:.3f} requests/model-call, "
+          f"{report.completed / report.wall_s:.2f} requests/s")
+    if args.lockstep:
+        base = serving.run_lockstep(prepared, trace)
+        print(f"lockstep baseline: {base.describe()}")
+        print(f"continuous vs lockstep requests/model-call: "
+              f"{report.completed_per_call:.3f} vs "
+              f"{base.completed_per_call:.3f}")
 
 
 if __name__ == "__main__":

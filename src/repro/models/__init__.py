@@ -10,8 +10,15 @@ from .lm import (
     make_prefill_step,
     make_train_step,
 )
+from .paged import (
+    init_paged_caches,
+    paged_decode_step,
+    paged_prefill_chunk,
+    reset_slot_state,
+)
 from .transformer import (
     build_layout,
+    cached_stack,
     decode_step,
     forward,
     init_caches,

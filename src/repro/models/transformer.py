@@ -235,14 +235,23 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> List[Dict[str, An
     return caches
 
 
-def decode_step(
+def cached_stack(
     params: Params,
     caches: List[Dict[str, Any]],
-    tokens: jax.Array,       # (B, 1) int32
-    pos: jax.Array,          # scalar int32
+    x: jax.Array,            # (B, T, d) embedded input
     cfg: ModelConfig,
+    mixer_fn,                # (slot, lp, lc, h) -> (mixer_out, new_cache)
 ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
-    x = embed(params["embed"], tokens)
+    """Shared cache-threading stack walker for every decode-side path.
+
+    Walks the stage/slot layout exactly like :func:`decode_step` always
+    did (scan over super-blocks, inner scan over repeated slots), but the
+    mixer application is pluggable: the contiguous decode passes the
+    ring-buffer/linear-cache mixers, the paged serving path
+    (``repro.models.paged``) passes block-table mixers.  Norms, residuals,
+    the FFN/MoE half of every slot, and the final unembedding stay in one
+    place so the two cache disciplines cannot drift.
+    """
     layout = build_layout(cfg)
     new_caches = []
     for st, stage_params, stage_cache in zip(layout, params["stages"], caches):
@@ -254,13 +263,7 @@ def decode_step(
 
                 def one(x, lp, lc, slot=slot):
                     h = rms_norm(x, lp["norm1"]["gamma"])
-                    if slot.mixer in ("attn", "attn_local"):
-                        o, c = decode_attention_block(
-                            lp["mixer"], h, lc, pos, cfg,
-                            is_global=slot.mixer == "attn",
-                        )
-                    else:
-                        o, c = decode_mamba_block(lp["mixer"]["mamba"], h, lc, cfg)
+                    o, c = mixer_fn(slot, lp, lc, h)
                     x = x + o
                     if slot.ffn != "none":
                         h = rms_norm(x, lp["norm2"]["gamma"])
@@ -291,3 +294,21 @@ def decode_step(
     unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
     logits = x @ unembed.astype(x.dtype)
     return logits, new_caches
+
+
+def decode_step(
+    params: Params,
+    caches: List[Dict[str, Any]],
+    tokens: jax.Array,       # (B, 1) int32
+    pos: jax.Array,          # scalar int32
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+    x = embed(params["embed"], tokens)
+
+    def mixer(slot, lp, lc, h):
+        if slot.mixer in ("attn", "attn_local"):
+            return decode_attention_block(
+                lp["mixer"], h, lc, pos, cfg, is_global=slot.mixer == "attn")
+        return decode_mamba_block(lp["mixer"]["mamba"], h, lc, cfg)
+
+    return cached_stack(params, caches, x, cfg, mixer)

@@ -1,0 +1,46 @@
+"""``repro.serving`` — the stable serving API.
+
+Offline prep in one call, serving in one object:
+
+```python
+from repro import serving
+
+spec = serving.ServingSpec(layout="compressed", sparsity=(2, 4),
+                           qdtype="int8", slots=4, max_len=64)
+cfg = spec.apply_to(get_smoke_config("internlm2_1_8b"))
+params = init_params(jax.random.PRNGKey(0), cfg)
+prepared = serving.prepare(params, spec, cfg=cfg)
+report = serving.Engine(prepared).run(serving.make_poisson_trace(seed=0))
+```
+
+- :class:`ServingSpec` / :func:`prepare` / :class:`Prepared` — the one
+  offline-prep entry point (layout, quantization, calibration, mesh).
+- :class:`Engine` — continuous batching over the paged KV cache
+  (``repro.models.paged``), scheduler in :mod:`repro.serving.scheduler`.
+- :func:`make_poisson_trace` — seeded synthetic traffic.
+- :func:`run_lockstep` — the pre-paging shared-``pos`` loop, kept as the
+  throughput baseline.
+
+See ``docs/serving.md`` for the block-table layout and the
+admission/eviction policy.
+"""
+
+from .baseline import run_lockstep
+from .engine import Engine, RequestStats, ServingReport, percentile
+from .scheduler import PagedScheduler, Request
+from .spec import Prepared, ServingSpec, prepare
+from .traffic import make_poisson_trace
+
+__all__ = [
+    "Engine",
+    "PagedScheduler",
+    "Prepared",
+    "Request",
+    "RequestStats",
+    "ServingReport",
+    "ServingSpec",
+    "make_poisson_trace",
+    "percentile",
+    "prepare",
+    "run_lockstep",
+]

@@ -1,0 +1,275 @@
+"""Continuous-batching engine over the paged KV cache.
+
+Each iteration of :meth:`Engine.run`:
+
+1. **arrivals** — requests whose Poisson timestamp has come enter the
+   waiting queue (idle iterations fast-forward to the next arrival);
+2. **admission** — free slots fill from the queue under the block
+   budget (newly admitted slots get their SSM state zeroed);
+3. **one prefill chunk** — the oldest prefilling request advances by up
+   to ``prefill_chunk`` prompt tokens in a single model call (chunks are
+   exact-sized, so MoE capacity never sees padding tokens);
+4. **one batched decode step** — every decode-state slot advances its
+   OWN position via the block-table decode path; idle / prefilling slots
+   ride along masked.
+
+Finished requests retire independently (ragged lengths), their blocks
+return to the pool, and the slot admits the next arrival on the next
+iteration — no stream ever waits for the whole batch to drain, which is
+exactly what the lockstep loop (``repro.serving.baseline``) cannot do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from .scheduler import PagedScheduler, Request, SlotState
+from .spec import Prepared
+
+__all__ = ["Engine", "RequestStats", "ServingReport", "percentile"]
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Linear-interpolation percentile (numpy-free contract for docs)."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    rank = (p / 100.0) * (len(xs) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (rank - lo)
+
+
+@dataclasses.dataclass
+class RequestStats:
+    rid: int
+    prompt_len: int
+    new_tokens: int
+    tokens: tuple           # the generated token ids
+    arrival: float          # scheduler-iteration timestamp
+    done_iter: int
+    latency_s: float        # wall: enqueue -> last token
+    tokens_per_s: float     # generated tokens / latency
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """What a serving run did — the benchmark CSV rows come from here."""
+
+    stats: List[RequestStats]
+    total: int
+    completed: int
+    wall_s: float
+    model_calls: int        # prefill chunks + decode steps (lockstep: steps)
+    prefill_chunks: int
+    decode_calls: int
+    evictions: int
+    max_blocks_in_use: int
+    num_blocks: int
+
+    @property
+    def p50_latency_s(self) -> float:
+        return percentile([s.latency_s for s in self.stats], 50.0)
+
+    @property
+    def p99_latency_s(self) -> float:
+        return percentile([s.latency_s for s in self.stats], 99.0)
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(s.new_tokens for s in self.stats)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def completed_per_call(self) -> float:
+        """Completed-request throughput per model invocation — the
+        wall-clock-free comparison axis between engines (a model call
+        costs one forward regardless of which loop issued it)."""
+        return self.completed / self.model_calls if self.model_calls else 0.0
+
+    def describe(self) -> str:
+        return (f"{self.completed}/{self.total} requests in "
+                f"{self.wall_s:.2f}s over {self.model_calls} model calls "
+                f"({self.tokens_per_s:.1f} tok/s, "
+                f"p50 {self.p50_latency_s * 1e3:.0f}ms / "
+                f"p99 {self.p99_latency_s * 1e3:.0f}ms, "
+                f"{self.evictions} eviction(s), "
+                f"peak {self.max_blocks_in_use}/{self.num_blocks} blocks)")
+
+
+class Engine:
+    """Continuous-batching serving engine.
+
+    ``Engine(prepare(params, spec, cfg=cfg)).run(requests)`` is the whole
+    public serving API; ``launch/serve.py`` is a thin argparse adapter
+    over it.  The jitted steps live at module level in
+    ``repro.models.paged`` with the hashable config static, so engines
+    over the same config share compiled traces.
+    """
+
+    def __init__(self, prepared: Prepared):
+        if prepared.cfg is None:
+            raise ValueError("Engine needs a full model: prepare(..., cfg=cfg)")
+        self.prepared = prepared
+        self.spec = prepared.spec
+        self.cfg = prepared.cfg
+        self.num_blocks = (self.spec.kv_blocks
+                           if self.spec.kv_blocks is not None
+                           else self.spec.default_kv_blocks())
+
+    def _fresh_caches(self):
+        from repro.models.paged import init_paged_caches
+        # +1: physical block 0 is the scratch target for masked writes
+        return init_paged_caches(self.cfg, self.num_blocks + 1,
+                                 self.spec.block_len, self.spec.slots,
+                                 kv_qdtype=self.spec.kv_qdtype)
+
+    def kv_bytes(self) -> int:
+        """HBM footprint of the block pools (the budget the scheduler
+        manages, reported by serve.py and the benchmark)."""
+        import jax
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self._fresh_caches()))
+
+    def dispatch_report(self):
+        return self.prepared.dispatch_report()
+
+    def run(self, requests: Sequence[Request], *, max_iters: Optional[int] = None,
+            collect_tokens: bool = True) -> ServingReport:
+        import jax.numpy as jnp
+
+        from repro.models.paged import (paged_decode_step, paged_prefill_chunk,
+                                        reset_slot_state)
+
+        spec = self.spec
+        params = self.prepared.params
+        sched = PagedScheduler(slots=spec.slots, table_width=spec.table_width,
+                               num_blocks=self.num_blocks,
+                               block_len=spec.block_len,
+                               admission=spec.admission)
+        caches = self._fresh_caches()
+        arrivals = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        n = len(arrivals)
+        if max_iters is None:
+            # generous ceiling: every token its own iteration, plus slack
+            # for queueing/preemption — a livelock trips this, not a hang
+            max_iters = 64 + 16 * sum(
+                len(r.prompt) + r.max_new_tokens for r in arrivals)
+        stats: List[RequestStats] = []
+        prefill_chunks = decode_calls = 0
+        ai = 0
+        it = 0
+        t0 = time.perf_counter()
+
+        def _retire(s: int):
+            st = sched.retire(s)
+            now = time.perf_counter()
+            lat = now - st.enqueue_wall
+            stats.append(RequestStats(
+                rid=st.req.rid, prompt_len=len(st.req.prompt),
+                new_tokens=len(st.out),
+                tokens=tuple(st.out) if collect_tokens else (),
+                arrival=st.req.arrival, done_iter=it,
+                latency_s=lat,
+                tokens_per_s=len(st.out) / lat if lat > 0 else 0.0))
+
+        with self.prepared.activate():
+            while len(stats) < n:
+                if it >= max_iters:
+                    raise RuntimeError(
+                        f"engine made no progress after {max_iters} "
+                        f"iterations ({len(stats)}/{n} done)")
+                while ai < n and arrivals[ai].arrival <= it:
+                    sched.enqueue(arrivals[ai], wall=time.perf_counter(),
+                                  it=float(it))
+                    ai += 1
+                if not sched.has_work:
+                    # idle: fast-forward to the next arrival
+                    it = max(it + 1, int(np.ceil(arrivals[ai].arrival)))
+                    continue
+
+                for s in sched.admit_ready():
+                    caches = reset_slot_state(caches, s)
+
+                # one prefill chunk for the oldest prefilling request
+                pre = [s for s in sched.running
+                       if sched.slots[s].state == "prefill"]
+                if pre:
+                    s = min(pre, key=lambda s_: sched.slots[s_].seq)
+                    st = sched.slots[s]
+                    c = min(spec.prefill_chunk,
+                            len(st.req.prompt) - st.prefill_off)
+                    if sched.ensure_blocks(s, st.prefill_off + c - 1):
+                        tok = jnp.asarray(
+                            st.req.prompt[st.prefill_off:st.prefill_off + c],
+                            jnp.int32)[None, :]
+                        logits, caches = paged_prefill_chunk(
+                            params, caches, tok, jnp.int32(st.prefill_off),
+                            jnp.asarray(sched.table[s:s + 1]),
+                            jnp.int32(c), self.cfg, spec.block_len,
+                            spec.kv_qdtype)
+                        prefill_chunks += 1
+                        st.prefill_off += c
+                        if st.prefill_off == len(st.req.prompt):
+                            st.state = "decode"
+                            st.pos = len(st.req.prompt)
+                            st.out.append(int(jnp.argmax(logits[0, c - 1])))
+                            if len(st.out) >= st.req.max_new_tokens:
+                                _retire(s)
+
+                # one batched decode step over every decode-state slot
+                dec = [s for s in sched.running
+                       if sched.slots[s].state == "decode"]
+                ready = []
+                for s in dec:
+                    st = sched.slots[s]
+                    # an earlier ensure_blocks may have evicted this slot
+                    if st is None or st.state != "decode":
+                        continue
+                    if sched.ensure_blocks(s, st.pos):
+                        ready.append(s)
+                # ...or a LATER one may have evicted an already-ready slot
+                ready = [s for s in ready if sched.slots[s] is not None
+                         and sched.slots[s].state == "decode"]
+                if ready:
+                    feed = np.zeros((spec.slots, 1), np.int32)
+                    positions = np.zeros((spec.slots,), np.int32)
+                    active = np.zeros((spec.slots,), bool)
+                    for s in ready:
+                        st = sched.slots[s]
+                        feed[s, 0] = st.out[-1]
+                        positions[s] = st.pos
+                        active[s] = True
+                    logits, caches = paged_decode_step(
+                        params, caches, jnp.asarray(feed),
+                        jnp.asarray(positions), jnp.asarray(sched.table),
+                        jnp.asarray(active), self.cfg, spec.block_len,
+                        spec.kv_qdtype)
+                    decode_calls += 1
+                    nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                    for s in ready:
+                        st = sched.slots[s]
+                        st.out.append(int(nxt[s]))
+                        st.pos += 1
+                        if len(st.out) >= st.req.max_new_tokens:
+                            _retire(s)
+                it += 1
+
+        return ServingReport(
+            stats=sorted(stats, key=lambda s_: s_.rid),
+            total=n, completed=len(stats),
+            wall_s=time.perf_counter() - t0,
+            model_calls=prefill_chunks + decode_calls,
+            prefill_chunks=prefill_chunks, decode_calls=decode_calls,
+            evictions=sched.evictions,
+            max_blocks_in_use=sched.max_blocks_in_use,
+            num_blocks=self.num_blocks)
