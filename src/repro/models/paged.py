@@ -203,6 +203,24 @@ def _prefill_mamba(p, x, cache, n_valid, cfg):
     return outs.transpose(1, 0, 2), cache
 
 
+def _prefill_mamba_slot(p, x, cache, n_valid, slot_idx, cfg):
+    """SSM prefill targeting one batch row of the slots-wide cache.
+
+    Prefill runs one request (``x`` is batch 1) but the engine's SSM
+    caches are batch=slots, so the scan works on a sliced row and the
+    result is scattered back into row ``slot_idx`` — every other slot's
+    recurrent state passes through untouched."""
+    row = jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot_idx, 1, axis=0),
+        cache)
+    o, row = _prefill_mamba(p, x, row, n_valid, cfg)
+    new = jax.tree.map(
+        lambda full, r: jax.lax.dynamic_update_slice_in_dim(
+            full, r, slot_idx, axis=0),
+        cache, row)
+    return o, new
+
+
 @partial(jax.jit, static_argnames=("cfg", "block_len", "kv_qdtype"))
 def paged_decode_step(
     params: Params,
@@ -246,6 +264,7 @@ def paged_prefill_chunk(
     pos0: jax.Array,          # scalar int32: position of tokens[0, 0]
     table: jax.Array,         # (1, W) int32
     n_valid: jax.Array,       # scalar int32: tokens beyond this are padding
+    slot_idx: jax.Array,      # scalar int32: engine slot being prefilled
     cfg: ModelConfig,
     block_len: int,
     kv_qdtype: Optional[str] = None,
@@ -255,6 +274,11 @@ def paged_prefill_chunk(
     long prompt costs ceil(P/C) model calls instead of P lockstep steps.
     Returns logits for every chunk position; the scheduler samples from
     the last valid one when the prompt completes.
+
+    ``table`` already selects the request's physical blocks, so the
+    attention side needs no slot index; ``slot_idx`` exists for the SSM
+    side, whose caches are slot-addressed (batch=slots) and must update
+    exactly the admitted row.
     """
     c = tokens.shape[1]
     x = embed(params["embed"], tokens)
@@ -267,7 +291,8 @@ def paged_prefill_chunk(
                 lp["mixer"], h, lc, positions, table, wmask, cfg,
                 is_global=slot.mixer == "attn",
                 block_len=block_len, kv_qdtype=kv_qdtype)
-        return _prefill_mamba(lp["mixer"]["mamba"], h, lc, n_valid, cfg)
+        return _prefill_mamba_slot(lp["mixer"]["mamba"], h, lc, n_valid,
+                                   slot_idx, cfg)
 
     return cached_stack(params, caches, x, cfg, mixer)
 

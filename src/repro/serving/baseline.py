@@ -49,6 +49,10 @@ def run_lockstep(prepared: Prepared, requests: Sequence[Request],
     ai = 0
     slots: List = [None] * batch
     stats: List[RequestStats] = []
+    # wall stamp at arrival (first eligibility), NOT at slot admission:
+    # latency must include queue wait so the gated p50/p99 rows compare
+    # the same enqueue->done definition the Engine reports
+    arrive_wall = {}
     pos = 0
     t0 = time.perf_counter()
 
@@ -57,6 +61,7 @@ def run_lockstep(prepared: Prepared, requests: Sequence[Request],
         while len(stats) < n and pos < max_len - 1:
             now_wall = time.perf_counter()
             while ai < n and arrivals[ai].arrival <= pos:
+                arrive_wall[arrivals[ai].rid] = now_wall
                 ai += 1
             arrived = arrivals[:ai]
             for s in range(batch):
@@ -68,7 +73,7 @@ def run_lockstep(prepared: Prepared, requests: Sequence[Request],
                                    None)
                     if nxt_req is not None:
                         slots[s] = {"req": nxt_req, "i": 0, "out": [],
-                                    "wall": now_wall}
+                                    "wall": arrive_wall[nxt_req.rid]}
             if not any(slots) and ai < n:
                 pos += 1     # idle step waiting for an arrival
                 continue

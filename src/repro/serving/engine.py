@@ -135,10 +135,15 @@ class Engine:
 
     def kv_bytes(self) -> int:
         """HBM footprint of the block pools (the budget the scheduler
-        manages, reported by serve.py and the benchmark)."""
+        manages, reported by serve.py and the benchmark).  Computed from
+        abstract shapes — nothing is allocated, so calling this right
+        before ``run()`` does not transiently double the cache's HBM."""
+        import math
+
         import jax
-        return sum(x.size * x.dtype.itemsize
-                   for x in jax.tree.leaves(self._fresh_caches()))
+        shapes = jax.eval_shape(self._fresh_caches)
+        return sum(math.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(shapes))
 
     def dispatch_report(self):
         return self.prepared.dispatch_report()
@@ -167,7 +172,8 @@ class Engine:
         stats: List[RequestStats] = []
         prefill_chunks = decode_calls = 0
         ai = 0
-        it = 0
+        it = 0        # simulated clock (fast-forwards over idle gaps)
+        work = 0      # iterations that had work — what the guard counts
         t0 = time.perf_counter()
 
         def _retire(s: int):
@@ -184,7 +190,11 @@ class Engine:
 
         with self.prepared.activate():
             while len(stats) < n:
-                if it >= max_iters:
+                # guard on WORK iterations, not the simulated clock:
+                # idle fast-forwarding jumps `it` to absolute arrival
+                # timestamps, which a sparse trace can push past any
+                # token-derived ceiling without a single wasted step
+                if work >= max_iters:
                     raise RuntimeError(
                         f"engine made no progress after {max_iters} "
                         f"iterations ({len(stats)}/{n} done)")
@@ -215,8 +225,8 @@ class Engine:
                         logits, caches = paged_prefill_chunk(
                             params, caches, tok, jnp.int32(st.prefill_off),
                             jnp.asarray(sched.table[s:s + 1]),
-                            jnp.int32(c), self.cfg, spec.block_len,
-                            spec.kv_qdtype)
+                            jnp.int32(c), jnp.int32(s), self.cfg,
+                            spec.block_len, spec.kv_qdtype)
                         prefill_chunks += 1
                         st.prefill_off += c
                         if st.prefill_off == len(st.req.prompt):
@@ -263,6 +273,7 @@ class Engine:
                         if len(st.out) >= st.req.max_new_tokens:
                             _retire(s)
                 it += 1
+                work += 1
 
         return ServingReport(
             stats=sorted(stats, key=lambda s_: s_.rid),
