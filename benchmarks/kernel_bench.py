@@ -234,6 +234,154 @@ def run_quantized_registry(shape=(128, 512, 256), qdtype="int8") -> List[dict]:
     return rows
 
 
+# decode-shape epilogue problem: small row count, wide projection — the
+# regime where the extra HBM round trips of an unfused epilogue are the
+# dominant cost the fused flush removes
+EPILOGUE_SHAPE = (16, 512, 512)
+
+
+def run_epilogue(shape=EPILOGUE_SHAPE, qdtype=None) -> List[dict]:
+    """Fused-vs-unfused epilogue sweep through the engine's default
+    resolution (``--epilogue``).
+
+    Per sparsity x lattice point: wall-clock of ONE ``sparse_matmul``
+    (or ``gate_up_matmul``) call carrying the epilogue vs the unfused
+    chain (GEMM call, then the jnp epilogue, then — for the requant
+    points — the consumer's static-scale row quantize).  On CPU both
+    sides resolve to the jnp reference (the engine applies the epilogue
+    unfused there), so the rows gate dispatch stability; on TPU the
+    fused side runs the kernel flush and the spread is the measured
+    benefit.  The ``dispatch`` field always reports what a kernel
+    backend would fuse.
+    """
+    from repro.core import quantize as q
+    from repro.kernels import epilogue as epilib
+
+    b, k, o = shape
+    kb = _kernel_backend()
+    tag = qdtype or "fp32"
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, o), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(2), (k, o), jnp.float32)
+    bias = jax.random.normal(jax.random.PRNGKey(3), (o,), jnp.float32)
+    rows = []
+    for sp_n in (4, 2):
+        mode = "dense" if sp_n == 4 else "compressed"
+        cfg = SparsityConfig(n=sp_n, m=4, mode=mode)
+        p = _prep(w, sp_n, qdtype)
+        p2 = _prep(w2, sp_n, qdtype)
+
+        def _probe(point, dual=False):
+            d = kdispatch.plan(
+                mode, b=b, ke=k, o=o, n=sp_n, m=4,
+                dtype=_qdtype(qdtype) if qdtype else x.dtype,
+                dispatch=kdispatch.DispatchConfig(backend=kb),
+                epilogue=point, dual=dual)
+            return (f"{d.kernel}[fused]" if d.epilogue_fused
+                    else "jnp-only")
+
+        points = [epilib.make(act="gelu", bias=bias)]
+        if qdtype:
+            points.append(epilib.make(act="gelu", requant=qdtype,
+                                      requant_scale=jnp.float32(0.05)))
+        for epi in points:
+            fused = jax.jit(lambda x, p, cfg=cfg, epi=epi:
+                            kdispatch.sparse_matmul(x, p, cfg,
+                                                    epilogue=epi))
+
+            def _unfused(x, p, cfg=cfg, epi=epi):
+                y = epilib.apply_reference(
+                    kdispatch.sparse_matmul(x, p, cfg),
+                    epilib.make(act=epi.spec.act, bias=epi.bias))
+                if epi.spec.requant:   # the consumer's own quantize pass
+                    y, _ = q.quantize_rows_static(
+                        y, epi.requant_scale, epi.spec.requant)
+                return y
+
+            t_f = _time(fused, x, p)
+            t_u = _time(jax.jit(_unfused), x, p)
+            rows.append({
+                "name": f"{tag}/{sp_n}:4/{epi.spec.point}",
+                "us_unfused": t_u, "us_fused": t_f,
+                "speedup": t_u / t_f,
+                "dispatch": _probe(epi.spec.point),
+            })
+
+        # the gate-up dual: one activation read vs two GEMM calls
+        gf = jax.jit(lambda x, a, u, cfg=cfg:
+                     kdispatch.gate_up_matmul(x, a, u, cfg))
+        gu = jax.jit(lambda x, a, u, cfg=cfg: (
+            jax.nn.silu(kdispatch.sparse_matmul(x, a, cfg))
+            * kdispatch.sparse_matmul(x, u, cfg)))
+        t_f = _time(gf, x, p, p2)
+        t_u = _time(gu, x, p, p2)
+        rows.append({
+            "name": f"{tag}/{sp_n}:4/silu_mul",
+            "us_unfused": t_u, "us_fused": t_f,
+            "speedup": t_u / t_f,
+            "dispatch": _probe("silu_mul", dual=True),
+        })
+    return rows
+
+
+def run_epilogue_exec(shape=(32, 256, 128), qdtype=None) -> List[dict]:
+    """Execute the fused epilogue THROUGH the registry kernels — the
+    acceptance check for the lattice (raises if the plan declines to
+    fuse): single-GEMM ``bias+gelu`` and the dual ``silu_mul``, each
+    against the unfused jnp formulation."""
+    from repro.kernels import epilogue as epilib
+
+    b, k, o = shape
+    kb = _kernel_backend()
+    dcfg = kdispatch.DispatchConfig(backend=kb)
+    tag = qdtype or "fp32"
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, o), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(2), (k, o), jnp.float32)
+    bias = jax.random.normal(jax.random.PRNGKey(3), (o,), jnp.float32)
+    rows = []
+    for sp_n in (4, 2):
+        mode = "dense" if sp_n == 4 else "compressed"
+        cfg = SparsityConfig(n=sp_n, m=4, mode=mode)
+        p = _prep(w, sp_n, qdtype)
+        p2 = _prep(w2, sp_n, qdtype)
+        dt = _qdtype(qdtype) if qdtype else x.dtype
+        epi = epilib.make(act="gelu", bias=bias)
+        d = kdispatch.plan(mode, b=b, ke=k, o=o, n=sp_n, m=4, dtype=dt,
+                           dispatch=dcfg, epilogue=epi.spec.point)
+        dd = kdispatch.plan(mode, b=b, ke=k, o=o, n=sp_n, m=4, dtype=dt,
+                            dispatch=dcfg, epilogue="silu_mul", dual=True)
+        if not (d.epilogue_fused and dd.epilogue_fused):
+            raise RuntimeError(
+                f"epilogue {tag} {sp_n}:4 did not fuse: "
+                f"{kdispatch.describe(d)} / {kdispatch.describe(dd)}")
+        y_f = kdispatch.sparse_matmul(x, p, cfg, dispatch=dcfg,
+                                      epilogue=epi)
+        y_r = epilib.apply_reference(
+            kdispatch.sparse_matmul(
+                x, p, cfg,
+                dispatch=kdispatch.DispatchConfig(backend="jnp")), epi)
+        g_f = kdispatch.gate_up_matmul(x, p, p2, cfg, dispatch=dcfg)
+        jcfg = kdispatch.DispatchConfig(backend="jnp")
+        g_r = (jax.nn.silu(kdispatch.sparse_matmul(x, p, cfg,
+                                                   dispatch=jcfg))
+               * kdispatch.sparse_matmul(x, p2, cfg, dispatch=jcfg))
+
+        def _rel(a, b):
+            return float(jnp.max(jnp.abs(a - b))
+                         / (jnp.max(jnp.abs(b)) + 1e-6))
+
+        rows.append({
+            "name": f"{tag}/{sp_n}:4",
+            "dispatch": f"{d.kernel}[{kb}]+{dd.kernel}[dual]",
+            "rel_err_vs_unfused_ref": _rel(y_f, y_r),
+            "rel_err_dual_vs_unfused_ref": _rel(g_f, g_r),
+        })
+    return rows
+
+
 def run_mesh(mesh_shape, workloads=("BERT-L1", "GPT-L1")) -> List[dict]:
     """Sharded engine sweep: per-workload timings of the jnp reference vs
     the shard_map kernel path under a (data, model) mesh, for both TP
@@ -353,6 +501,34 @@ def run_mesh_quantized(mesh_shape, shape=(128, 512, 256),
     return rows
 
 
+def _print_epilogue(args) -> None:
+    """Emit the fused-epilogue rows (timing sweep + registry execution
+    check) for every dtype the run covers, with one SKIP marker per
+    gated prefix when fp8 kernels are unavailable."""
+    for tag in (None, "int8", "fp8"):
+        if args.dtype not in ("all", tag or "fp32"):
+            continue
+        if tag == "fp8" and not _fp8_kernels_available():
+            print("kernel_epilogue-fp8,SKIP,"
+                  "no native fp8 dot on this backend")
+            print("kernel_epilogue-exec/fp8,SKIP,"
+                  "no native fp8 dot on this backend")
+            continue
+        for r in run_epilogue(qdtype=tag):
+            print(f"kernel_epilogue-{r['name']},"
+                  f"us_unfused={r['us_unfused']:.0f},"
+                  f"us_fused={r['us_fused']:.0f},"
+                  f"speedup={r['speedup']:.2f}x,"
+                  f"dispatch={r['dispatch']}")
+        for r in run_epilogue_exec(qdtype=tag):
+            print(f"kernel_epilogue-exec/{r['name']},"
+                  f"dispatch={r['dispatch']},"
+                  f"rel_err_vs_unfused_ref="
+                  f"{r['rel_err_vs_unfused_ref']:.4f},"
+                  f"rel_err_dual_vs_unfused_ref="
+                  f"{r['rel_err_dual_vs_unfused_ref']:.4f}")
+
+
 def main(argv: Optional[List[str]] = None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mesh", default=None, metavar="DxM",
@@ -365,8 +541,16 @@ def main(argv: Optional[List[str]] = None):
                     help="which sweeps to run: the float kernel "
                          "contracts, a quantized path (int8 | fp8, incl. "
                          "a registry execution check), or everything")
+    ap.add_argument("--epilogue", action="store_true",
+                    help="run only the fused-epilogue sweep: one GEMM "
+                         "call carrying the epilogue vs the unfused "
+                         "chain, plus the registry execution check "
+                         "(the full run includes it too)")
     args = ap.parse_args([] if argv is None else argv)
     print(f"kernel_backend,{detect_backend()}")
+    if args.epilogue:
+        _print_epilogue(args)
+        return None
     if args.dtype in ("all", "fp32"):
         for r in run():
             print(f"kernel_{r['name']},us_dense={r['us_dense']:.0f},"
@@ -405,6 +589,7 @@ def main(argv: Optional[List[str]] = None):
             print(f"kernel_{r['name']},dispatch={r['dispatch']},"
                   f"rel_err_vs_dequant_ref="
                   f"{r['rel_err_vs_dequant_ref']:.4f}")
+    _print_epilogue(args)
     if args.mesh:
         d_, m_ = map(int, args.mesh.lower().split("x"))
         if len(jax.devices()) < d_ * m_:

@@ -190,6 +190,7 @@ def rowwise_params(rc: RowwiseCompressed) -> Dict:
 
 def rowwise_apply(
     params: Dict, x: jax.Array, cfg, *, shard=None, dispatch=None,
+    epilogue=None,
 ) -> jax.Array:
     """y = x @ W for the rowwise serving layout, one engine dispatch per
     tier (``mode="rowwise"`` in ``SparseLinear.apply_linear``).
@@ -200,6 +201,10 @@ def rowwise_apply(
     global across tiers, so an out-dim sharding cannot be pushed into the
     per-tier calls — a shard spec keeps its batch/contraction slicing and
     drops ``o`` (ke-sharded tiers still psum per segment).
+
+    An ``epilogue`` is likewise global across tiers (its bias vector is
+    indexed by ORIGINAL channel, which only exists after the cross-tier
+    un-permutation), so it always applies unfused, after the ``take``.
     """
     import dataclasses as _dc
 
@@ -222,7 +227,11 @@ def rowwise_apply(
         outs.append(sparse_matmul(xin, segs[key], scfg, shard=shard,
                                   dispatch=dispatch))
     y_perm = jnp.concatenate(outs, axis=-1)
-    return jnp.take(y_perm, params["inv_perm"], axis=-1)
+    y = jnp.take(y_perm, params["inv_perm"], axis=-1)
+    if epilogue is not None:
+        from repro.kernels.epilogue import apply_reference
+        y = apply_reference(y, epilogue)
+    return y
 
 
 def rowwise_storage_bytes(rc: RowwiseCompressed) -> int:

@@ -33,6 +33,7 @@ __all__ = [
     "SparsityConfig",
     "init_linear",
     "apply_linear",
+    "apply_gate_up",
     "convert_layout",
     "convert_to_serving",
     "COLUMN_PARALLEL",
@@ -141,8 +142,15 @@ def init_linear(
 def apply_linear(
     params: Dict[str, Any], x: jax.Array, cfg: SparsityConfig,
     gather: Optional[str] = None,
+    epilogue=None,
 ) -> jax.Array:
     """y = x @ W with the mode's lowering. x: (..., K) -> (..., O).
+
+    ``epilogue`` (a ``repro.kernels.epilogue.Epilogue``) is the post-GEMM
+    lattice point (bias -> activation -> requantize) the engine fuses
+    into the kernel's flush when the plan allows, and applies with the
+    unfused jnp reference otherwise.  Rowwise layouts always apply it
+    unfused, after the cross-tier channel un-permutation.
 
     All modes route through the kernel dispatch engine
     (``repro.kernels.dispatch.sparse_matmul``): on TPU (or with the
@@ -169,7 +177,8 @@ def apply_linear(
 
     if cfg.mode == "rowwise":
         from .rowwise import rowwise_apply
-        return rowwise_apply(params, x, cfg, shard=shard)
+        return rowwise_apply(params, x, cfg, shard=shard,
+                             epilogue=epilogue)
 
     def _g(w):
         if not cfg.fsdp_gather:
@@ -180,7 +189,50 @@ def apply_linear(
             return constrain(w, "model", None)
         return w
 
-    return sparse_matmul(x, params, cfg, constrain_fn=_g, shard=shard)
+    return sparse_matmul(x, params, cfg, constrain_fn=_g, shard=shard,
+                         epilogue=epilogue)
+
+
+def apply_gate_up(
+    params_g: Dict[str, Any], params_u: Dict[str, Any], x: jax.Array,
+    cfg: SparsityConfig, gather: Optional[str] = None,
+    requant: Optional[str] = None, requant_scale=None,
+) -> jax.Array:
+    """``silu(x @ Wg) * (x @ Wu)`` — the gate-up projection as ONE
+    engine dispatch (``repro.kernels.dispatch.gate_up_matmul``).
+
+    When the pair is fusible the engine contracts each activation tile
+    against BOTH weights in one pallas_call (the ``silu_mul`` epilogue
+    point, optionally extended with a fused requantize for the next
+    quantized linear); otherwise dense/compressed pairs still collapse
+    into one concatenated GEMM so the activation is read once, and only
+    rowwise layouts (whose tier segmentation is per-site) fall back to
+    two ``apply_linear`` calls.
+    """
+    from repro.kernels.dispatch import (                # local: avoid cycle
+        gate_up_matmul, shard_spec_from_env)
+    from repro.models.pjit_utils import constrain       # local: avoid cycle
+
+    if cfg.mode == "rowwise" or "rowwise" in params_g or "rowwise" in params_u:
+        y_g = apply_linear(params_g, x, cfg, gather=gather)
+        y_u = apply_linear(params_u, x, cfg, gather=gather)
+        h = jax.nn.silu(y_g.astype(jnp.float32)) * y_u.astype(jnp.float32)
+        return h.astype(y_g.dtype)
+
+    shard = shard_spec_from_env(gather) if gather is not None else None
+
+    def _g(w):
+        if not cfg.fsdp_gather:
+            return w
+        if gather == "col":
+            return constrain(w, None, "model")
+        if gather == "row":
+            return constrain(w, "model", None)
+        return w
+
+    return gate_up_matmul(x, params_g, params_u, cfg, constrain_fn=_g,
+                          shard=shard, requant=requant,
+                          requant_scale=requant_scale)
 
 
 def convert_layout(

@@ -51,12 +51,17 @@ _MEM: Dict[str, Optional[Dict[str, list]]] = {}
 _STATS = {"hits": 0, "misses": 0}
 
 
-def cache_key(kernel: str, b: int, ke: int, o: int, n: int, m: int, dtype) -> str:
+def cache_key(kernel: str, b: int, ke: int, o: int, n: int, m: int, dtype,
+              epilogue: Optional[str] = None) -> str:
     """Deterministic per-problem key; dtype is a first-class axis (an int8
-    problem and its fp32 twin must never share tuned blocks)."""
+    problem and its fp32 twin must never share tuned blocks).  A fused
+    epilogue lattice point (``"bias+silu"``, ``"silu_mul+requant:int8"``,
+    ...) is likewise a key axis: the flush cost changes the optimal
+    blocks, so fused and bare plans never share tuned entries."""
     from repro.kernels.registry import dtype_name
 
-    return f"{kernel}/b{b}_ke{ke}_o{o}_n{n}m{m}_{dtype_name(dtype)}"
+    tail = f"_epi[{epilogue}]" if epilogue else ""
+    return f"{kernel}/b{b}_ke{ke}_o{o}_n{n}m{m}_{dtype_name(dtype)}{tail}"
 
 
 def device_kind() -> str:

@@ -74,6 +74,8 @@ from repro.core import nm
 from repro.core import quantize as quant
 from repro.core.ste import srste_prune
 from repro.kernels import autotune, registry
+from repro.kernels import epilogue as epilib
+from repro.kernels.epilogue import Epilogue, EpilogueSpec
 from repro.kernels.registry import (KernelEntry, dtype_name,
                                     largest_fitting_block)
 
@@ -83,6 +85,8 @@ __all__ = [
     "ShardSpec",
     "shard_spec_from_env",
     "sparse_matmul",
+    "gate_up_matmul",
+    "requant_plan",
     "attention",
     "plan",
     "describe",
@@ -218,6 +222,8 @@ class DispatchDecision:
     collective: Optional[str] = None                   # psum | none
     act_scales: Optional[str] = None   # quantized entries: dynamic | static
     dtype: Optional[str] = None    # canonical execution dtype the plan ran on
+    epilogue: Optional[str] = None     # requested lattice point (EpilogueSpec.point)
+    epilogue_fused: bool = False       # True: kernel flush applies it in VMEM
 
     @property
     def uses_kernel(self) -> bool:
@@ -230,12 +236,18 @@ class DispatchDecision:
 
 def describe(d: DispatchDecision) -> str:
     if not d.uses_kernel:
-        return f"{d.mode}: {JNP_REFERENCE} ({d.reason})"
+        base = f"{d.mode}: {JNP_REFERENCE} ({d.reason})"
+        if d.epilogue is not None:
+            base += f" epilogue={d.epilogue}[jnp]"
+        return base
     bb, bke, bo = d.blocks
     base = (f"{d.mode}: {d.kernel}[{d.backend}] "
             f"blocks=(b={bb},ke={bke},o={bo})")
     if d.dtype is not None:
         base += f" dtype={d.dtype}"
+    if d.epilogue is not None:
+        base += f" epilogue={d.epilogue}" + (
+            "[fused]" if d.epilogue_fused else "[jnp]")
     if d.uses_shard_map:
         lb, lke, lo = d.local_dims
         sb, ske, so = d.shards
@@ -337,13 +349,26 @@ def _fit_tile_gemm(b, ke, o, n, m, dtype):
     return (bb, bke, bo)
 
 
-def _run_tile_gemm(x2, params, cfg, g, blocks, interpret, out_dtype):
+def _epi_kwargs(epilogue: Optional[Epilogue]) -> Dict[str, Any]:
+    """Kernel kwargs for a fused epilogue lattice point (empty = bare
+    flush).  Only reaches the kernel when the plan said
+    ``epilogue_fused`` — fallback paths apply ``epilib.apply_reference``
+    on the result instead."""
+    if epilogue is None or epilogue.spec.is_identity:
+        return {}
+    return {"epilogue": epilogue.spec, "bias": epilogue.bias,
+            "requant_scale": epilogue.requant_scale}
+
+
+def _run_tile_gemm(x2, params, cfg, g, blocks, interpret, out_dtype,
+                   epilogue=None):
     from repro.kernels.tile_gemm.kernel import tile_gemm
 
     bb, bke, bo = blocks
     w = g(params["w"]).astype(x2.dtype)
     return tile_gemm(x2, w, block_b=bb, block_k=bke, block_o=bo,
-                     out_dtype=out_dtype, interpret=interpret)
+                     out_dtype=out_dtype, interpret=interpret,
+                     **_epi_kwargs(epilogue))
 
 
 def _nm_ke_multiple(n: int) -> int:
@@ -363,14 +388,16 @@ def _fit_nm_spmm(b, ke, o, n, m, dtype):
     return (bb, bke, bo)
 
 
-def _run_nm_spmm(x2, params, cfg, g, blocks, interpret, out_dtype):
+def _run_nm_spmm(x2, params, cfg, g, blocks, interpret, out_dtype,
+                 epilogue=None):
     from repro.kernels.nm_spmm.kernel import nm_spmm
 
     bb, bke, bo = blocks
     v = g(params["values"]).astype(x2.dtype)
     return nm_spmm(x2, v, params["meta_packed"], cfg.n,
                    block_b=bb, block_o=bo, block_ke=bke,
-                   out_dtype=out_dtype, interpret=interpret)
+                   out_dtype=out_dtype, interpret=interpret,
+                   **_epi_kwargs(epilogue))
 
 
 def _fit_nm_gather(b, ke, o, n, m, dtype):
@@ -385,32 +412,95 @@ def _fit_nm_gather(b, ke, o, n, m, dtype):
     return (bb, bke, bo)
 
 
-def _run_nm_gather(x2, params, cfg, g, blocks, interpret, out_dtype):
-    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather
+def _run_nm_gather(x2, params, cfg, g, blocks, interpret, out_dtype,
+                   epilogue=None):
+    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_bk
 
     bb, bke, bo = blocks
     v = g(params["values"]).astype(x2.dtype)
     idx = params["gather_idx"].reshape(-1, 1)
-    y_t = nm_spmm_gather(x2.T, v, idx, cfg.n,
-                         block_b=bb, block_o=bo, block_ke=bke,
-                         out_dtype=out_dtype, interpret=interpret)
-    return y_t.T
+    # bk layout: natural (B, K_eff) in / (B, O) out — the row gather and
+    # both transposes live in the kernel's index map, so no permuted
+    # activation copy is ever materialized in HBM
+    return nm_spmm_gather_bk(x2, v, idx, cfg.n,
+                             block_b=bb, block_o=bo, block_ke=bke,
+                             out_dtype=out_dtype, interpret=interpret,
+                             **_epi_kwargs(epilogue))
+
+
+# --- fused gate-up (dual) adapters: ONE pallas_call reads the
+# activation tile once, contracts it against BOTH same-shaped weights,
+# and emits silu(g) * u (the "silu_mul" epilogue point) directly.
+# Registered as ``run_dual`` on the same entries; plans with
+# ``dual=True`` only fuse when the selected entry carries one.
+
+def _dual_epi_kwargs(epilogue: Optional[Epilogue]) -> Dict[str, Any]:
+    # the dual kernels default to the bare silu_mul point; only a
+    # requant extension needs operands (bias is unsupported on duals)
+    if epilogue is None:
+        return {}
+    return {"epilogue": epilogue.spec,
+            "requant_scale": epilogue.requant_scale}
+
+
+def _run_tile_gemm_dual(x2, pg, pu, cfg, g, blocks, interpret, out_dtype,
+                        epilogue=None):
+    from repro.kernels.tile_gemm.kernel import tile_gemm_dual
+
+    bb, bke, bo = blocks
+    return tile_gemm_dual(x2, g(pg["w"]).astype(x2.dtype),
+                          g(pu["w"]).astype(x2.dtype),
+                          block_b=bb, block_k=bke, block_o=bo,
+                          out_dtype=out_dtype, interpret=interpret,
+                          **_dual_epi_kwargs(epilogue))
+
+
+def _run_nm_spmm_dual(x2, pg, pu, cfg, g, blocks, interpret, out_dtype,
+                      epilogue=None):
+    from repro.kernels.nm_spmm.kernel import nm_spmm_dual
+
+    bb, bke, bo = blocks
+    return nm_spmm_dual(x2, g(pg["values"]).astype(x2.dtype),
+                        pg["meta_packed"],
+                        g(pu["values"]).astype(x2.dtype),
+                        pu["meta_packed"], cfg.n,
+                        block_b=bb, block_o=bo, block_ke=bke,
+                        out_dtype=out_dtype, interpret=interpret,
+                        **_dual_epi_kwargs(epilogue))
+
+
+def _run_nm_gather_dual(x2, pg, pu, cfg, g, blocks, interpret, out_dtype,
+                        epilogue=None):
+    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_dual_bk
+
+    bb, bke, bo = blocks
+    return nm_spmm_gather_dual_bk(
+        x2, g(pg["values"]).astype(x2.dtype),
+        pg["gather_idx"].reshape(-1, 1),
+        g(pu["values"]).astype(x2.dtype),
+        pu["gather_idx"].reshape(-1, 1), cfg.n,
+        block_b=bb, block_o=bo, block_ke=bke,
+        out_dtype=out_dtype, interpret=interpret,
+        **_dual_epi_kwargs(epilogue))
 
 
 registry.register(KernelEntry(
     name="tile_gemm", mode="dense",
     fit_blocks=_fit_tile_gemm, run=_run_tile_gemm,
+    run_dual=_run_tile_gemm_dual,
     candidates=lambda b, ke, o, n, m, dtype: _enumerate(b, ke, o, 1),
 ))
 registry.register(KernelEntry(
     name="nm_spmm", mode="compressed",
     fit_blocks=_fit_nm_spmm, run=_run_nm_spmm,
+    run_dual=_run_nm_spmm_dual,
     candidates=lambda b, ke, o, n, m, dtype: _enumerate(
         b, ke, o, _nm_ke_multiple(n)),
 ))
 registry.register(KernelEntry(
     name="nm_spmm_gather", mode="gather",
     fit_blocks=_fit_nm_gather, run=_run_nm_gather,
+    run_dual=_run_nm_gather_dual,
     candidates=lambda b, ke, o, n, m, dtype: _enumerate(b, ke, o, 4),
 ))
 
@@ -448,7 +538,22 @@ def _quantize_acts(x2, params, dtype):
     """Narrow activations + (B, 1) scales: static (calibrated) when the
     leaf carries an ``act_scale``, else the dynamic per-row absmax pass.
     ``dtype`` is the layout's storage dtype (int8 | fp8) — activations
-    quantize to the same class the weights live in."""
+    quantize to the same class the weights live in.
+
+    Activations that arrive ALREADY narrow were requantized by the
+    producing kernel's fused epilogue against THIS leaf's calibrated
+    static scale — reuse them as-is and rebuild the (B, 1) row scales
+    from that scalar (the whole point of the fused requant: the
+    quantize pass here disappears)."""
+    if jnp.dtype(x2.dtype) == jnp.dtype(dtype):
+        if quant.ACT_SCALE_KEY not in params:
+            raise ValueError(
+                "pre-quantized activations need a calibrated act_scale "
+                "on the consuming leaf (the fused requant quantized "
+                "against it)")
+        s = jnp.asarray(params[quant.ACT_SCALE_KEY],
+                        jnp.float32).reshape(())
+        return x2, jnp.full((x2.shape[0], 1), s, jnp.float32)
     if quant.ACT_SCALE_KEY in params:
         return quant.quantize_rows_static(x2, params[quant.ACT_SCALE_KEY],
                                           dtype)
@@ -539,7 +644,8 @@ def _gather_q_kernel(dtype):
     return nm_spmm_gather_fp8 if _is_fp8(dtype) else nm_spmm_gather_int8
 
 
-def _run_tile_gemm_q(x2, params, cfg, g, blocks, interpret, out_dtype):
+def _run_tile_gemm_q(x2, params, cfg, g, blocks, interpret, out_dtype,
+                     epilogue=None):
     bb, bke, bo = blocks
     b = x2.shape[0]
     qdt = params["w"].dtype
@@ -547,7 +653,8 @@ def _run_tile_gemm_q(x2, params, cfg, g, blocks, interpret, out_dtype):
     ws = params[quant.SCALE_KEY].reshape(1, -1)
     y = _dense_q_kernel(qdt)(xq, g(params["w"]), xs, ws,
                              block_b=bb, block_k=bke, block_o=bo,
-                             out_dtype=out_dtype, interpret=interpret)
+                             out_dtype=out_dtype, interpret=interpret,
+                             **_epi_kwargs(epilogue))
     return y[:b]
 
 
@@ -558,7 +665,8 @@ def _partial_tile_gemm_q(xq, params, cfg, blocks, interpret):
         interpret=interpret)
 
 
-def _run_nm_spmm_q(x2, params, cfg, g, blocks, interpret, out_dtype):
+def _run_nm_spmm_q(x2, params, cfg, g, blocks, interpret, out_dtype,
+                   epilogue=None):
     bb, bke, bo = blocks
     b = x2.shape[0]
     qdt = params["values"].dtype
@@ -567,7 +675,8 @@ def _run_nm_spmm_q(x2, params, cfg, g, blocks, interpret, out_dtype):
     y = _nm_q_kernel(qdt)(xq, g(params["values"]), params["meta_packed"],
                           xs, ws, cfg.n,
                           block_b=bb, block_o=bo, block_ke=bke,
-                          out_dtype=out_dtype, interpret=interpret)
+                          out_dtype=out_dtype, interpret=interpret,
+                          **_epi_kwargs(epilogue))
     return y[:b]
 
 
@@ -578,17 +687,24 @@ def _partial_nm_spmm_q(xq, params, cfg, blocks, interpret):
         block_b=bb, block_o=bo, block_ke=bke, interpret=interpret)
 
 
-def _run_nm_gather_q(x2, params, cfg, g, blocks, interpret, out_dtype):
+def _run_nm_gather_q(x2, params, cfg, g, blocks, interpret, out_dtype,
+                     epilogue=None):
+    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_bk
+
     bb, bke, bo = blocks
     b = x2.shape[0]
     qdt = params["values"].dtype
     xq, xs = _pad_rows(*_quantize_acts(x2, params, qdt), _q_padded_b(b))
-    ws = params[quant.SCALE_KEY].reshape(-1, 1)
+    ws = params[quant.SCALE_KEY].reshape(1, -1)
     idx = params["gather_idx"].reshape(-1, 1)
-    y_t = _gather_q_kernel(qdt)(xq.T, g(params["values"]), idx, xs.T, ws,
-                                cfg.n, block_b=bb, block_o=bo, block_ke=bke,
-                                out_dtype=out_dtype, interpret=interpret)
-    return y_t.T[:b]
+    # bk layout (see _run_nm_gather): no xq.T / y_t.T HBM round trips
+    y = nm_spmm_gather_bk(xq, g(params["values"]), idx, cfg.n, xs, ws,
+                          acc_dtype=jnp.int32 if _is_int8(qdt)
+                          else jnp.float32,
+                          block_b=bb, block_o=bo, block_ke=bke,
+                          out_dtype=out_dtype, interpret=interpret,
+                          **_epi_kwargs(epilogue))
+    return y[:b]
 
 
 def _partial_nm_gather_q(xq, params, cfg, blocks, interpret):
@@ -600,6 +716,72 @@ def _partial_nm_gather_q(xq, params, cfg, blocks, interpret):
     return y_t.T
 
 
+# --- fused gate-up (dual) quantized adapters (see the float duals
+# above the float registrations): one x read, one quantize pass.
+
+def _dual_q_acc(qdt):
+    return jnp.int32 if _is_int8(qdt) else jnp.float32
+
+
+def _run_tile_gemm_dual_q(x2, pg, pu, cfg, g, blocks, interpret, out_dtype,
+                          epilogue=None):
+    from repro.kernels.tile_gemm.kernel import tile_gemm_dual
+
+    bb, bke, bo = blocks
+    b = x2.shape[0]
+    qdt = pg["w"].dtype
+    # one x read, one quantize pass: the gate leaf's scale quantizes the
+    # shared activations (both sites calibrated on the same tensor)
+    xq, xs = _pad_rows(*_quantize_acts(x2, pg, qdt), _q_padded_b(b))
+    y = tile_gemm_dual(xq, g(pg["w"]), g(pu["w"]), xs,
+                       pg[quant.SCALE_KEY].reshape(1, -1),
+                       pu[quant.SCALE_KEY].reshape(1, -1),
+                       acc_dtype=_dual_q_acc(qdt),
+                       block_b=bb, block_k=bke, block_o=bo,
+                       out_dtype=out_dtype, interpret=interpret,
+                       **_dual_epi_kwargs(epilogue))
+    return y[:b]
+
+
+def _run_nm_spmm_dual_q(x2, pg, pu, cfg, g, blocks, interpret, out_dtype,
+                        epilogue=None):
+    from repro.kernels.nm_spmm.kernel import nm_spmm_dual
+
+    bb, bke, bo = blocks
+    b = x2.shape[0]
+    qdt = pg["values"].dtype
+    xq, xs = _pad_rows(*_quantize_acts(x2, pg, qdt), _q_padded_b(b))
+    y = nm_spmm_dual(xq, g(pg["values"]), pg["meta_packed"],
+                     g(pu["values"]), pu["meta_packed"], cfg.n, xs,
+                     pg[quant.SCALE_KEY].reshape(1, -1),
+                     pu[quant.SCALE_KEY].reshape(1, -1),
+                     acc_dtype=_dual_q_acc(qdt),
+                     block_b=bb, block_o=bo, block_ke=bke,
+                     out_dtype=out_dtype, interpret=interpret,
+                     **_dual_epi_kwargs(epilogue))
+    return y[:b]
+
+
+def _run_nm_gather_dual_q(x2, pg, pu, cfg, g, blocks, interpret, out_dtype,
+                          epilogue=None):
+    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_dual_bk
+
+    bb, bke, bo = blocks
+    b = x2.shape[0]
+    qdt = pg["values"].dtype
+    xq, xs = _pad_rows(*_quantize_acts(x2, pg, qdt), _q_padded_b(b))
+    y = nm_spmm_gather_dual_bk(
+        xq, g(pg["values"]), pg["gather_idx"].reshape(-1, 1),
+        g(pu["values"]), pu["gather_idx"].reshape(-1, 1), cfg.n, xs,
+        pg[quant.SCALE_KEY].reshape(1, -1),
+        pu[quant.SCALE_KEY].reshape(1, -1),
+        acc_dtype=_dual_q_acc(qdt),
+        block_b=bb, block_o=bo, block_ke=bke,
+        out_dtype=out_dtype, interpret=interpret,
+        **_dual_epi_kwargs(epilogue))
+    return y[:b]
+
+
 def _q_candidates(b, ke, o, ke_multiple):
     cands = _enumerate(_q_padded_b(b), ke, o, ke_multiple)
     return [c for c in cands if c[0] % _Q_SUBLANE == 0] or cands
@@ -608,6 +790,7 @@ def _q_candidates(b, ke, o, ke_multiple):
 registry.register(KernelEntry(
     name="tile_gemm_int8", mode="dense", priority=10,
     fit_blocks=_fit_tile_gemm_int8, run=_run_tile_gemm_q,
+    run_dual=_run_tile_gemm_dual_q,
     quantized=True, run_quantized=_partial_tile_gemm_q,
     candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
         b, ke, o, _Q_SUBLANE),
@@ -615,6 +798,7 @@ registry.register(KernelEntry(
 registry.register(KernelEntry(
     name="nm_spmm_int8", mode="compressed", priority=10,
     fit_blocks=_fit_nm_spmm_int8, run=_run_nm_spmm_q,
+    run_dual=_run_nm_spmm_dual_q,
     quantized=True, run_quantized=_partial_nm_spmm_q,
     candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
         b, ke, o, _q_ke_multiple(n)),
@@ -622,6 +806,7 @@ registry.register(KernelEntry(
 registry.register(KernelEntry(
     name="nm_spmm_gather_int8", mode="gather", priority=10,
     fit_blocks=_fit_nm_gather_int8, run=_run_nm_gather_q,
+    run_dual=_run_nm_gather_dual_q,
     quantized=True, run_quantized=_partial_nm_gather_q,
     candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
         b, ke, o, _q_ke_multiple(n)),
@@ -629,6 +814,7 @@ registry.register(KernelEntry(
 registry.register(KernelEntry(
     name="tile_gemm_fp8", mode="dense", priority=10,
     fit_blocks=_fit_tile_gemm_fp8, run=_run_tile_gemm_q,
+    run_dual=_run_tile_gemm_dual_q,
     quantized=True, run_quantized=_partial_tile_gemm_q,
     supported=registry.supports_fp8,
     candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
@@ -637,6 +823,7 @@ registry.register(KernelEntry(
 registry.register(KernelEntry(
     name="nm_spmm_fp8", mode="compressed", priority=10,
     fit_blocks=_fit_nm_spmm_fp8, run=_run_nm_spmm_q,
+    run_dual=_run_nm_spmm_dual_q,
     quantized=True, run_quantized=_partial_nm_spmm_q,
     supported=registry.supports_fp8,
     candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
@@ -645,6 +832,7 @@ registry.register(KernelEntry(
 registry.register(KernelEntry(
     name="nm_spmm_gather_fp8", mode="gather", priority=10,
     fit_blocks=_fit_nm_gather_fp8, run=_run_nm_gather_q,
+    run_dual=_run_nm_gather_dual_q,
     quantized=True, run_quantized=_partial_nm_gather_q,
     supported=registry.supports_fp8,
     candidates=lambda b, ke, o, n, m, dtype: _q_candidates(
@@ -776,6 +964,8 @@ def plan(
     sharded: bool = False,
     shard: Optional[ShardSpec] = None,
     static_scales: bool = False,
+    epilogue: Optional[str] = None,
+    dual: bool = False,
 ) -> DispatchDecision:
     """Pure decision function: what would the engine run for this problem?
 
@@ -790,6 +980,17 @@ def plan(
     ``static_scales`` records
     whether the use-site carries calibrated activation scales (decode
     skips the per-row absmax pass); it only annotates the decision.
+
+    ``epilogue`` is the requested lattice point (``EpilogueSpec.point``,
+    e.g. ``"bias+silu"``); the decision carries it back with
+    ``epilogue_fused`` saying whether the kernel's flush applies it in
+    VMEM.  Fusion needs a single-placement kernel decision — shard_map
+    bodies psum BEFORE the epilogue may run, and the jnp tier applies
+    the reference formulation — so every other route reports
+    ``[jnp]`` and the caller applies ``apply_reference``.  ``dual``
+    marks a fused gate-up (two same-shaped weights, one activation
+    read); it additionally requires the selected entry to carry a
+    ``run_dual`` kernel.
     """
     dcfg = dispatch or _DEFAULT
     backend = registry.resolve_backend(dcfg.backend)
@@ -797,7 +998,7 @@ def plan(
 
     def _jnp(reason):
         return DispatchDecision(mode, "jnp", JNP_REFERENCE, None, reason,
-                                dtype=dt_name)
+                                dtype=dt_name, epilogue=epilogue)
 
     if mode == "masked":
         return _jnp("SR-STE training path needs its custom VJP")
@@ -837,20 +1038,25 @@ def plan(
     entry, blocks = sel
     acts = (("static" if static_scales else "dynamic")
             if entry.quantized else None)
+    fused = (epilogue is not None and placement == "single"
+             and (not dual or entry.run_dual is not None))
 
     def _decision(blocks, reason, source):
         return DispatchDecision(
             mode, backend, entry.name, blocks, reason, blocks_source=source,
             placement=placement, local_dims=local, shards=shards if shard else None,
-            collective=collective, act_scales=acts, dtype=dt_name)
+            collective=collective, act_scales=acts, dtype=dt_name,
+            epilogue=epilogue, epilogue_fused=fused)
 
     if dcfg.blocks is not None:
         return _decision(tuple(dcfg.blocks), "blocks pinned by config",
                          "pinned")
     # autotune cache keys are per-shard local problems under shard_map —
-    # that is the shape the kernel body actually runs
+    # that is the shape the kernel body actually runs; a FUSED epilogue
+    # changes the flush cost, so it suffixes the key
     kb, kke, ko = local if local is not None else (b, ke, o)
-    key = autotune.cache_key(entry.name, kb, kke, ko, n, m, dtype)
+    key = autotune.cache_key(entry.name, kb, kke, ko, n, m, dtype,
+                             epilogue=epilogue if fused else None)
     tuned = autotune.lookup(backend, key)
     if tuned is not None:
         return _decision(tuned, "autotuned blocks (cache)", "tuned")
@@ -1019,6 +1225,7 @@ def dispatch_report(params_tree, batches, cfg,
         batches = (batches,)
     dcfg = dispatch or _DEFAULT
     seen = {}
+    pairs = {}
     for batch in batches:
         for names, leaf in iter_linear_items(params_tree):
             lcfg = leaf_config(names, cfg)
@@ -1033,6 +1240,36 @@ def dispatch_report(params_tree, batches, cfg,
                          dtype=dt, dispatch=dcfg, shard=shard)
             o = leaf["w"].shape[-1] if "w" in leaf else leaf["values"].shape[-1]
             seen.setdefault((batch, d.mode, lcfg.n, ke, o, hint), d)
+            # sibling w_gate/w_in leaves form a gate-up pair — collect
+            # them to report the fused dual plan the models actually run
+            if names and names[-1] in ("w_gate", "w_in"):
+                pairs.setdefault((batch, tuple(names[:-1])),
+                                 {})[names[-1]] = (names, leaf)
+    dual_seen = {}
+    for (batch, _parent), found in pairs.items():
+        if "w_gate" not in found or "w_in" not in found:
+            continue
+        gnames, gleaf = found["w_gate"]
+        _, uleaf = found["w_in"]
+        lcfg = leaf_config(gnames, cfg)
+        try:
+            ke = input_features(gleaf, lcfg)
+        except ValueError:
+            continue
+        hint = gather_hint(gnames)
+        shard = leaf_shard_spec(gnames, cfg)
+        dt = gleaf.get("values", gleaf.get("w")).dtype
+        fake_x = jax.ShapeDtypeStruct((batch, ke), jnp.float32)
+        mode = _mode_of(gleaf, lcfg)
+        _, o = _problem_dims(mode, gleaf, fake_x)
+        if (_mode_of(uleaf, lcfg) != mode
+                or _problem_dims(mode, uleaf, fake_x) != (ke, o)):
+            continue
+        d = plan(mode, b=batch, ke=ke, o=o, n=lcfg.n, m=lcfg.m, dtype=dt,
+                 dispatch=dcfg, sharded=_mesh_active(), shard=shard,
+                 static_scales=quant.has_static_scales(gleaf),
+                 epilogue="silu_mul", dual=True)
+        dual_seen.setdefault((batch, d.mode, lcfg.n, ke, o, hint), d)
     lines = []
     for (batch, _, n, ke, o, hint), d in sorted(seen.items(), key=lambda kv: (
             kv[0][0], kv[0][1], kv[0][2], kv[0][3], kv[0][4],
@@ -1044,6 +1281,12 @@ def dispatch_report(params_tree, batches, cfg,
         lines.append(f"  [{hint or 'rep'}] {n}:{cfg.m} "
                      f"global (B={batch}, K={ke}, O={o})"
                      f"{loc} {describe(d)}")
+    for (batch, _, n, ke, o, hint), d in sorted(
+            dual_seen.items(), key=lambda kv: (
+                kv[0][0], kv[0][1], kv[0][2], kv[0][3], kv[0][4],
+                str(kv[0][5]))):
+        lines.append(f"  [gate-up {hint or 'rep'}] {n}:{cfg.m} "
+                     f"global (B={batch}, K={ke}, O={o}) {describe(d)}")
     st = kautotune.stats()
     lines.append(f"  autotune cache: {st['hits']} hit(s) / "
                  f"{st['misses']} miss(es)")
@@ -1150,6 +1393,7 @@ def sparse_matmul(
     constrain_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
     dispatch: Optional[DispatchConfig] = None,
     shard: Optional[ShardSpec] = None,
+    epilogue: Optional[Epilogue] = None,
 ) -> jax.Array:
     """y = x @ W for any SparseLinear layout, via the dispatch engine.
 
@@ -1160,6 +1404,18 @@ def sparse_matmul(
     the single-device kernel and reference paths (sharding-constraint
     preservation); under shard_map the in/out specs own the layout.
     ``shard`` routes the kernel through the mesh-aware shard_map class.
+
+    ``epilogue`` is a post-GEMM lattice point (dequantize -> bias ->
+    activation -> requantize; see ``repro.kernels.epilogue``).  On a
+    single-placement kernel decision it is applied IN the pallas_call,
+    on the fp32 accumulator tile in VMEM before the one HBM write-back;
+    every other route (jnp reference, shard_map, grad) computes the
+    same point unfused with ``apply_reference`` — which skips the
+    requantize, so a fallback never changes end-to-end numerics.
+
+    ``x`` may arrive already narrow (int8/fp8): that means an upstream
+    kernel's fused epilogue requantized it against THIS leaf's
+    calibrated ``act_scale``, and the quantize pass here is skipped.
     """
     dcfg = dispatch or _DEFAULT
     g = constrain_fn or (lambda w: w)
@@ -1173,9 +1429,24 @@ def sparse_matmul(
     # — else the activation dtype as before
     exec_dtype = quant.quant_dtype(params) or x2.dtype
 
+    if epilogue is not None and epilogue.spec.is_identity:
+        epilogue = None
+    if epilogue is not None and epilogue.spec.act == "silu_mul":
+        raise ValueError("silu_mul is the dual gate-up lattice point — "
+                         "route it through gate_up_matmul")
+
+    pre_q = quant.is_quantized_dtype(x2.dtype)
+    if pre_q and jnp.dtype(x2.dtype) != jnp.dtype(exec_dtype):
+        raise ValueError(
+            f"pre-quantized activations ({dtype_name(x2.dtype)}) do not "
+            f"match this leaf's storage dtype ({dtype_name(exec_dtype)})")
+
     # static-scale calibration: report this site's activation absmax
-    # through the engine hook (no-op outside a calibration context)
-    if quant.calibration_active() and quant._CALIB_KEY in params:
+    # through the engine hook (no-op outside a calibration context;
+    # narrow activations can't occur during calibration — the fused
+    # requant needs the static scales calibration is producing)
+    if (quant.calibration_active() and quant._CALIB_KEY in params
+            and not pre_q):
         quant.record_calibration(params[quant._CALIB_KEY], x2)
 
     decision = plan(
@@ -1185,20 +1456,32 @@ def sparse_matmul(
         sharded=_mesh_active(),
         shard=shard,
         static_scales=quant.has_static_scales(params),
+        epilogue=epilogue.spec.point if epilogue is not None else None,
     )
+
+    if pre_q and not (decision.uses_kernel
+                      and decision.placement == "single"):
+        # fallback tiers contract float activations: undo the upstream
+        # fused requantize with the leaf's own static scale
+        s = jnp.asarray(params[quant.ACT_SCALE_KEY],
+                        jnp.float32).reshape(())
+        x2 = x2.astype(jnp.float32) * s
 
     if not decision.uses_kernel:
         y2 = _JNP_IMPL[mode](x2, params, cfg, g)
+        if epilogue is not None:
+            y2 = epilib.apply_reference(y2, epilogue)
         return y2.reshape(*lead, o)
 
     entry = _entry_by_name(mode, decision.kernel)
     interpret = decision.backend == "interpret"
     blocks = decision.blocks
+    out_dt = jnp.float32 if pre_q else x2.dtype
 
     if decision.uses_shard_map:
         lb, lke, lo = decision.local_dims
         runner = lambda blk: _shard_map_runner(
-            entry, mode, cfg, shard, blk, interpret, x2.dtype,
+            entry, mode, cfg, shard, blk, interpret, out_dt,
             params)(x2, params)
         # Autotune the per-shard local problem through the same wrapper.
         if (dcfg.autotune and decision.blocks_source == "fitted"
@@ -1211,25 +1494,199 @@ def sparse_matmul(
             if tuned is not None:
                 blocks = tuned
         y2 = _shard_map_runner(entry, mode, cfg, shard, blocks, interpret,
-                               x2.dtype, params)(x2, params)
+                               out_dt, params)(x2, params)
+        if epilogue is not None:  # psum happened inside: apply unfused
+            y2 = epilib.apply_reference(y2, epilogue)
         return y2.reshape(*lead, o)
+
+    fused_epi = epilogue if decision.epilogue_fused else None
 
     # Autotune on first concrete sighting of a problem (never mid-trace).
     if (dcfg.autotune and decision.blocks_source == "fitted"
             and not isinstance(x2, jax.core.Tracer)):
-        key = autotune.cache_key(entry.name, b, ke, o, cfg.n, cfg.m,
-                                 exec_dtype)
+        key = autotune.cache_key(
+            entry.name, b, ke, o, cfg.n, cfg.m, exec_dtype,
+            epilogue=epilogue.spec.point if fused_epi is not None else None)
         cands = entry.candidates(b, ke, o, cfg.n, cfg.m, exec_dtype)
         tuned = autotune.tune(
-            lambda blk: entry.run(x2, params, cfg, g, blk, interpret, x2.dtype),
+            lambda blk: entry.run(x2, params, cfg, g, blk, interpret,
+                                  out_dt, epilogue=fused_epi),
             cands, backend=decision.backend, key=key,
             persist=dcfg.persist_autotune,
         )
         if tuned is not None:
             blocks = tuned
 
-    y2 = entry.run(x2, params, cfg, g, blocks, interpret, x2.dtype)
+    y2 = entry.run(x2, params, cfg, g, blocks, interpret, out_dt,
+                   epilogue=fused_epi)
+    if epilogue is not None and fused_epi is None:
+        y2 = epilib.apply_reference(y2, epilogue)
     return y2.reshape(*lead, o)
+
+
+def requant_plan(
+    consumer_params: Dict[str, Any], batch_shape: Sequence[int], cfg,
+    dispatch: Optional[DispatchConfig] = None,
+    shard: Optional[ShardSpec] = None,
+) -> Optional[Tuple[str, jax.Array]]:
+    """Should the PRODUCER of these activations fuse a requantize?
+
+    A producing kernel may extend its epilogue with
+    ``requant:<dtype>`` — emitting the narrow rows the next quantized
+    linear contracts directly — exactly when the CONSUMER leaf will (a)
+    quantize against a calibrated static ``act_scale`` (the fused cast
+    must hit the same scale the consumer's own quantize pass would) and
+    (b) run a single-placement kernel itself (the jnp dequantize
+    reference and the shard_map bodies want float rows).
+    ``batch_shape`` is the leading (batch) shape of the activations the
+    producer will emit.  Returns the ``(dtype_name, scalar_scale)`` to
+    put on the producer's epilogue, or ``None`` — both sides derive the
+    decision from this one function, so producer and consumer can never
+    disagree.
+    """
+    qdt = quant.quant_dtype(consumer_params)
+    if qdt is None or not quant.has_static_scales(consumer_params):
+        return None
+    try:
+        ke = input_features(consumer_params, cfg)
+        d = plan_for(consumer_params, tuple(batch_shape) + (ke,), cfg,
+                     dtype=qdt, dispatch=dispatch, shard=shard)
+    except ValueError:   # unrecognized layout (e.g. rowwise): no requant
+        return None
+    if not (d.uses_kernel and d.placement == "single"):
+        return None
+    s = jnp.asarray(consumer_params[quant.ACT_SCALE_KEY],
+                    jnp.float32).reshape(())
+    return dtype_name(qdt), s
+
+
+def _concat_gate_up(pg, pu, mode):
+    """One concatenated-O layout for an eligible gate-up pair, so the
+    UNFUSED fallback still reads the activation once (one GEMM over
+    ``[Wg | Wu]`` instead of two over the same x).  ``None`` when the
+    leaves cannot concat — gather keeps per-site index streams, and
+    mismatched aux leaves would change quantization semantics."""
+    if (quant.SCALE_KEY in pg) != (quant.SCALE_KEY in pu):
+        return None
+    if (quant.ACT_SCALE_KEY in pg) != (quant.ACT_SCALE_KEY in pu):
+        return None
+    cat = {}
+    if mode == "dense":
+        cat["w"] = jnp.concatenate([pg["w"], pu["w"]], axis=1)
+    elif mode == "compressed":
+        if pg["meta_packed"].shape != pu["meta_packed"].shape:
+            return None
+        cat["values"] = jnp.concatenate([pg["values"], pu["values"]],
+                                        axis=1)
+        cat["meta_packed"] = jnp.concatenate(
+            [pg["meta_packed"], pu["meta_packed"]], axis=1)
+    else:
+        return None
+    if quant.SCALE_KEY in pg:
+        cat[quant.SCALE_KEY] = jnp.concatenate(
+            [pg[quant.SCALE_KEY].reshape(-1),
+             pu[quant.SCALE_KEY].reshape(-1)], axis=0)
+    if quant.ACT_SCALE_KEY in pg:
+        # both sites calibrated on the SAME tensor, so their scales
+        # agree; the gate leaf's scalar quantizes the shared rows
+        cat[quant.ACT_SCALE_KEY] = pg[quant.ACT_SCALE_KEY]
+    return cat   # note: no _CALIB_KEY — gate_up_matmul records per-site
+
+
+def gate_up_matmul(
+    x: jax.Array,
+    params_g: Dict[str, Any],
+    params_u: Dict[str, Any],
+    cfg,
+    *,
+    constrain_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+    dispatch: Optional[DispatchConfig] = None,
+    shard: Optional[ShardSpec] = None,
+    requant: Optional[str] = None,
+    requant_scale=None,
+) -> jax.Array:
+    """``silu(x @ Wg) * (x @ Wu)`` — the gate-up projection as ONE
+    engine call.
+
+    When both leaves share mode/shape/dtype class and the plan lands on
+    a single-placement kernel with a ``run_dual`` variant, ONE
+    pallas_call reads each activation tile once, contracts it against
+    both weights, and emits the ``silu_mul`` epilogue point directly
+    (optionally extended with ``requant`` / ``requant_scale`` from
+    :func:`requant_plan` on the next linear).  Otherwise the fallback
+    still reads the activation once where that helps — dense and
+    compressed pairs headed for a (non-dual) kernel concat along O
+    into a single GEMM, while jnp-tier pairs run as two plain GEMMs
+    (a per-call weight concat costs more than a decode-shape GEMM
+    there) — and applies the float silu*mul reference (never the
+    requant: the consumer's own quantize pass is bit-identical on
+    float rows).
+    """
+    dcfg = dispatch or _DEFAULT
+    g = constrain_fn or (lambda w: w)
+    mode_g = _mode_of(params_g, cfg)
+    mode_u = _mode_of(params_u, cfg)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    b = x2.shape[0]
+    ke, o = _problem_dims(mode_g, params_g, x2)
+
+    # both sites see the same activations: record each calibration tag
+    # here (the concat fallback cannot carry two tags through one leaf)
+    if quant.calibration_active():
+        for p in (params_g, params_u):
+            if quant._CALIB_KEY in p:
+                quant.record_calibration(p[quant._CALIB_KEY], x2)
+
+    qdt = quant.quant_dtype(params_g)
+    pair_ok = (
+        mode_g == mode_u
+        and mode_g in ("dense", "compressed", "gather")
+        and _problem_dims(mode_u, params_u, x2) == (ke, o)
+        and quant.quant_dtype(params_u) == qdt
+        and (quant.has_static_scales(params_u)
+             == quant.has_static_scales(params_g))
+    )
+    spec = EpilogueSpec(act="silu_mul", requant=requant)
+    epi = Epilogue(spec, requant_scale=requant_scale)
+
+    decision = None
+    if pair_ok:
+        decision = plan(
+            mode_g, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m,
+            dtype=qdt or x2.dtype, dispatch=dcfg,
+            differentiating=_under_autodiff(x2, params_g, params_u),
+            sharded=_mesh_active(), shard=shard,
+            static_scales=quant.has_static_scales(params_g),
+            epilogue=spec.point, dual=True)
+    if decision is not None and decision.epilogue_fused:
+        entry = _entry_by_name(mode_g, decision.kernel)
+        interpret = decision.backend == "interpret"
+        pre_q = quant.is_quantized_dtype(x2.dtype)
+        out_dt = jnp.float32 if pre_q else x2.dtype
+        y2 = entry.run_dual(x2, params_g, params_u, cfg, g,
+                            decision.blocks, interpret, out_dt,
+                            epilogue=epi)
+        return y2.reshape(*lead, o)
+
+    # the concat collapse (one GEMM over 2o, activation read once from
+    # HBM) only pays for itself when a kernel actually runs it; on the
+    # jnp tier the per-call O(ke*2o) weight concat costs more than the
+    # decode-shape GEMM it feeds, so two plain XLA GEMMs win there
+    cat = (_concat_gate_up(params_g, params_u, mode_g)
+           if pair_ok and decision is not None and decision.uses_kernel
+           else None)
+    if cat is not None:
+        y2 = sparse_matmul(x2, cat, cfg, constrain_fn=g, dispatch=dcfg,
+                           shard=shard)
+        y_g, y_u = y2[:, :o], y2[:, o:]
+    else:
+        y_g = sparse_matmul(x2, params_g, cfg, constrain_fn=g,
+                            dispatch=dcfg, shard=shard)
+        y_u = sparse_matmul(x2, params_u, cfg, constrain_fn=g,
+                            dispatch=dcfg, shard=shard)
+    h = jax.nn.silu(y_g.astype(jnp.float32)) * y_u.astype(jnp.float32)
+    return h.astype(y_g.dtype).reshape(*lead, o)
 
 
 def attention(

@@ -1,0 +1,246 @@
+"""Epilogue lattice: what one pallas_call may fuse after its GEMM flush.
+
+Every linear used to be GEMM-flush-then-jnp: the kernel wrote the full
+fp32 result to HBM and bias, SwiGLU/GeLU, and the quantize of the next
+activation each cost another full HBM round trip.  This module defines
+the **epilogue lattice** the dispatch engine plans on — the closed set of
+post-GEMM operations a kernel can apply to the accumulator tile in VMEM
+before the single HBM write-back:
+
+    dequantize -> (+ bias) -> (silu | gelu | silu*mul) -> (requantize)
+
+- *dequantize* is the quantized entries' existing flush-time scale
+  multiply — the epilogue rides it, so fusing costs no extra pass;
+- *bias* is a per-output-channel ``(O,)`` add on the fp32 tile;
+- *activation* is silu, gelu (tanh), or — for the fused two-GEMM
+  gate-up variant — ``silu(g) * u`` over two accumulator tiles;
+- *requantize* quantizes the produced activation rows against the
+  **consumer's calibrated static scale** (symmetric, scalar), emitting
+  the narrow dtype the next quantized linear contracts directly — the
+  producer's write-back and the consumer's quantize pass collapse into
+  one cast in VMEM.
+
+Two layers share the math so fused and unfused cannot drift:
+
+- :func:`flush_tile` is called inside kernel bodies on the dequantized
+  fp32 accumulator tile (works identically under Mosaic and interpret);
+- :func:`apply_reference` applies the same ops with plain jnp — the
+  engine's unfused path (jnp fallback, shard_map, grad contexts) and
+  the parity tests both use it.  The unfused path never requantizes
+  (the consumer's own row-quantize produces bit-identical operands from
+  the float result), so a fallback can never silently change end-to-end
+  numerics.
+
+An :class:`EpilogueSpec` is the *static* lattice point (hashable — it
+suffixes autotune cache keys and names itself in ``DispatchDecision``);
+an :class:`Epilogue` couples it with the runtime operands (bias vector,
+requant scale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "EpilogueSpec",
+    "Epilogue",
+    "flush_tile",
+    "apply_reference",
+    "requant_rows",
+    "ACTIVATIONS",
+]
+
+# activations the lattice admits; "silu_mul" is the gate-up fused form
+# (silu(gate_acc) * up_acc) and only ever appears on dual-GEMM plans
+ACTIVATIONS = ("silu", "gelu", "silu_mul")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """One static point of the epilogue lattice.
+
+    ``act``: None | "silu" | "gelu" | "silu_mul"; ``bias``: add a per
+    -channel vector before the activation; ``requant``: None or the
+    canonical narrow dtype name ("int8" | "float8_e4m3fn") the produced
+    activation requantizes to.  Hashable and string-stable: ``point``
+    is what dispatch decisions, describe(), and autotune keys carry.
+    """
+
+    act: Optional[str] = None
+    bias: bool = False
+    requant: Optional[str] = None
+
+    def __post_init__(self):
+        if self.act is not None and self.act not in ACTIVATIONS:
+            raise ValueError(f"unknown epilogue activation {self.act!r} "
+                             f"(expected one of {ACTIVATIONS})")
+        if self.requant is not None:
+            from repro.core.quantize import canonical_qdtype
+            object.__setattr__(self, "requant",
+                               canonical_qdtype(self.requant).name)
+
+    @property
+    def point(self) -> str:
+        """Stable display/cache name of this lattice point."""
+        parts = []
+        if self.bias:
+            parts.append("bias")
+        if self.act:
+            parts.append(self.act)
+        if self.requant:
+            parts.append(f"requant:{self.requant}")
+        return "+".join(parts) or "none"
+
+    @property
+    def is_identity(self) -> bool:
+        return not (self.bias or self.act or self.requant)
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """An :class:`EpilogueSpec` plus its runtime operands.
+
+    ``bias``: ``(O,)`` float vector (present iff ``spec.bias``).
+    ``requant_scale``: scalar float array — the CONSUMER's calibrated
+    static activation scale (present iff ``spec.requant``).
+    """
+
+    spec: EpilogueSpec
+    bias: Optional[jax.Array] = None
+    requant_scale: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.spec.bias != (self.bias is not None):
+            raise ValueError("Epilogue bias operand must match spec.bias")
+        if (self.spec.requant is not None) != (self.requant_scale is not None):
+            raise ValueError(
+                "Epilogue requant_scale operand must match spec.requant")
+
+
+def make(act: Optional[str] = None, bias: Optional[jax.Array] = None,
+         requant: Optional[str] = None,
+         requant_scale: Optional[Any] = None) -> Epilogue:
+    """Convenience constructor: operands in, spec derived."""
+    return Epilogue(EpilogueSpec(act=act, bias=bias is not None,
+                                 requant=requant),
+                    bias=bias, requant_scale=requant_scale)
+
+
+def _act(y: jax.Array, name: Optional[str]) -> jax.Array:
+    if name is None:
+        return y
+    if name == "silu":
+        return jax.nn.silu(y)
+    if name == "gelu":
+        return jax.nn.gelu(y)
+    raise ValueError(f"activation {name!r} needs the dual-tile flush")
+
+
+def requant_rows(y32: jax.Array, scale, dtype_name: str) -> jax.Array:
+    """Symmetric static-scale row quantization, kernel-body safe.
+
+    The same clip-before-cast contract as ``quantize.quantize_rows_static``
+    (int8 rounds to nearest; fp8 e4m3fn saturates at ±448 so an overflow
+    never casts to NaN) — one formulation shared by the in-kernel flush
+    and the reference path, so fused and unfused requantization are
+    bit-identical on the same float input.
+    """
+    from repro.core.quantize import QUANT_DTYPES
+
+    dt = jnp.dtype(dtype_name)
+    lim = QUANT_DTYPES[dt]
+    q = jnp.clip(y32 / scale, -lim, lim)
+    if dt == jnp.dtype(jnp.int8):
+        q = jnp.round(q)
+    return q.astype(dt)
+
+
+def flush_tile(acc32: jax.Array, spec: EpilogueSpec, out_dtype,
+               bias_tile=None, rq_scale=None,
+               acc2_32: Optional[jax.Array] = None) -> jax.Array:
+    """Apply one lattice point to a dequantized fp32 accumulator tile.
+
+    Called inside kernel flush bodies: ``acc32`` is the (BB, BO) — or,
+    for the gather family, (BO, BB) — fp32 tile after the existing
+    dequantize multiply; ``bias_tile`` is already broadcast to the tile
+    orientation; ``rq_scale`` is a scalar.  ``acc2_32`` is the second
+    (up-projection) tile for the ``silu_mul`` dual flush.  Returns the
+    tile in its final storage dtype (the narrow requant dtype when the
+    spec requantizes, else ``out_dtype``).
+    """
+    y = acc32
+    if spec.bias:
+        y = y + bias_tile
+    if spec.act == "silu_mul":
+        y = jax.nn.silu(y) * acc2_32
+    else:
+        y = _act(y, spec.act)
+    if spec.requant is not None:
+        return requant_rows(y, rq_scale, spec.requant)
+    return y.astype(out_dtype)
+
+
+def tile_in_specs(spec: EpilogueSpec, block_o: int):
+    """BlockSpecs for the epilogue operands of a row-major (B, O) kernel:
+    the bias row ``(1, block_o)`` and the scalar requant scale ``(1, 1)``,
+    in that order — appended after the GEMM operands of every family."""
+    from jax.experimental import pallas as pl
+
+    specs = []
+    if spec.bias:
+        specs.append(pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)))
+    if spec.requant:
+        specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)))
+    return specs
+
+
+def tile_operands(spec: EpilogueSpec, bias, requant_scale, o: int):
+    """The concrete arrays matching :func:`tile_in_specs`' ordering."""
+    ops = []
+    if spec.bias:
+        if bias is None or bias.size != o:
+            raise ValueError(f"epilogue bias must be ({o},), got "
+                             f"{None if bias is None else bias.shape}")
+        ops.append(bias.astype(jnp.float32).reshape(1, o))
+    if spec.requant:
+        if requant_scale is None:
+            raise ValueError("requant epilogue needs the consumer's "
+                             "static activation scale")
+        ops.append(jnp.asarray(requant_scale, jnp.float32).reshape(1, 1))
+    return ops
+
+
+def out_dtype_for(spec: EpilogueSpec, out_dtype):
+    """Storage dtype of the kernel output under this lattice point."""
+    return jnp.dtype(spec.requant) if spec.requant else out_dtype
+
+
+def apply_reference(y: jax.Array, epi: Optional[Epilogue],
+                    requantize: bool = False) -> jax.Array:
+    """The unfused jnp formulation of one epilogue (minus requant).
+
+    Applied by the engine after any unfused GEMM (jnp reference,
+    shard_map, grad contexts).  Ops run in fp32 and cast back, matching
+    the in-kernel flush which operates on the fp32 accumulator.  By
+    default the requant step is SKIPPED — the unfused contract is to
+    emit the float activation and let the consumer's own static-scale
+    row quantize produce bit-identical narrow operands.  Parity tests
+    pass ``requantize=True`` to exercise the full lattice point.
+    """
+    if epi is None or epi.spec.is_identity:
+        return y
+    spec = epi.spec
+    if spec.act == "silu_mul":
+        raise ValueError("silu_mul is a dual-GEMM epilogue; apply it via "
+                         "the gate-up dispatcher, not apply_reference")
+    y32 = y.astype(jnp.float32)
+    if spec.bias:
+        y32 = y32 + epi.bias.astype(jnp.float32)
+    y32 = _act(y32, spec.act)
+    if spec.requant is not None and requantize:
+        return requant_rows(y32, epi.requant_scale, spec.requant)
+    return y32.astype(y.dtype)

@@ -27,6 +27,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.epilogue import (
+    EpilogueSpec, flush_tile, out_dtype_for, tile_in_specs, tile_operands,
+)
+
+_IDENT = EpilogueSpec()
 
 
 def _expand_rows4(a: jax.Array) -> jax.Array:
@@ -79,12 +84,42 @@ def _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n: int, acc_dtype):
     acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=acc_dtype)
 
 
-def _spmm_kernel(x_ref, v_ref, pm_ref, o_ref, acc_ref, *, n: int, nk: int):
-    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, jnp.float32)
+def _spmm_kernel(*refs, n: int, nk: int, acc_dtype, quant: bool,
+                 epi: EpilogueSpec):
+    """ONE flush body for the float and scaled-quantized N:M SpMMs.
+
+    Ref order: x, values, meta, [xs, ws (quant)], [bias], [rq_scale],
+    out, acc — the epilogue lattice point is applied to the dequantized
+    fp32 accumulator tile before the single HBM write-back.
+    """
+    it = list(refs)
+    x_ref, v_ref, pm_ref = it[0], it[1], it[2]
+    p = 3
+    xs_ref = ws_ref = bias_ref = rq_ref = None
+    if quant:
+        xs_ref, ws_ref = it[p], it[p + 1]
+        p += 2
+    if epi.bias:
+        bias_ref = it[p]
+        p += 1
+    if epi.requant:
+        rq_ref = it[p]
+        p += 1
+    o_ref, acc_ref = it[p], it[p + 1]
+
+    # the M:1 mux is exact for narrow dtypes too: at most one nonzero per
+    # expanded slot (int8 stays in [-127, 127]; fp8 x + 0 is exact)
+    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, acc_dtype)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        t = acc_ref[...].astype(jnp.float32)
+        if quant:
+            t = t * xs_ref[...] * ws_ref[...]
+        o_ref[...] = flush_tile(
+            t, epi, o_ref.dtype,
+            bias_tile=None if bias_ref is None else bias_ref[...],
+            rq_scale=None if rq_ref is None else rq_ref[0, 0])
 
 
 def nm_spmm(
@@ -98,12 +133,16 @@ def nm_spmm(
     block_ke: int = 512,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    bias: jax.Array = None,
+    requant_scale=None,
 ) -> jax.Array:
     """Y = X @ dec(values, meta).  M is fixed at 4 (paper's detailed design).
 
     x: (B, K_eff) -- K_eff = K_c * 4 / n
     values: (K_c, O), meta_packed: (K_c/4, O) uint8
     """
+    epi = epilogue or _IDENT
     b, ke = x.shape
     kc, o = values.shape
     assert ke * n == kc * 4, (x.shape, values.shape, n)
@@ -116,33 +155,22 @@ def nm_spmm(
     assert block_kc % 4 == 0, "block_ke*n/4 must be a multiple of 4 for packing"
     nk = ke // block_ke
     return pl.pallas_call(
-        lambda xr, vr, pr, orf, acc: _spmm_kernel(xr, vr, pr, orf, acc, n=n, nk=nk),
+        lambda *refs: _spmm_kernel(*refs, n=n, nk=nk, acc_dtype=jnp.float32,
+                                   quant=False, epi=epi),
         grid=(b // block_b, o // block_o, nk),
         in_specs=[
             pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j)),
-        ],
+        ] + tile_in_specs(epi, block_o),
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
         scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, values, meta_packed)
-
-
-def _spmm_q_kernel(x_ref, v_ref, pm_ref, xs_ref, ws_ref, o_ref, acc_ref,
-                   *, n: int, nk: int, acc_dtype):
-    # the M:1 mux is exact for narrow dtypes too: at most one nonzero per
-    # expanded slot (int8 stays in [-127, 127]; fp8 x + 0 is exact)
-    _spmm_accumulate(x_ref, v_ref, pm_ref, acc_ref, n, acc_dtype)
-
-    @pl.when(pl.program_id(2) == nk - 1)
-    def _flush():
-        deq = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
-        o_ref[...] = deq.astype(o_ref.dtype)
+    )(x, values, meta_packed, *tile_operands(epi, bias, requant_scale, o))
 
 
 def _spmm_q_raw_kernel(x_ref, v_ref, pm_ref, o_ref, acc_ref,
@@ -159,9 +187,13 @@ def _spmm_q_raw_kernel(x_ref, v_ref, pm_ref, o_ref, acc_ref,
 def _nm_spmm_quantized(
     x_q, values, meta_packed, x_scale, w_scale, n, *, acc_dtype,
     block_b, block_o, block_ke, out_dtype, interpret,
+    epilogue: EpilogueSpec = None, bias=None, requant_scale=None,
 ) -> jax.Array:
     """Shared pallas_call plumbing for the int8 and fp8 N:M SpMMs —
-    ONE implementation parameterized by the accumulator dtype."""
+    ONE implementation parameterized by the accumulator dtype.  The
+    scaled branch takes an epilogue lattice point applied at the flush;
+    the raw branch never does (its contract is the exact accumulator)."""
+    epi = epilogue or _IDENT
     b, ke = x_q.shape
     kc, o = values.shape
     assert ke * n == kc * 4, (x_q.shape, values.shape, n)
@@ -169,6 +201,7 @@ def _nm_spmm_quantized(
     raw = x_scale is None
     assert raw == (w_scale is None), "pass both scales or neither"
     if raw:
+        assert epi.is_identity, "raw accumulator kernels take no epilogue"
         out_dtype = acc_dtype
     else:
         assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
@@ -199,8 +232,8 @@ def _nm_spmm_quantized(
             interpret=interpret,
         )(x_q, values, meta_packed)
     return pl.pallas_call(
-        lambda xr, vr, pr, xsr, wsr, orf, acc: _spmm_q_kernel(
-            xr, vr, pr, xsr, wsr, orf, acc, n=n, nk=nk, acc_dtype=acc_dtype),
+        lambda *refs: _spmm_kernel(*refs, n=n, nk=nk, acc_dtype=acc_dtype,
+                                   quant=True, epi=epi),
         grid=(b // block_b, o // block_o, nk),
         in_specs=[
             pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
@@ -208,15 +241,128 @@ def _nm_spmm_quantized(
             pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
             pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
-        ],
+        ] + tile_in_specs(epi, block_o),
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
         scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x_q, values, meta_packed, x_scale, w_scale)
+    )(x_q, values, meta_packed, x_scale, w_scale,
+      *tile_operands(epi, bias, requant_scale, o))
+
+
+def _spmm_dual_kernel(*refs, n: int, nk: int, acc_dtype, quant: bool,
+                      epi: EpilogueSpec):
+    """Fused gate-up flush for the compressed family: two N:M SpMMs over
+    ONE activation tile read.  Ref order: x, v_g, pm_g, v_u, pm_u,
+    [xs, ws_g, ws_u (quant)], [rq_scale], out, acc_g, acc_u.
+    """
+    it = list(refs)
+    x_ref, vg_ref, pmg_ref, vu_ref, pmu_ref = it[:5]
+    p = 5
+    xs_ref = wsg_ref = wsu_ref = rq_ref = None
+    if quant:
+        xs_ref, wsg_ref, wsu_ref = it[p], it[p + 1], it[p + 2]
+        p += 3
+    if epi.requant:
+        rq_ref = it[p]
+        p += 1
+    o_ref, accg_ref, accu_ref = it[p], it[p + 1], it[p + 2]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    xv = x_ref[...]  # ONE read feeds both mux-expanded contractions
+    wg = _decompress_tile(vg_ref[...], _unpack_meta_tile(pmg_ref[...]), n)
+    wu = _decompress_tile(vu_ref[...], _unpack_meta_tile(pmu_ref[...]), n)
+    accg_ref[...] += jnp.dot(xv, wg, preferred_element_type=acc_dtype)
+    accu_ref[...] += jnp.dot(xv, wu, preferred_element_type=acc_dtype)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        tg = accg_ref[...].astype(jnp.float32)
+        tu = accu_ref[...].astype(jnp.float32)
+        if quant:
+            xs = xs_ref[...]
+            tg = tg * xs * wsg_ref[...]
+            tu = tu * xs * wsu_ref[...]
+        o_ref[...] = flush_tile(
+            tg, epi, o_ref.dtype,
+            rq_scale=None if rq_ref is None else rq_ref[0, 0],
+            acc2_32=tu)
+
+
+def nm_spmm_dual(
+    x, values_g, meta_g, values_u, meta_u, n: int,
+    x_scale=None, wg_scale=None, wu_scale=None, *,
+    acc_dtype=jnp.float32,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    requant_scale=None,
+) -> jax.Array:
+    """Fused gate-up over two compressed N:M weights sharing one x:
+    ``silu(x @ dec(v_g)) * (x @ dec(v_u))`` in one pallas_call.  Float
+    when ``x_scale is None``; quantized when the three scales are given
+    (``acc_dtype`` int32 for int8, fp32 for fp8).
+    """
+    epi = epilogue or EpilogueSpec(act="silu_mul")
+    assert epi.act == "silu_mul" and not epi.bias, epi.point
+    b, ke = x.shape
+    kc, o = values_g.shape
+    assert ke * n == kc * 4, (x.shape, values_g.shape, n)
+    assert values_u.shape == (kc, o)
+    assert meta_g.shape == (kc // 4, o) and meta_u.shape == (kc // 4, o)
+    quant = x_scale is not None
+    if quant:
+        assert x_scale.shape == (b, 1), x_scale.shape
+        assert wg_scale.shape == (1, o) and wu_scale.shape == (1, o)
+    else:
+        acc_dtype = jnp.float32
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    assert block_kc % 4 == 0, "block_ke*n/4 must be a multiple of 4 for packing"
+    nk = ke // block_ke
+    x_spec = pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk))
+    v_spec = pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j))
+    pm_spec = pl.BlockSpec((block_kc // 4, block_o), lambda i, j, kk: (kk, j))
+    in_specs = [x_spec, v_spec, pm_spec, v_spec, pm_spec]
+    operands = [x, values_g, meta_g, values_u, meta_u]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+        ]
+        operands += [x_scale, wg_scale, wu_scale]
+    rq_spec = EpilogueSpec(requant=epi.requant)
+    in_specs += tile_in_specs(rq_spec, block_o)
+    operands += tile_operands(rq_spec, None, requant_scale, o)
+    return pl.pallas_call(
+        lambda *refs: _spmm_dual_kernel(*refs, n=n, nk=nk,
+                                        acc_dtype=acc_dtype, quant=quant,
+                                        epi=epi),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype),
+                        pltpu.VMEM((block_b, block_o), acc_dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
 
 
 def nm_spmm_int8(
@@ -232,6 +378,9 @@ def nm_spmm_int8(
     block_ke: int = 512,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    bias: jax.Array = None,
+    requant_scale=None,
 ) -> jax.Array:
     """Int8 VNNI-lineage variant: Y = (x_q*xs) @ dec(values*ws, meta).
 
@@ -249,7 +398,8 @@ def nm_spmm_int8(
     return _nm_spmm_quantized(
         x_q, values, meta_packed, x_scale, w_scale, n, acc_dtype=jnp.int32,
         block_b=block_b, block_o=block_o, block_ke=block_ke,
-        out_dtype=out_dtype, interpret=interpret)
+        out_dtype=out_dtype, interpret=interpret,
+        epilogue=epilogue, bias=bias, requant_scale=requant_scale)
 
 
 def nm_spmm_fp8(
@@ -265,6 +415,9 @@ def nm_spmm_fp8(
     block_ke: int = 512,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    bias: jax.Array = None,
+    requant_scale=None,
 ) -> jax.Array:
     """fp8 (e4m3fn) variant: same contract as :func:`nm_spmm_int8` with
     fp8 operands and an **fp32** VMEM accumulator.  The in-VMEM M:1 mux
@@ -278,4 +431,5 @@ def nm_spmm_fp8(
     return _nm_spmm_quantized(
         x_q, values, meta_packed, x_scale, w_scale, n, acc_dtype=jnp.float32,
         block_b=block_b, block_o=block_o, block_ke=block_ke,
-        out_dtype=out_dtype, interpret=interpret)
+        out_dtype=out_dtype, interpret=interpret,
+        epilogue=epilogue, bias=bias, requant_scale=requant_scale)

@@ -23,6 +23,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.epilogue import (
+    EpilogueSpec, flush_tile, out_dtype_for, tile_in_specs, tile_operands,
+)
+
+_IDENT = EpilogueSpec()
 
 
 def _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n: int, acc_dtype):
@@ -32,11 +37,16 @@ def _gather_accumulate(xt_ref, v_ref, idx_ref, acc_ref, n: int, acc_dtype):
     and int8 alike), and accumulate ``vᵀ @ x_g``.  ONE body for the
     float and int8 (scaled and raw) kernels, so their numerics cannot
     drift apart."""
+    _gather_step(xt_ref[...], v_ref, idx_ref, acc_ref, n, acc_dtype)
+
+
+def _gather_step(xt, v_ref, idx_ref, acc_ref, n: int, acc_dtype):
+    """Same body over an already-read ``(BKe, BB)`` VMEM tile — the dual
+    gate-up kernel reads x once and feeds both weights through this."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xt = xt_ref[...]                     # (BKe, BB)
     bke, bb = xt.shape
     nb = bke // 4
     x3 = xt.reshape(nb, 4, bb)           # candidates per block
@@ -251,3 +261,235 @@ def nm_spmm_gather_fp8(
         x_t, values, idx, x_scale, w_scale, n, acc_dtype=jnp.float32,
         block_b=block_b, block_o=block_o, block_ke=block_ke,
         out_dtype=out_dtype, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# BK-layout kernels: the gather/transpose fused into the index map.
+#
+# The adapters historically materialized ``x.T`` (K-major) in HBM before
+# the call and ``y_t.T`` after it — two full HBM round trips per linear.
+# The ``*_bk`` kernels instead take the activations in their natural
+# row-major ``(B, K_eff)`` layout: the BlockSpec index map delivers the
+# (BB, BKe) tile and the transpose happens **in VMEM** on the way into
+# the sublane gather; the flush transposes the (BO, BB) accumulator back
+# and writes the natural ``(B, O)`` output.  Neither permuted operand
+# ever exists in HBM (DARE's densifying-gather treatment).
+# ---------------------------------------------------------------------------
+
+
+def _gather_bk_kernel(*refs, n: int, nk: int, acc_dtype, quant: bool,
+                      epi: EpilogueSpec):
+    """ONE body for the float and scaled-quantized bk-layout kernels.
+
+    Ref order: x (BB, BKe), values, idx, [xs (BB, 1), ws (1, BO)],
+    [bias], [rq_scale], out (BB, BO), acc (BO, BB).
+    """
+    it = list(refs)
+    x_ref, v_ref, idx_ref = it[0], it[1], it[2]
+    p = 3
+    xs_ref = ws_ref = bias_ref = rq_ref = None
+    if quant:
+        xs_ref, ws_ref = it[p], it[p + 1]
+        p += 2
+    if epi.bias:
+        bias_ref = it[p]
+        p += 1
+    if epi.requant:
+        rq_ref = it[p]
+        p += 1
+    o_ref, acc_ref = it[p], it[p + 1]
+
+    _gather_step(x_ref[...].T, v_ref, idx_ref, acc_ref, n, acc_dtype)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        t = acc_ref[...].T.astype(jnp.float32)     # (BB, BO), row-major
+        if quant:
+            # ws before xs: the exact multiply order of the K-major
+            # kernel's flush, so the two layouts are bit-identical
+            t = t * ws_ref[...] * xs_ref[...]
+        o_ref[...] = flush_tile(
+            t, epi, o_ref.dtype,
+            bias_tile=None if bias_ref is None else bias_ref[...],
+            rq_scale=None if rq_ref is None else rq_ref[0, 0])
+
+
+def nm_spmm_gather_bk(
+    x: jax.Array,
+    values: jax.Array,
+    idx: jax.Array,
+    n: int,
+    x_scale: jax.Array = None,
+    w_scale: jax.Array = None,
+    *,
+    acc_dtype=jnp.float32,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    bias: jax.Array = None,
+    requant_scale=None,
+) -> jax.Array:
+    """Y (B, O) = X (B, K_eff) @ dec(values, idx) — natural layouts in
+    and out, gather and transposes fused into the kernel.  Float when
+    ``x_scale is None``; quantized when both scales are given (note the
+    row-major scale shapes: ``x_scale (B, 1)``, ``w_scale (1, O)`` —
+    unlike the K-major :func:`nm_spmm_gather_int8`).  The scaled flush
+    additionally applies an epilogue lattice point.
+    """
+    epi = epilogue or _IDENT
+    b, ke = x.shape
+    kc, o = values.shape
+    assert ke * n == kc * 4, (x.shape, values.shape, n)
+    assert idx.shape == (kc, 1), idx.shape
+    quant = x_scale is not None
+    assert quant == (w_scale is not None), "pass both scales or neither"
+    if quant:
+        assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
+            x_scale.shape, w_scale.shape)
+    else:
+        acc_dtype = jnp.float32
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    nk = ke // block_ke
+    in_specs = [
+        pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((block_kc, 1), lambda i, j, kk: (kk, 0)),
+    ]
+    operands = [x, values, idx]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+        ]
+        operands += [x_scale, w_scale]
+    in_specs += tile_in_specs(epi, block_o)
+    operands += tile_operands(epi, bias, requant_scale, o)
+    return pl.pallas_call(
+        lambda *refs: _gather_bk_kernel(*refs, n=n, nk=nk,
+                                        acc_dtype=acc_dtype, quant=quant,
+                                        epi=epi),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
+        scratch_shapes=[pltpu.VMEM((block_o, block_b), acc_dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+
+
+def _gather_dual_kernel(*refs, n: int, nk: int, acc_dtype, quant: bool,
+                        epi: EpilogueSpec):
+    """Fused gate-up for the gather family (bk layout): the x tile is
+    read and transposed ONCE and gathered through both weights' index
+    streams.  Ref order: x, v_g, idx_g, v_u, idx_u,
+    [xs, ws_g, ws_u], [rq_scale], out, acc_g, acc_u.
+    """
+    it = list(refs)
+    x_ref, vg_ref, ig_ref, vu_ref, iu_ref = it[:5]
+    p = 5
+    xs_ref = wsg_ref = wsu_ref = rq_ref = None
+    if quant:
+        xs_ref, wsg_ref, wsu_ref = it[p], it[p + 1], it[p + 2]
+        p += 3
+    if epi.requant:
+        rq_ref = it[p]
+        p += 1
+    o_ref, accg_ref, accu_ref = it[p], it[p + 1], it[p + 2]
+
+    xt = x_ref[...].T                    # ONE read + transpose in VMEM
+    _gather_step(xt, vg_ref, ig_ref, accg_ref, n, acc_dtype)
+    _gather_step(xt, vu_ref, iu_ref, accu_ref, n, acc_dtype)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        tg = accg_ref[...].T.astype(jnp.float32)
+        tu = accu_ref[...].T.astype(jnp.float32)
+        if quant:
+            xs = xs_ref[...]
+            tg = tg * wsg_ref[...] * xs
+            tu = tu * wsu_ref[...] * xs
+        o_ref[...] = flush_tile(
+            tg, epi, o_ref.dtype,
+            rq_scale=None if rq_ref is None else rq_ref[0, 0],
+            acc2_32=tu)
+
+
+def nm_spmm_gather_dual_bk(
+    x, values_g, idx_g, values_u, idx_u, n: int,
+    x_scale=None, wg_scale=None, wu_scale=None, *,
+    acc_dtype=jnp.float32,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    requant_scale=None,
+) -> jax.Array:
+    """Fused gate-up over two lane-aligned compressed weights sharing one
+    x: ``silu(x @ dec(v_g)) * (x @ dec(v_u))`` in one pallas_call, bk
+    layout in and out.  The two weights keep their own index streams
+    (per-site gather metadata), so the activation gather runs twice but
+    the HBM read of x happens once.
+    """
+    epi = epilogue or EpilogueSpec(act="silu_mul")
+    assert epi.act == "silu_mul" and not epi.bias, epi.point
+    b, ke = x.shape
+    kc, o = values_g.shape
+    assert ke * n == kc * 4, (x.shape, values_g.shape, n)
+    assert values_u.shape == (kc, o)
+    assert idx_g.shape == (kc, 1) and idx_u.shape == (kc, 1)
+    quant = x_scale is not None
+    if quant:
+        assert x_scale.shape == (b, 1), x_scale.shape
+        assert wg_scale.shape == (1, o) and wu_scale.shape == (1, o)
+    else:
+        acc_dtype = jnp.float32
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    nk = ke // block_ke
+    v_spec = pl.BlockSpec((block_kc, block_o), lambda i, j, kk: (kk, j))
+    i_spec = pl.BlockSpec((block_kc, 1), lambda i, j, kk: (kk, 0))
+    in_specs = [
+        pl.BlockSpec((block_b, block_ke), lambda i, j, kk: (i, kk)),
+        v_spec, i_spec, v_spec, i_spec,
+    ]
+    operands = [x, values_g, idx_g, values_u, idx_u]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+        ]
+        operands += [x_scale, wg_scale, wu_scale]
+    rq_spec = EpilogueSpec(requant=epi.requant)
+    in_specs += tile_in_specs(rq_spec, block_o)
+    operands += tile_operands(rq_spec, None, requant_scale, o)
+    return pl.pallas_call(
+        lambda *refs: _gather_dual_kernel(*refs, n=n, nk=nk,
+                                          acc_dtype=acc_dtype, quant=quant,
+                                          epi=epi),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
+        scratch_shapes=[pltpu.VMEM((block_o, block_b), acc_dtype),
+                        pltpu.VMEM((block_o, block_b), acc_dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)

@@ -80,6 +80,13 @@ class KernelEntry:
     backends whose hardware can't execute it — constraints the
     (shape, dtype) signature handed to ``fit_blocks`` cannot express
     (e.g. the fp8 entries require a native fp8 MXU dot on ``tpu``).
+
+    ``run_dual(x2d, params_g, params_u, ...)``, when set, is the fused
+    gate-up variant: ONE pallas_call contracting the activation tile
+    against two same-shaped weights and emitting ``silu(g) * u`` (the
+    ``silu_mul`` epilogue point) directly.  Entries without it decline
+    dual plans and the gate-up dispatcher falls back to a single
+    concatenated GEMM + jnp epilogue.
     """
 
     name: str
@@ -92,6 +99,7 @@ class KernelEntry:
     quantized: bool = False
     run_quantized: Optional[Callable[..., jax.Array]] = None
     supported: Optional[Callable[[str], bool]] = None
+    run_dual: Optional[Callable[..., jax.Array]] = None
 
 
 _REGISTRY: Dict[str, List[KernelEntry]] = {}

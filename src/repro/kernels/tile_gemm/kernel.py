@@ -24,6 +24,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.epilogue import (
+    EpilogueSpec, flush_tile, out_dtype_for, tile_in_specs, tile_operands,
+)
+
+_IDENT = EpilogueSpec()
 
 
 def _gemm_accumulate(x_ref, w_ref, acc_ref, acc_dtype):
@@ -38,12 +43,40 @@ def _gemm_accumulate(x_ref, w_ref, acc_ref, acc_dtype):
     )
 
 
-def _gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
-    _gemm_accumulate(x_ref, w_ref, acc_ref, jnp.float32)
+def _gemm_kernel(*refs, nk: int, acc_dtype, quant: bool, epi: EpilogueSpec):
+    """ONE flush body for the float and scaled-quantized GEMMs.
+
+    Ref order: x, w, [xs, ws (quant)], [bias (epi.bias)],
+    [rq_scale (epi.requant)], out, acc — the epilogue operands are
+    optional VMEM tiles and the whole lattice point is applied to the
+    dequantized fp32 accumulator before the single HBM write-back.
+    """
+    it = list(refs)
+    x_ref, w_ref = it[0], it[1]
+    p = 2
+    xs_ref = ws_ref = bias_ref = rq_ref = None
+    if quant:
+        xs_ref, ws_ref = it[p], it[p + 1]
+        p += 2
+    if epi.bias:
+        bias_ref = it[p]
+        p += 1
+    if epi.requant:
+        rq_ref = it[p]
+        p += 1
+    o_ref, acc_ref = it[p], it[p + 1]
+
+    _gemm_accumulate(x_ref, w_ref, acc_ref, acc_dtype)
 
     @pl.when(pl.program_id(2) == nk - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        t = acc_ref[...].astype(jnp.float32)
+        if quant:
+            t = t * xs_ref[...] * ws_ref[...]
+        o_ref[...] = flush_tile(
+            t, epi, o_ref.dtype,
+            bias_tile=None if bias_ref is None else bias_ref[...],
+            rq_scale=None if rq_ref is None else rq_ref[0, 0])
 
 
 def tile_gemm(
@@ -55,7 +88,11 @@ def tile_gemm(
     block_k: int = 512,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    bias: jax.Array = None,
+    requant_scale=None,
 ) -> jax.Array:
+    epi = epilogue or _IDENT
     b, k = x.shape
     k2, o = w.shape
     assert k == k2, (x.shape, w.shape)
@@ -65,30 +102,21 @@ def tile_gemm(
     assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
     nk = k // block_k
     return pl.pallas_call(
-        lambda xr, wr, orf, acc: _gemm_kernel(xr, wr, orf, acc, nk=nk),
+        lambda *refs: _gemm_kernel(*refs, nk=nk, acc_dtype=jnp.float32,
+                                   quant=False, epi=epi),
         grid=(b // block_b, o // block_o, nk),
         in_specs=[
             pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
-        ],
+        ] + tile_in_specs(epi, block_o),
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
         scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x, w)
-
-
-def _gemm_q_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref,
-                   *, nk: int, acc_dtype):
-    _gemm_accumulate(x_ref, w_ref, acc_ref, acc_dtype)
-
-    @pl.when(pl.program_id(2) == nk - 1)
-    def _flush():
-        deq = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
-        o_ref[...] = deq.astype(o_ref.dtype)
+    )(x, w, *tile_operands(epi, bias, requant_scale, o))
 
 
 def _gemm_q_raw_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int, acc_dtype):
@@ -105,16 +133,22 @@ def _gemm_q_raw_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int, acc_dtype):
 def _tile_gemm_quantized(
     x_q, w_q, x_scale, w_scale, *, acc_dtype,
     block_b, block_o, block_k, out_dtype, interpret,
+    epilogue: EpilogueSpec = None, bias=None, requant_scale=None,
 ) -> jax.Array:
     """Shared pallas_call plumbing for the int8 and fp8 tile GEMMs —
     ONE implementation parameterized by the accumulator dtype, so the
-    two quantized execution classes cannot drift apart."""
+    two quantized execution classes cannot drift apart.  The scaled
+    branch additionally takes an epilogue lattice point, applied to the
+    dequantized fp32 tile at the flush (the raw branch never does — its
+    contract is the exact accumulator for psum-then-dequantize)."""
+    epi = epilogue or _IDENT
     b, k = x_q.shape
     k2, o = w_q.shape
     assert k == k2, (x_q.shape, w_q.shape)
     raw = x_scale is None
     assert raw == (w_scale is None), "pass both scales or neither"
     if raw:
+        assert epi.is_identity, "raw accumulator kernels take no epilogue"
         out_dtype = acc_dtype
     else:
         assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
@@ -142,23 +176,137 @@ def _tile_gemm_quantized(
             interpret=interpret,
         )(x_q, w_q)
     return pl.pallas_call(
-        lambda xr, wr, xsr, wsr, orf, acc: _gemm_q_kernel(
-            xr, wr, xsr, wsr, orf, acc, nk=nk, acc_dtype=acc_dtype),
+        lambda *refs: _gemm_kernel(*refs, nk=nk, acc_dtype=acc_dtype,
+                                   quant=True, epi=epi),
         grid=(b // block_b, o // block_o, nk),
         in_specs=[
             pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
             pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
-        ],
+        ] + tile_in_specs(epi, block_o),
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
         scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(x_q, w_q, x_scale, w_scale)
+    )(x_q, w_q, x_scale, w_scale,
+      *tile_operands(epi, bias, requant_scale, o))
+
+
+def _gemm_dual_kernel(*refs, nk: int, acc_dtype, quant: bool,
+                      epi: EpilogueSpec):
+    """Fused gate-up flush: two GEMMs over ONE activation tile read.
+
+    Ref order: x, w_g, w_u, [xs, ws_g, ws_u (quant)],
+    [rq_scale (epi.requant)], out, acc_g, acc_u.  The x tile is read
+    from VMEM once and contracted against both weight tiles; the flush
+    emits ``silu(deq(acc_g)) * deq(acc_u)`` (optionally requantized)
+    directly — the gate and up projections never touch HBM.
+    """
+    it = list(refs)
+    x_ref, wg_ref, wu_ref = it[0], it[1], it[2]
+    p = 3
+    xs_ref = wsg_ref = wsu_ref = rq_ref = None
+    if quant:
+        xs_ref, wsg_ref, wsu_ref = it[p], it[p + 1], it[p + 2]
+        p += 3
+    if epi.requant:
+        rq_ref = it[p]
+        p += 1
+    o_ref, accg_ref, accu_ref = it[p], it[p + 1], it[p + 2]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    xv = x_ref[...]  # ONE read feeds both contractions
+    accg_ref[...] += jnp.dot(xv, wg_ref[...],
+                             preferred_element_type=acc_dtype)
+    accu_ref[...] += jnp.dot(xv, wu_ref[...],
+                             preferred_element_type=acc_dtype)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        tg = accg_ref[...].astype(jnp.float32)
+        tu = accu_ref[...].astype(jnp.float32)
+        if quant:
+            xs = xs_ref[...]
+            tg = tg * xs * wsg_ref[...]
+            tu = tu * xs * wsu_ref[...]
+        o_ref[...] = flush_tile(
+            tg, epi, o_ref.dtype,
+            rq_scale=None if rq_ref is None else rq_ref[0, 0],
+            acc2_32=tu)
+
+
+def tile_gemm_dual(
+    x, w_g, w_u, x_scale=None, wg_scale=None, wu_scale=None, *,
+    acc_dtype=jnp.float32,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    requant_scale=None,
+) -> jax.Array:
+    """Fused gate-up projection: ``silu(x @ w_g) * (x @ w_u)`` in one
+    pallas_call.  Float when ``x_scale is None``; quantized (int8/fp8 by
+    ``acc_dtype`` int32/fp32) when the three scales are given, with the
+    same flush-time dequantize contract as the single-GEMM kernels.
+    The epilogue spec must be a ``silu_mul`` point (bias unsupported on
+    the dual path); ``requant`` on the spec re-emits the narrow dtype.
+    """
+    epi = epilogue or EpilogueSpec(act="silu_mul")
+    assert epi.act == "silu_mul" and not epi.bias, epi.point
+    b, k = x.shape
+    k2, o = w_g.shape
+    assert k == k2 and w_u.shape == w_g.shape, (x.shape, w_g.shape,
+                                                w_u.shape)
+    quant = x_scale is not None
+    if quant:
+        assert x_scale.shape == (b, 1), x_scale.shape
+        assert wg_scale.shape == (1, o) and wu_scale.shape == (1, o), (
+            wg_scale.shape, wu_scale.shape)
+    else:
+        acc_dtype = jnp.float32
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_k = min(block_k, k)
+    assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
+    nk = k // block_k
+    x_spec = pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk))
+    w_spec = pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j))
+    in_specs = [x_spec, w_spec, w_spec]
+    operands = [x, w_g, w_u]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+        ]
+        operands += [x_scale, wg_scale, wu_scale]
+    in_specs += tile_in_specs(EpilogueSpec(requant=epi.requant), block_o)
+    operands += tile_operands(EpilogueSpec(requant=epi.requant), None,
+                              requant_scale, o)
+    return pl.pallas_call(
+        lambda *refs: _gemm_dual_kernel(*refs, nk=nk, acc_dtype=acc_dtype,
+                                        quant=quant, epi=epi),
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype),
+                        pltpu.VMEM((block_b, block_o), acc_dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
 
 
 def tile_gemm_int8(
@@ -172,6 +320,9 @@ def tile_gemm_int8(
     block_k: int = 512,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    bias: jax.Array = None,
+    requant_scale=None,
 ) -> jax.Array:
     """Y = (x_q * x_scale) @ (w_q * w_scale), contracted in int8.
 
@@ -188,7 +339,8 @@ def tile_gemm_int8(
     return _tile_gemm_quantized(
         x_q, w_q, x_scale, w_scale, acc_dtype=jnp.int32,
         block_b=block_b, block_o=block_o, block_k=block_k,
-        out_dtype=out_dtype, interpret=interpret)
+        out_dtype=out_dtype, interpret=interpret,
+        epilogue=epilogue, bias=bias, requant_scale=requant_scale)
 
 
 def tile_gemm_fp8(
@@ -202,6 +354,9 @@ def tile_gemm_fp8(
     block_k: int = 512,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    bias: jax.Array = None,
+    requant_scale=None,
 ) -> jax.Array:
     """Y = (x_q * x_scale) @ (w_q * w_scale), contracted in fp8 (e4m3fn).
 
@@ -214,4 +369,5 @@ def tile_gemm_fp8(
     return _tile_gemm_quantized(
         x_q, w_q, x_scale, w_scale, acc_dtype=jnp.float32,
         block_b=block_b, block_o=block_o, block_k=block_k,
-        out_dtype=out_dtype, interpret=interpret)
+        out_dtype=out_dtype, interpret=interpret,
+        epilogue=epilogue, bias=bias, requant_scale=requant_scale)

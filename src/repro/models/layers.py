@@ -7,7 +7,8 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_linear import SparsityConfig, apply_linear, init_linear
+from repro.core.sparse_linear import (
+    SparsityConfig, apply_gate_up, apply_linear, init_linear)
 
 from .pjit_utils import constrain
 
@@ -88,14 +89,31 @@ def init_mlp(key, d: int, ff: int, act: str, sp: SparsityConfig, dtype) -> Param
 
 
 def apply_mlp(p: Params, x: jax.Array, act: str, sp: SparsityConfig) -> jax.Array:
-    h = apply_linear(p["w_in"], x, sp, gather="col")
+    from repro.kernels import dispatch, epilogue as epilib
+
+    # Will w_out consume quantized rows against a static calibrated
+    # scale?  Then the producing kernel requantizes in its flush and
+    # w_out contracts the narrow rows directly (one function decides
+    # for both sides, so they can never disagree).
+    rq = dispatch.requant_plan(
+        p["w_out"], x.shape[:-1], sp,
+        shard=dispatch.shard_spec_from_env("row"))
+    requant, rq_scale = rq if rq is not None else (None, None)
     if act == "swiglu":
-        g = apply_linear(p["w_gate"], x, sp, gather="col")
-        h = jax.nn.silu(g) * h
+        # gate and up contract the SAME activation tile — one gate-up
+        # dispatch reads it once (fused dual kernel when the plan
+        # allows, one concatenated GEMM otherwise)
+        h = apply_gate_up(p["w_gate"], p["w_in"], x, sp, gather="col",
+                          requant=requant, requant_scale=rq_scale)
     else:
-        h = jax.nn.gelu(h)
+        h = apply_linear(
+            p["w_in"], x, sp, gather="col",
+            epilogue=epilib.make(act="gelu", requant=requant,
+                                 requant_scale=rq_scale))
     h = constrain(h, "batch", None, "model")
-    return apply_linear(p["w_out"], h, sp, gather="row")
+    # when h arrives pre-quantized, w_out dequantizes to fp32 (the
+    # scale dtype) — restore the residual stream's activation dtype
+    return apply_linear(p["w_out"], h, sp, gather="row").astype(x.dtype)
 
 
 # ---------------------------------------------------------------- embed

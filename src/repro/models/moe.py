@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.sparse_linear import SparsityConfig, apply_linear, init_linear
+from repro.core.sparse_linear import (
+    SparsityConfig, apply_gate_up, apply_linear, init_linear)
 
 from .config import ModelConfig
 from .pjit_utils import axis_env
@@ -55,12 +56,23 @@ def init_moe(key, cfg: ModelConfig) -> Params:
 
 
 def _expert_ffn(wp: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    h = apply_linear(wp["w_in"], x, cfg.sparsity)
+    from repro.kernels import dispatch, epilogue as epilib
+
+    rq = dispatch.requant_plan(wp["w_out"], x.shape[:-1], cfg.sparsity)
+    requant, rq_scale = rq if rq is not None else (None, None)
     if cfg.act == "swiglu":
-        h = jax.nn.silu(apply_linear(wp["w_gate"], x, cfg.sparsity)) * h
+        # one gate-up dispatch per expert: the gathered token tile is
+        # read once (hint-less site — inside shard_map/scan bodies)
+        h = apply_gate_up(wp["w_gate"], wp["w_in"], x, cfg.sparsity,
+                          requant=requant, requant_scale=rq_scale)
     else:
-        h = jax.nn.gelu(h)
-    return apply_linear(wp["w_out"], h, cfg.sparsity)
+        h = apply_linear(
+            wp["w_in"], x, cfg.sparsity,
+            epilogue=epilib.make(act="gelu", requant=requant,
+                                 requant_scale=rq_scale))
+    # pre-quantized h dequantizes to fp32 in w_out — keep the expert
+    # output in the token dtype the combine expects
+    return apply_linear(wp["w_out"], h, cfg.sparsity).astype(x.dtype)
 
 
 def _route(router: jax.Array, xf: jax.Array, cfg: ModelConfig):

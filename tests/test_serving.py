@@ -153,6 +153,54 @@ def test_quantized_kv_decode_close_to_fp32_kv():
     assert rel < 0.1, rel
 
 
+@pytest.mark.slow
+def test_paged_decode_parity_under_tp_mesh_subprocess():
+    """Paged decode with a TP mesh installed matches the single-device
+    paged reference: use-site ShardSpecs route the MLP linears through
+    the mesh execution classes, the gate-up / fused-epilogue sites
+    decline to their unfused paths, and none of it may change the
+    generated stream."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src"), str(root / "tests")])
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_axis_env
+        from repro.models import init_params
+        from repro.models.pjit_utils import use_axis_env
+        from test_serving import _paged_logits
+
+        assert jax.device_count() == 8
+        cfg = get_smoke_config("internlm2_1_8b")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        tokens = [3, 17, 9, 41, 5]
+        ref, ref_gen = _paged_logits(params, cfg, tokens, 3, chunks=(2,))
+        mesh = jax.make_mesh((1, 8), ("data", "model"))
+        with use_axis_env(make_axis_env(mesh)):
+            got, got_gen = _paged_logits(params, cfg, tokens, 3,
+                                         chunks=(2,))
+        assert got_gen == ref_gen, (got_gen, ref_gen)
+        for r, g in zip(ref, got):
+            err = np.abs(np.asarray(g) - np.asarray(r)).max()
+            scale = np.abs(np.asarray(r)).max() + 1e-6
+            assert err / scale < 5e-5, err / scale
+        print("TP_PAGED_PARITY_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "TP_PAGED_PARITY_OK" in r.stdout
+
+
 # ------------------------------------------------------------ scheduler
 def _req(rid, plen=5, new=4, arrival=0.0):
     return Request(rid=rid, prompt=tuple(range(1, plen + 1)),
