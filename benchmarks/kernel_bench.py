@@ -274,10 +274,10 @@ def run_epilogue(shape=EPILOGUE_SHAPE, qdtype=None) -> List[dict]:
 
         def _probe(point, dual=False):
             d = kdispatch.plan(
-                mode, b=b, ke=k, o=o, n=sp_n, m=4,
-                dtype=_qdtype(qdtype) if qdtype else x.dtype,
-                dispatch=kdispatch.DispatchConfig(backend=kb),
-                epilogue=point, dual=dual)
+                kdispatch.GemmProblem(mode, b=b, ke=k, o=o, n=sp_n, m=4,
+                                      dtype=_qdtype(qdtype) if qdtype else x.dtype,
+                                      epilogue=point, dual=dual),
+                dispatch=kdispatch.DispatchConfig(backend=kb))
             return (f"{d.kernel}[fused]" if d.epilogue_fused
                     else "jnp-only")
 
@@ -349,10 +349,14 @@ def run_epilogue_exec(shape=(32, 256, 128), qdtype=None) -> List[dict]:
         p2 = _prep(w2, sp_n, qdtype)
         dt = _qdtype(qdtype) if qdtype else x.dtype
         epi = epilib.make(act="gelu", bias=bias)
-        d = kdispatch.plan(mode, b=b, ke=k, o=o, n=sp_n, m=4, dtype=dt,
-                           dispatch=dcfg, epilogue=epi.spec.point)
-        dd = kdispatch.plan(mode, b=b, ke=k, o=o, n=sp_n, m=4, dtype=dt,
-                            dispatch=dcfg, epilogue="silu_mul", dual=True)
+        d = kdispatch.plan(
+            kdispatch.GemmProblem(mode, b=b, ke=k, o=o, n=sp_n, m=4, dtype=dt,
+                                  epilogue=epi.spec.point),
+            dispatch=dcfg)
+        dd = kdispatch.plan(
+            kdispatch.GemmProblem(mode, b=b, ke=k, o=o, n=sp_n, m=4, dtype=dt,
+                                  epilogue="silu_mul", dual=True),
+            dispatch=dcfg)
         if not (d.epilogue_fused and dd.epilogue_fused):
             raise RuntimeError(
                 f"epilogue {tag} {sp_n}:4 did not fuse: "
@@ -529,6 +533,116 @@ def _print_epilogue(args) -> None:
                   f"{r['rel_err_dual_vs_unfused_ref']:.4f}")
 
 
+# decode/MoE activation regime: most rows of the batch are dead (not
+# routed / below threshold) — the masked kernel variants skip whole
+# (b, k) blocks and elide their operand copies via the prefetch kmap
+ACTSPARSE_SHAPE = (1024, 512, 256)
+ACTSPARSE_ROW_SPARSITY = (0.75, 0.9375)
+
+
+def run_actsparse(shape=ACTSPARSE_SHAPE,
+                  sparsities=ACTSPARSE_ROW_SPARSITY) -> List[dict]:
+    """Masked (activation-skip) vs dense dispatch at fixed row sparsity
+    (``--activation-sparsity``).
+
+    Every row carries the exec check — the mask is applied at trace
+    time on all paths and the in-kernel skip is an elision, so masked
+    output must be BITWISE equal to the dense dispatch of the same
+    pre-zeroed input — plus the fraction of (b, k) blocks the live maps
+    let the kernel skip.  Timing fields only materialize on a real
+    kernel backend (``tpu``): interpret-mode Pallas predication is
+    emulation that does not elide the skipped work, so its timings say
+    nothing about the skip (the printer emits one SKIP marker for the
+    gated timing rows instead).  When timing rows do run, masked must
+    beat dense at >=75% row sparsity — that is the acceptance bar, so
+    a non-win raises instead of printing a quiet row.
+    """
+    from repro.core.sparse_linear import convert_layout
+    from repro.kernels.actsparse import ActivationSpec, block_maps
+
+    b, k, o = shape
+    backend = detect_backend()
+    timing = backend == "tpu"
+    dcfg = kdispatch.DispatchConfig(
+        backend=backend if backend == "tpu" else "interpret")
+    x_full = jax.random.normal(jax.random.PRNGKey(0), (b, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, o), jnp.float32)
+    spec = ActivationSpec("zeros")
+    rows: List[dict] = []
+    for fam, sp_n in (("dense", 4), ("compressed", 2), ("gather", 2)):
+        cfg = SparsityConfig(n=sp_n, m=4, mode=fam)
+        p = convert_layout({"w": w}, cfg, fam)
+        for frac in sparsities:
+            live = max(1, int(round(b * (1.0 - frac))))
+            x = x_full.at[live:].set(0.0)
+            d = kdispatch.plan(
+                kdispatch.GemmProblem(fam, b=b, ke=k, o=o, n=sp_n, m=4,
+                                      dtype=x.dtype,
+                                      activation=spec.point),
+                dispatch=dcfg)
+            if not (d.uses_kernel and d.activation_skip):
+                raise RuntimeError(
+                    f"actsparse {fam} did not plan a skip kernel: "
+                    f"{kdispatch.describe(d)}")
+            y_masked = kdispatch.sparse_matmul(x, p, cfg, dispatch=dcfg,
+                                               activation=spec)
+            y_dense = kdispatch.sparse_matmul(x, p, cfg, dispatch=dcfg)
+            _, kmask = block_maps(x, d.blocks[0], d.blocks[1])
+            row = {
+                "name": f"{fam}/{frac:.0%}",
+                "dispatch": f"{d.kernel}(b{d.blocks[0]}/ke{d.blocks[1]}"
+                            f"/o{d.blocks[2]})",
+                "row_sparsity": frac,
+                "blocks_skipped": 1.0 - float(jnp.mean(
+                    kmask.astype(jnp.float32))),
+                "bitwise_equal": bool(jnp.array_equal(y_masked, y_dense)),
+            }
+            if timing:
+                f_m = jax.jit(lambda xx: kdispatch.sparse_matmul(
+                    xx, p, cfg, dispatch=dcfg, activation=spec))
+                f_d = jax.jit(lambda xx: kdispatch.sparse_matmul(
+                    xx, p, cfg, dispatch=dcfg))
+                row["us_dense"] = _time(f_d, x)
+                row["us_masked"] = _time(f_m, x)
+                row["speedup"] = row["us_dense"] / row["us_masked"]
+                if frac >= 0.75 and row["speedup"] <= 1.0:
+                    raise RuntimeError(
+                        f"actsparse {row['name']}: masked dispatch did "
+                        f"not beat dense ({row['speedup']:.2f}x)")
+            rows.append(row)
+    return rows
+
+
+def _print_actsparse(args) -> None:
+    """Emit the activation-sparsity rows: ungated exec checks always,
+    timing rows only where the masked kernels are a perf path (one
+    SKIP marker covers the gated ``kernel_actsparse`` timing rows
+    elsewhere)."""
+    if args.dtype not in ("all", "fp32"):
+        return
+    backend = detect_backend()
+    rows = run_actsparse()
+    for r in rows:
+        print(f"kernel_actsparse-exec/{r['name']},"
+              f"dispatch={r['dispatch']},"
+              f"blocks_skipped={r['blocks_skipped']:.2f},"
+              f"bitwise_equal={r['bitwise_equal']}")
+        if not r["bitwise_equal"]:
+            raise RuntimeError(
+                f"actsparse {r['name']}: masked dispatch is not "
+                f"bit-identical to dense")
+    if backend != "tpu":
+        print(f"kernel_actsparse,SKIP,masked kernels are not a perf "
+              f"path on backend={backend}")
+        return
+    for r in rows:
+        print(f"kernel_actsparse-{r['name']},"
+              f"us_dense={r['us_dense']:.0f},"
+              f"us_masked={r['us_masked']:.0f},"
+              f"speedup={r['speedup']:.2f}x,"
+              f"dispatch={r['dispatch']}")
+
+
 def main(argv: Optional[List[str]] = None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mesh", default=None, metavar="DxM",
@@ -546,10 +660,20 @@ def main(argv: Optional[List[str]] = None):
                          "call carrying the epilogue vs the unfused "
                          "chain, plus the registry execution check "
                          "(the full run includes it too)")
+    ap.add_argument("--activation-sparsity", action="store_true",
+                    help="run only the activation-sparsity sweep: "
+                         "masked (in-kernel block skip) vs dense "
+                         "dispatch at fixed row sparsity, with the "
+                         "bitwise elision check (the full run includes "
+                         "it too; timing rows are gated to real kernel "
+                         "backends)")
     args = ap.parse_args([] if argv is None else argv)
     print(f"kernel_backend,{detect_backend()}")
     if args.epilogue:
         _print_epilogue(args)
+        return None
+    if args.activation_sparsity:
+        _print_actsparse(args)
         return None
     if args.dtype in ("all", "fp32"):
         for r in run():
@@ -590,6 +714,7 @@ def main(argv: Optional[List[str]] = None):
                   f"rel_err_vs_dequant_ref="
                   f"{r['rel_err_vs_dequant_ref']:.4f}")
     _print_epilogue(args)
+    _print_actsparse(args)
     if args.mesh:
         d_, m_ = map(int, args.mesh.lower().split("x"))
         if len(jax.devices()) < d_ * m_:

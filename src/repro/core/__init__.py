@@ -28,7 +28,6 @@ from .rowwise import (
     rowwise_tiers,
 )
 from .quantize import (
-    calibrate_activation_scales,
     dequantize,
     has_static_scales,
     is_linear_leaf,
@@ -37,13 +36,12 @@ from .quantize import (
     quantize_per_channel,
     quantize_rows,
     quantize_rows_static,
-    quantize_tree,
 )
 from .sparse_linear import (
     SparsityConfig,
+    apply_gate_up,
     apply_linear,
     convert_layout,
-    convert_to_serving,
     gather_hint,
     init_linear,
 )

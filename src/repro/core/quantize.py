@@ -14,7 +14,7 @@ machinery serves two execution classes:
 
 In both classes:
 
-- **weights** are quantized offline (at ``convert_to_serving`` time)
+- **weights** are quantized offline (at ``convert_layout`` time)
   with **per-output-channel symmetric scales**:
   ``w ~= q.astype(f32) * scale`` with ``scale = absmax(channel) / qmax``
   (``qmax`` = 127 for int8, 448 for fp8 e4m3fn);
@@ -36,8 +36,8 @@ dtype-agnostic.
 
 **Static activation scales** are the decode-side analogue: instead of the
 per-row dynamic absmax pass before every quantized contraction,
-:func:`calibrate_activation_scales` runs one forward over a calibration
-batch, records the per-site activation absmax through the dispatch
+``repro.serving.prepare`` (with ``static_scales=True``) runs one
+forward over a calibration batch, records the per-site activation absmax through the dispatch
 engine, and attaches a scalar ``"act_scale"`` leaf to every quantized
 linear.  Kernels then quantize activations against the fixed scale —
 no reduction over the row on the decode hot path — and the scale rides
@@ -72,8 +72,6 @@ __all__ = [
     "quantize_rows",
     "quantize_rows_static",
     "quantize_linear",
-    "quantize_tree",
-    "calibrate_activation_scales",
     "calibration_active",
     "record_calibration",
 ]
@@ -90,11 +88,10 @@ _DEPRECATION_WARNED: set = set()
 def warn_deprecated_once(name: str, hint: str) -> None:
     """Fire ``DeprecationWarning`` for ``name`` once per process.
 
-    The thin shims left behind by the ``repro.serving.prepare`` API
-    collapse (``convert_to_serving``, ``quantize_tree``,
-    ``calibrate_activation_scales``) all funnel through here so old call
-    sites keep working but nudge — once, not per call — toward the one
-    supported offline-prep entry point.
+    Retired call spellings (today: the kwarg form of
+    ``repro.kernels.dispatch.plan``) funnel through here so old call
+    sites keep working but nudge — once, not per call — toward the
+    canonical API.
     """
     if name in _DEPRECATION_WARNED:
         return
@@ -115,7 +112,7 @@ QUANT_DTYPES: Dict[Any, float] = {
     jnp.dtype(jnp.float8_e4m3fn): 448.0,
 }
 
-# user-facing aliases (launcher flags, convert_to_serving targets)
+# user-facing aliases (launcher flags, convert_layout targets)
 _DTYPE_ALIASES = {
     "int8": jnp.int8,
     "fp8": jnp.float8_e4m3fn,
@@ -177,7 +174,7 @@ def has_static_scales(params: Dict[str, Any]) -> bool:
 def is_linear_leaf(tree: Any) -> bool:
     """One flat SparseLinear layout dict (dense ``{"w"}`` possibly with a
     ``scale``, compressed, or gather).  THE shared structural detection:
-    ``dispatch.iter_linear_items`` and :func:`quantize_tree` both key off
+    ``dispatch.iter_linear_items`` and :func:`_quantize_tree` both key off
     it, so the engine's tree walk and the quantizer cannot drift.  A
     rowwise container is NOT a leaf here — its nested tier segments are
     (the walker recurses; the quantizer handles the nest explicitly).
@@ -263,7 +260,7 @@ def quantize_rows_static(
     """Static-scale quantization of activations (decode fast path).
 
     ``act_scale`` is the scalar calibrated scale attached by
-    :func:`calibrate_activation_scales`; no per-row reduction runs —
+    serving-prep calibration; no per-row reduction runs —
     the whole absmax pass :func:`quantize_rows` does per call is skipped.
     Values beyond the calibrated range saturate at ±qmax (standard
     static quantization semantics).  Returns ``(x_q, x_scale)`` with
@@ -313,15 +310,6 @@ def _quantize_tree(tree, dtype=jnp.int8):
     """
     dt = canonical_qdtype(dtype)
     return map_linear_leaves(tree, lambda leaf: quantize_linear(leaf, dt))
-
-
-def quantize_tree(tree, dtype=jnp.int8):
-    """Deprecated: whole-tree quantization now rides
-    ``repro.serving.prepare(params, ServingSpec(qdtype=...))``."""
-    warn_deprecated_once(
-        "quantize_tree",
-        "use repro.serving.prepare(params, ServingSpec(qdtype=...))")
-    return _quantize_tree(tree, dtype)
 
 
 def map_linear_leaves(tree, fn: Callable[[Dict[str, Any]], Dict[str, Any]]):
@@ -380,7 +368,7 @@ def _calibrating(store: Dict[int, float]):
     if _ACTIVE_STORE[0] is not None:
         raise RuntimeError(
             "a calibration is already active in this process — "
-            "calibrate_activation_scales calls cannot run concurrently "
+            "calibration passes cannot run concurrently "
             "(the engine's io_callback resolves one process-global store)")
     _ACTIVE_STORE[0] = store
     try:
@@ -411,19 +399,6 @@ def record_calibration(calib_id: jax.Array, x: jax.Array) -> None:
     jax.debug.callback(_fold, calib_id.reshape(()), absmax, ordered=True)
 
 
-def calibrate_activation_scales(
-    params,
-    batch_fn: Callable[[Any], Any],
-) -> Tuple[Any, int]:
-    """Deprecated: calibration now rides ``repro.serving.prepare`` with
-    ``ServingSpec(static_scales=True)`` and a calibration batch."""
-    warn_deprecated_once(
-        "calibrate_activation_scales",
-        "use repro.serving.prepare(params, ServingSpec(static_scales=True), "
-        "cfg=..., calib_tokens=...)")
-    return _calibrate_activation_scales(params, batch_fn)
-
-
 def _calibrate_activation_scales(
     params,
     batch_fn: Callable[[Any], Any],
@@ -431,8 +406,8 @@ def _calibrate_activation_scales(
     """Attach static activation scales to every quantized linear leaf.
 
     ``params`` is a (possibly layer-stacked) serving params tree whose
-    linears are already quantized (``quantize_tree`` /
-    ``convert_to_serving(..., quantize="int8"|"fp8")``).  ``batch_fn``
+    linears are already quantized (``repro.serving.prepare`` /
+    ``convert_layout(..., quantize="int8"|"fp8")``).  ``batch_fn``
     runs one representative forward over the calibration batch given a
     params tree — e.g. ``lambda p: forward(p, cfg, tokens=batch)`` —
     while the engine records, per linear site, the max |activation| it

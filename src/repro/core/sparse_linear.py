@@ -35,7 +35,6 @@ __all__ = [
     "apply_linear",
     "apply_gate_up",
     "convert_layout",
-    "convert_to_serving",
     "COLUMN_PARALLEL",
     "ROW_PARALLEL",
     "gather_hint",
@@ -105,7 +104,7 @@ def init_linear(
         # at 2:4, the rest dense 4:4), so init stays shape-uniform and
         # vmap/scan-friendly for stacked layers.  Real checkpoints get
         # their data-dependent lossless cover offline via
-        # ``convert_to_serving(..., "rowwise")`` — compression is an
+        # ``convert_layout(..., "rowwise")`` — compression is an
         # offline step, exactly as in the paper.
         o1 = o2 = o // 4
         segs: Dict[str, Any] = {}
@@ -143,6 +142,8 @@ def apply_linear(
     params: Dict[str, Any], x: jax.Array, cfg: SparsityConfig,
     gather: Optional[str] = None,
     epilogue=None,
+    activation=None,
+    local: bool = False,
 ) -> jax.Array:
     """y = x @ W with the mode's lowering. x: (..., K) -> (..., O).
 
@@ -151,6 +152,13 @@ def apply_linear(
     into the kernel's flush when the plan allows, and applies with the
     unfused jnp reference otherwise.  Rowwise layouts always apply it
     unfused, after the cross-tier channel un-permutation.
+
+    ``activation`` (a ``repro.kernels.actsparse.ActivationSpec``) opts
+    this site into the dynamic activation-sparsity execution class: the
+    induced mask is applied to ``x`` on every route, and eligible kernel
+    plans additionally skip dead (row-block, K-block) tiles in-kernel.
+    ``local=True`` marks a call already inside a shard_map body (MoE
+    expert linears): planning then never consults the mesh env.
 
     All modes route through the kernel dispatch engine
     (``repro.kernels.dispatch.sparse_matmul``): on TPU (or with the
@@ -173,10 +181,17 @@ def apply_linear(
         shard_spec_from_env, sparse_matmul)
     from repro.models.pjit_utils import constrain       # local: avoid cycle
 
-    shard = shard_spec_from_env(gather) if gather is not None else None
+    shard = (shard_spec_from_env(gather)
+             if gather is not None and not local else None)
 
     if cfg.mode == "rowwise":
+        from repro.kernels.actsparse import apply_mask
         from .rowwise import rowwise_apply
+        if activation is not None:
+            # mask pass only: the per-tier dispatches under rowwise see
+            # already-masked rows (the skip is an optimization the tier
+            # segments decline; numerics are owned by the mask)
+            x = apply_mask(x, activation)
         return rowwise_apply(params, x, cfg, shard=shard,
                              epilogue=epilogue)
 
@@ -190,36 +205,61 @@ def apply_linear(
         return w
 
     return sparse_matmul(x, params, cfg, constrain_fn=_g, shard=shard,
-                         epilogue=epilogue)
+                         epilogue=epilogue, activation=activation,
+                         local=local)
 
 
 def apply_gate_up(
     params_g: Dict[str, Any], params_u: Dict[str, Any], x: jax.Array,
     cfg: SparsityConfig, gather: Optional[str] = None,
-    requant: Optional[str] = None, requant_scale=None,
+    epilogue=None, activation=None, local: bool = False,
 ) -> jax.Array:
     """``silu(x @ Wg) * (x @ Wu)`` — the gate-up projection as ONE
     engine dispatch (``repro.kernels.dispatch.gate_up_matmul``).
 
+    ``epilogue`` is the SAME ``Epilogue`` object ``apply_linear`` takes
+    — it must sit on the ``silu_mul`` lattice point, optionally extended
+    with ``requant:<dtype>`` (from ``repro.kernels.dispatch.
+    requant_plan`` on the consuming linear).  The former ``requant=`` /
+    ``requant_scale=`` side-channel is gone.
+
     When the pair is fusible the engine contracts each activation tile
-    against BOTH weights in one pallas_call (the ``silu_mul`` epilogue
-    point, optionally extended with a fused requantize for the next
-    quantized linear); otherwise dense/compressed pairs still collapse
-    into one concatenated GEMM so the activation is read once, and only
-    rowwise layouts (whose tier segmentation is per-site) fall back to
-    two ``apply_linear`` calls.
+    against BOTH weights in one pallas_call, emitting the epilogue
+    directly; otherwise dense/compressed pairs still collapse into one
+    concatenated GEMM so the activation is read once, and only rowwise
+    layouts (whose tier segmentation is per-site) fall back to two
+    ``apply_linear`` calls.  That rowwise fallback APPLIES a requested
+    requant with the reference row quantization (bit-identical to the
+    fused emission on the same float rows) rather than silently
+    dropping it.  ``activation`` / ``local`` thread exactly as on
+    ``apply_linear``.
     """
+    from repro.kernels import epilogue as epilib        # local: avoid cycle
     from repro.kernels.dispatch import (                # local: avoid cycle
         gate_up_matmul, shard_spec_from_env)
     from repro.models.pjit_utils import constrain       # local: avoid cycle
 
+    if epilogue is not None and (epilogue.spec.act != "silu_mul"
+                                 or epilogue.spec.bias):
+        raise ValueError(
+            f"apply_gate_up epilogue must sit on the silu_mul lattice "
+            f"point (optionally +requant), got {epilogue.spec.point!r}")
+
     if cfg.mode == "rowwise" or "rowwise" in params_g or "rowwise" in params_u:
-        y_g = apply_linear(params_g, x, cfg, gather=gather)
-        y_u = apply_linear(params_u, x, cfg, gather=gather)
+        y_g = apply_linear(params_g, x, cfg, gather=gather,
+                           activation=activation, local=local)
+        y_u = apply_linear(params_u, x, cfg, gather=gather,
+                           activation=activation, local=local)
         h = jax.nn.silu(y_g.astype(jnp.float32)) * y_u.astype(jnp.float32)
+        if epilogue is not None and epilogue.spec.requant is not None:
+            # same clip-before-cast contract as the fused kernel flush:
+            # the consumer contracts identical narrow rows either way
+            return epilib.requant_rows(h, epilogue.requant_scale,
+                                       epilogue.spec.requant)
         return h.astype(y_g.dtype)
 
-    shard = shard_spec_from_env(gather) if gather is not None else None
+    shard = (shard_spec_from_env(gather)
+             if gather is not None and not local else None)
 
     def _g(w):
         if not cfg.fsdp_gather:
@@ -231,8 +271,8 @@ def apply_gate_up(
         return w
 
     return gate_up_matmul(x, params_g, params_u, cfg, constrain_fn=_g,
-                          shard=shard, requant=requant,
-                          requant_scale=requant_scale)
+                          shard=shard, epilogue=epilogue,
+                          activation=activation, local=local)
 
 
 def convert_layout(
@@ -286,22 +326,3 @@ def convert_layout(
         vals = w.reshape(k, o)[blk + idx, :]
         return _q({"values": vals, "gather_idx": idx})
     raise ValueError(f"unknown target {target_mode}")
-
-
-def convert_to_serving(
-    params: Dict[str, Any], cfg: SparsityConfig, target_mode: str = "compressed",
-    quantize: Optional[str] = None,
-) -> Dict[str, Any]:
-    """Deprecated alias for :func:`convert_layout`.
-
-    Offline serving preparation now goes through
-    ``repro.serving.prepare(params, ServingSpec(...))``, which composes
-    layout conversion, quantization, scale calibration and mesh placement
-    in one step; ``convert_layout`` remains as the bare layout mechanism.
-    """
-    from .quantize import warn_deprecated_once
-    warn_deprecated_once(
-        "convert_to_serving",
-        "use repro.serving.prepare(params, ServingSpec(...)) or "
-        "repro.core.sparse_linear.convert_layout for the bare mechanism")
-    return convert_layout(params, cfg, target_mode, quantize=quantize)

@@ -1,0 +1,116 @@
+"""Dynamic activation sparsity: trace-time masks + per-block skip maps.
+
+The engine's fourth dispatch axis.  Static N:M weight sparsity is a
+*layout* (decided at prepare time); activation sparsity is *dynamic* —
+ReLU/top-k zeros and MoE routing holes appear per batch — so it rides
+the activations as an :class:`ActivationSpec` and is realized in two
+steps that keep every fallback bit-matching:
+
+1. **Mask** (always): :func:`apply_mask` zeroes the dropped entries of
+   ``x`` at trace time.  Every route — jnp reference, shard_map body,
+   grad — contracts the SAME masked operand, so declining the skip never
+   changes numerics.
+2. **Skip** (optional): on a single-placement kernel decision the run
+   adapter computes :func:`block_maps` — a per-(row-block, K-block)
+   liveness mask from one cheap blockwise absmax pass — and hands them
+   to the masked kernel variant as scalar-prefetch operands.  Dead
+   blocks contribute exact zeros to the fp32/int32 accumulator, so the
+   kernel elides both the dot *and* the HBM->VMEM copies (the index map
+   re-addresses the previous live block, the same load-elision trick the
+   BK-gather kernels use for their permuted reads) and still produces
+   bit-identical output.
+
+This is the SparCE zero-operand-skipping idea (PAPERS.md) lifted from
+the register level to the tile level, and — combined with the N:M
+compressed weight operand — the SparseZipper sparse x sparse case on
+one matrix engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ActivationSpec", "apply_mask", "block_maps"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationSpec:
+    """How the use-site wants its activations sparsified (or already is).
+
+    ``kind``:
+      * ``"topk"``      keep the ``k`` largest-|x| entries per row
+      * ``"threshold"`` zero entries with ``|x| <= threshold``
+      * ``"zeros"``     ``x`` is already sparse (post-ReLU rows, MoE
+                        routing holes) — the mask pass is the identity
+                        and only the block-map detection runs
+    """
+
+    kind: str
+    k: Optional[int] = None
+    threshold: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("topk", "threshold", "zeros"):
+            raise ValueError(f"unknown activation-sparsity kind {self.kind!r}")
+        if self.kind == "topk" and (self.k is None or self.k <= 0):
+            raise ValueError("topk activation sparsity needs k > 0")
+
+    @property
+    def point(self) -> str:
+        """Canonical string for decisions, describe(), and cache keys."""
+        if self.kind == "topk":
+            return f"top{self.k}"
+        if self.kind == "threshold":
+            return f"thr{self.threshold:g}"
+        return "zeros"
+
+
+def apply_mask(x: jax.Array, spec: ActivationSpec) -> jax.Array:
+    """The induced mask, applied to ``x`` (identity for ``"zeros"``).
+
+    This runs on EVERY route — it is the semantics of the execution
+    class; the in-kernel block skip is merely an optimization over the
+    zeros this pass (or the caller) produced.
+    """
+    if spec.kind == "zeros":
+        return x
+    mag = jnp.abs(x.astype(jnp.float32))
+    if spec.kind == "threshold":
+        keep = mag > spec.threshold
+    else:  # topk: per-row kth-largest magnitude is the keep boundary
+        k = min(spec.k, x.shape[-1])
+        kth = jax.lax.top_k(mag, k)[0][..., -1:]
+        keep = mag >= kth
+    return jnp.where(keep, x, jnp.zeros_like(x))
+
+
+def block_maps(x2: jax.Array, block_b: int, block_ke: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Per-(row-block, K-block) skip maps for a masked (B, K) operand.
+
+    Returns ``(kmap, kmask)``, both ``(B/block_b, K/block_ke)`` int32:
+    ``kmask[i, kk]`` is 1 iff block (i, kk) holds any nonzero entry, and
+    ``kmap[i, kk]`` is the K-block index the kernel should *load* for
+    step (i, kk) — dead blocks re-address the most recent live block
+    (running max of live indices), so consecutive grid steps over dead
+    blocks see an unchanged index map and Pallas elides the copies.
+
+    One blockwise absmax pass over the (already masked) operand: the
+    cheap trace-time detection the tentpole calls for.  Works on narrow
+    operands too (int8/fp8 rows quantized from zeros are zero).
+    """
+    b, ke = x2.shape
+    if b % block_b != 0 or ke % block_ke != 0:
+        raise ValueError(f"block_maps: ({b},{ke}) not divisible by "
+                         f"({block_b},{block_ke})")
+    nb, nk = b // block_b, ke // block_ke
+    mag = jnp.abs(x2.astype(jnp.float32))
+    live = mag.reshape(nb, block_b, nk, block_ke).max(axis=(1, 3)) > 0
+    kmask = live.astype(jnp.int32)
+    ids = jnp.where(live, jax.lax.broadcasted_iota(jnp.int32, live.shape, 1), 0)
+    kmap = jax.lax.cummax(ids, axis=1)
+    return kmap, kmask

@@ -52,15 +52,21 @@ _STATS = {"hits": 0, "misses": 0}
 
 
 def cache_key(kernel: str, b: int, ke: int, o: int, n: int, m: int, dtype,
-              epilogue: Optional[str] = None) -> str:
+              epilogue: Optional[str] = None,
+              activation: Optional[str] = None) -> str:
     """Deterministic per-problem key; dtype is a first-class axis (an int8
     problem and its fp32 twin must never share tuned blocks).  A fused
     epilogue lattice point (``"bias+silu"``, ``"silu_mul+requant:int8"``,
     ...) is likewise a key axis: the flush cost changes the optimal
-    blocks, so fused and bare plans never share tuned entries."""
+    blocks, so fused and bare plans never share tuned entries.  An
+    in-kernel activation-sparsity skip (``"top64"``, ``"thr0.5"``,
+    ``"zeros"``) changes the per-block work the same way, so it gets its
+    own tail too."""
     from repro.kernels.registry import dtype_name
 
     tail = f"_epi[{epilogue}]" if epilogue else ""
+    if activation:
+        tail += f"_act[{activation}]"
     return f"{kernel}/b{b}_ke{ke}_o{o}_n{n}m{m}_{dtype_name(dtype)}{tail}"
 
 

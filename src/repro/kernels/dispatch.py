@@ -75,13 +75,16 @@ from repro.core import quantize as quant
 from repro.core.ste import srste_prune
 from repro.kernels import autotune, registry
 from repro.kernels import epilogue as epilib
-from repro.kernels.epilogue import Epilogue, EpilogueSpec
+from repro.kernels.actsparse import ActivationSpec, apply_mask, block_maps
+from repro.kernels.epilogue import Epilogue
 from repro.kernels.registry import (KernelEntry, dtype_name,
                                     largest_fitting_block)
 
 __all__ = [
+    "ActivationSpec",
     "DispatchConfig",
     "DispatchDecision",
+    "GemmProblem",
     "ShardSpec",
     "shard_spec_from_env",
     "sparse_matmul",
@@ -196,6 +199,41 @@ def shard_spec_from_env(gather: Optional[str] = None) -> Optional[ShardSpec]:
 
 
 @dataclasses.dataclass(frozen=True)
+class GemmProblem:
+    """ONE value object describing a GEMM the engine may plan.
+
+    This is the canonical input to :func:`plan`: every dispatch axis —
+    execution mode, global (b, ke, o) shape, N:M geometry, storage
+    dtype, autodiff/mesh context, epilogue lattice point, dual gate-up
+    pairing, and the dynamic ``activation`` sparsity point
+    (``ActivationSpec.point``) — lives on the one frozen object, so
+    ``plan``, ``plan_for``, ``pretune``, the dispatch report, and the
+    autotune cache key are all derived from the same problem identity
+    and cannot drift.  The legacy ``plan(mode, b=..., ...)`` kwarg
+    spelling still works through a warn-once shim.
+
+    ``epilogue`` and ``activation`` are the *canonical point strings*
+    (``EpilogueSpec.point`` / ``ActivationSpec.point``), not the operand
+    -carrying objects — a problem is an identity, not an execution.
+    """
+
+    mode: str
+    b: int
+    ke: int
+    o: int
+    n: int = 4
+    m: int = 4
+    dtype: Any = jnp.float32
+    differentiating: bool = False
+    sharded: bool = False
+    shard: Optional[ShardSpec] = None
+    static_scales: bool = False
+    epilogue: Optional[str] = None
+    dual: bool = False
+    activation: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class DispatchDecision:
     """What the engine chose for one problem, and why.
 
@@ -224,6 +262,8 @@ class DispatchDecision:
     dtype: Optional[str] = None    # canonical execution dtype the plan ran on
     epilogue: Optional[str] = None     # requested lattice point (EpilogueSpec.point)
     epilogue_fused: bool = False       # True: kernel flush applies it in VMEM
+    activation: Optional[str] = None   # activation-sparsity point (ActivationSpec.point)
+    activation_skip: bool = False      # True: kernel elides dead K-blocks in-kernel
 
     @property
     def uses_kernel(self) -> bool:
@@ -239,6 +279,8 @@ def describe(d: DispatchDecision) -> str:
         base = f"{d.mode}: {JNP_REFERENCE} ({d.reason})"
         if d.epilogue is not None:
             base += f" epilogue={d.epilogue}[jnp]"
+        if d.activation is not None:
+            base += f" activation={d.activation}[jnp]"
         return base
     bb, bke, bo = d.blocks
     base = (f"{d.mode}: {d.kernel}[{d.backend}] "
@@ -248,6 +290,9 @@ def describe(d: DispatchDecision) -> str:
     if d.epilogue is not None:
         base += f" epilogue={d.epilogue}" + (
             "[fused]" if d.epilogue_fused else "[jnp]")
+    if d.activation is not None:
+        base += f" activation={d.activation}" + (
+            "[skip]" if d.activation_skip else "[mask-only]")
     if d.uses_shard_map:
         lb, lke, lo = d.local_dims
         sb, ske, so = d.shards
@@ -361,11 +406,19 @@ def _epi_kwargs(epilogue: Optional[Epilogue]) -> Dict[str, Any]:
 
 
 def _run_tile_gemm(x2, params, cfg, g, blocks, interpret, out_dtype,
-                   epilogue=None):
-    from repro.kernels.tile_gemm.kernel import tile_gemm
+                   epilogue=None, activation=None):
+    from repro.kernels.tile_gemm.kernel import tile_gemm, tile_gemm_masked
 
     bb, bke, bo = blocks
     w = g(params["w"]).astype(x2.dtype)
+    if activation is not None:
+        # x2 is already masked (sparse_matmul applies the mask pass on
+        # every route); the skip maps only elide dead-block work
+        kmap, kmask = block_maps(x2, bb, bke)
+        return tile_gemm_masked(x2, w, kmap, kmask,
+                                block_b=bb, block_k=bke, block_o=bo,
+                                out_dtype=out_dtype, interpret=interpret,
+                                **_epi_kwargs(epilogue))
     return tile_gemm(x2, w, block_b=bb, block_k=bke, block_o=bo,
                      out_dtype=out_dtype, interpret=interpret,
                      **_epi_kwargs(epilogue))
@@ -389,11 +442,17 @@ def _fit_nm_spmm(b, ke, o, n, m, dtype):
 
 
 def _run_nm_spmm(x2, params, cfg, g, blocks, interpret, out_dtype,
-                 epilogue=None):
-    from repro.kernels.nm_spmm.kernel import nm_spmm
+                 epilogue=None, activation=None):
+    from repro.kernels.nm_spmm.kernel import nm_spmm, nm_spmm_masked
 
     bb, bke, bo = blocks
     v = g(params["values"]).astype(x2.dtype)
+    if activation is not None:
+        kmap, kmask = block_maps(x2, bb, bke)
+        return nm_spmm_masked(x2, v, params["meta_packed"], kmap, kmask,
+                              cfg.n, block_b=bb, block_o=bo, block_ke=bke,
+                              out_dtype=out_dtype, interpret=interpret,
+                              **_epi_kwargs(epilogue))
     return nm_spmm(x2, v, params["meta_packed"], cfg.n,
                    block_b=bb, block_o=bo, block_ke=bke,
                    out_dtype=out_dtype, interpret=interpret,
@@ -413,8 +472,9 @@ def _fit_nm_gather(b, ke, o, n, m, dtype):
 
 
 def _run_nm_gather(x2, params, cfg, g, blocks, interpret, out_dtype,
-                   epilogue=None):
-    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_bk
+                   epilogue=None, activation=None):
+    from repro.kernels.nm_spmm_gather.kernel import (
+        nm_spmm_gather_bk, nm_spmm_gather_bk_masked)
 
     bb, bke, bo = blocks
     v = g(params["values"]).astype(x2.dtype)
@@ -422,6 +482,13 @@ def _run_nm_gather(x2, params, cfg, g, blocks, interpret, out_dtype,
     # bk layout: natural (B, K_eff) in / (B, O) out — the row gather and
     # both transposes live in the kernel's index map, so no permuted
     # activation copy is ever materialized in HBM
+    if activation is not None:
+        kmap, kmask = block_maps(x2, bb, bke)
+        return nm_spmm_gather_bk_masked(
+            x2, v, idx, kmap, kmask, cfg.n,
+            block_b=bb, block_o=bo, block_ke=bke,
+            out_dtype=out_dtype, interpret=interpret,
+            **_epi_kwargs(epilogue))
     return nm_spmm_gather_bk(x2, v, idx, cfg.n,
                              block_b=bb, block_o=bo, block_ke=bke,
                              out_dtype=out_dtype, interpret=interpret,
@@ -485,20 +552,20 @@ def _run_nm_gather_dual(x2, pg, pu, cfg, g, blocks, interpret, out_dtype,
 
 
 registry.register(KernelEntry(
-    name="tile_gemm", mode="dense",
+    name="tile_gemm", mode="dense", activation_skip=True,
     fit_blocks=_fit_tile_gemm, run=_run_tile_gemm,
     run_dual=_run_tile_gemm_dual,
     candidates=lambda b, ke, o, n, m, dtype: _enumerate(b, ke, o, 1),
 ))
 registry.register(KernelEntry(
-    name="nm_spmm", mode="compressed",
+    name="nm_spmm", mode="compressed", activation_skip=True,
     fit_blocks=_fit_nm_spmm, run=_run_nm_spmm,
     run_dual=_run_nm_spmm_dual,
     candidates=lambda b, ke, o, n, m, dtype: _enumerate(
         b, ke, o, _nm_ke_multiple(n)),
 ))
 registry.register(KernelEntry(
-    name="nm_spmm_gather", mode="gather",
+    name="nm_spmm_gather", mode="gather", activation_skip=True,
     fit_blocks=_fit_nm_gather, run=_run_nm_gather,
     run_dual=_run_nm_gather_dual,
     candidates=lambda b, ke, o, n, m, dtype: _enumerate(b, ke, o, 4),
@@ -645,12 +712,24 @@ def _gather_q_kernel(dtype):
 
 
 def _run_tile_gemm_q(x2, params, cfg, g, blocks, interpret, out_dtype,
-                     epilogue=None):
+                     epilogue=None, activation=None):
     bb, bke, bo = blocks
     b = x2.shape[0]
     qdt = params["w"].dtype
     xq, xs = _pad_rows(*_quantize_acts(x2, params, qdt), _q_padded_b(b))
     ws = params[quant.SCALE_KEY].reshape(1, -1)
+    if activation is not None:
+        from repro.kernels.tile_gemm.kernel import tile_gemm_masked
+
+        # maps come from the PADDED narrow rows: zeros quantize to zero
+        # (and padding rows ARE zero), so dead blocks stay detectable
+        kmap, kmask = block_maps(xq, bb, bke)
+        y = tile_gemm_masked(xq, g(params["w"]), kmap, kmask, xs, ws,
+                             acc_dtype=_dual_q_acc(qdt),
+                             block_b=bb, block_k=bke, block_o=bo,
+                             out_dtype=out_dtype, interpret=interpret,
+                             **_epi_kwargs(epilogue))
+        return y[:b]
     y = _dense_q_kernel(qdt)(xq, g(params["w"]), xs, ws,
                              block_b=bb, block_k=bke, block_o=bo,
                              out_dtype=out_dtype, interpret=interpret,
@@ -666,12 +745,23 @@ def _partial_tile_gemm_q(xq, params, cfg, blocks, interpret):
 
 
 def _run_nm_spmm_q(x2, params, cfg, g, blocks, interpret, out_dtype,
-                   epilogue=None):
+                   epilogue=None, activation=None):
     bb, bke, bo = blocks
     b = x2.shape[0]
     qdt = params["values"].dtype
     xq, xs = _pad_rows(*_quantize_acts(x2, params, qdt), _q_padded_b(b))
     ws = params[quant.SCALE_KEY].reshape(1, -1)
+    if activation is not None:
+        from repro.kernels.nm_spmm.kernel import nm_spmm_masked
+
+        kmap, kmask = block_maps(xq, bb, bke)
+        y = nm_spmm_masked(xq, g(params["values"]), params["meta_packed"],
+                           kmap, kmask, cfg.n, xs, ws,
+                           acc_dtype=_dual_q_acc(qdt),
+                           block_b=bb, block_o=bo, block_ke=bke,
+                           out_dtype=out_dtype, interpret=interpret,
+                           **_epi_kwargs(epilogue))
+        return y[:b]
     y = _nm_q_kernel(qdt)(xq, g(params["values"]), params["meta_packed"],
                           xs, ws, cfg.n,
                           block_b=bb, block_o=bo, block_ke=bke,
@@ -688,8 +778,9 @@ def _partial_nm_spmm_q(xq, params, cfg, blocks, interpret):
 
 
 def _run_nm_gather_q(x2, params, cfg, g, blocks, interpret, out_dtype,
-                     epilogue=None):
-    from repro.kernels.nm_spmm_gather.kernel import nm_spmm_gather_bk
+                     epilogue=None, activation=None):
+    from repro.kernels.nm_spmm_gather.kernel import (
+        nm_spmm_gather_bk, nm_spmm_gather_bk_masked)
 
     bb, bke, bo = blocks
     b = x2.shape[0]
@@ -698,6 +789,15 @@ def _run_nm_gather_q(x2, params, cfg, g, blocks, interpret, out_dtype,
     ws = params[quant.SCALE_KEY].reshape(1, -1)
     idx = params["gather_idx"].reshape(-1, 1)
     # bk layout (see _run_nm_gather): no xq.T / y_t.T HBM round trips
+    if activation is not None:
+        kmap, kmask = block_maps(xq, bb, bke)
+        y = nm_spmm_gather_bk_masked(
+            xq, g(params["values"]), idx, kmap, kmask, cfg.n, xs, ws,
+            acc_dtype=jnp.int32 if _is_int8(qdt) else jnp.float32,
+            block_b=bb, block_o=bo, block_ke=bke,
+            out_dtype=out_dtype, interpret=interpret,
+            **_epi_kwargs(epilogue))
+        return y[:b]
     y = nm_spmm_gather_bk(xq, g(params["values"]), idx, cfg.n, xs, ws,
                           acc_dtype=jnp.int32 if _is_int8(qdt)
                           else jnp.float32,
@@ -788,7 +888,7 @@ def _q_candidates(b, ke, o, ke_multiple):
 
 
 registry.register(KernelEntry(
-    name="tile_gemm_int8", mode="dense", priority=10,
+    name="tile_gemm_int8", mode="dense", priority=10, activation_skip=True,
     fit_blocks=_fit_tile_gemm_int8, run=_run_tile_gemm_q,
     run_dual=_run_tile_gemm_dual_q,
     quantized=True, run_quantized=_partial_tile_gemm_q,
@@ -796,7 +896,7 @@ registry.register(KernelEntry(
         b, ke, o, _Q_SUBLANE),
 ))
 registry.register(KernelEntry(
-    name="nm_spmm_int8", mode="compressed", priority=10,
+    name="nm_spmm_int8", mode="compressed", priority=10, activation_skip=True,
     fit_blocks=_fit_nm_spmm_int8, run=_run_nm_spmm_q,
     run_dual=_run_nm_spmm_dual_q,
     quantized=True, run_quantized=_partial_nm_spmm_q,
@@ -804,7 +904,7 @@ registry.register(KernelEntry(
         b, ke, o, _q_ke_multiple(n)),
 ))
 registry.register(KernelEntry(
-    name="nm_spmm_gather_int8", mode="gather", priority=10,
+    name="nm_spmm_gather_int8", mode="gather", priority=10, activation_skip=True,
     fit_blocks=_fit_nm_gather_int8, run=_run_nm_gather_q,
     run_dual=_run_nm_gather_dual_q,
     quantized=True, run_quantized=_partial_nm_gather_q,
@@ -812,7 +912,7 @@ registry.register(KernelEntry(
         b, ke, o, _q_ke_multiple(n)),
 ))
 registry.register(KernelEntry(
-    name="tile_gemm_fp8", mode="dense", priority=10,
+    name="tile_gemm_fp8", mode="dense", priority=10, activation_skip=True,
     fit_blocks=_fit_tile_gemm_fp8, run=_run_tile_gemm_q,
     run_dual=_run_tile_gemm_dual_q,
     quantized=True, run_quantized=_partial_tile_gemm_q,
@@ -821,7 +921,7 @@ registry.register(KernelEntry(
         b, ke, o, _Q_SUBLANE),
 ))
 registry.register(KernelEntry(
-    name="nm_spmm_fp8", mode="compressed", priority=10,
+    name="nm_spmm_fp8", mode="compressed", priority=10, activation_skip=True,
     fit_blocks=_fit_nm_spmm_fp8, run=_run_nm_spmm_q,
     run_dual=_run_nm_spmm_dual_q,
     quantized=True, run_quantized=_partial_nm_spmm_q,
@@ -830,7 +930,7 @@ registry.register(KernelEntry(
         b, ke, o, _q_ke_multiple(n)),
 ))
 registry.register(KernelEntry(
-    name="nm_spmm_gather_fp8", mode="gather", priority=10,
+    name="nm_spmm_gather_fp8", mode="gather", priority=10, activation_skip=True,
     fit_blocks=_fit_nm_gather_fp8, run=_run_nm_gather_q,
     run_dual=_run_nm_gather_dual_q,
     quantized=True, run_quantized=_partial_nm_gather_q,
@@ -957,106 +1057,152 @@ def _meta_axis_sliceable(mode: str, ke: int, n: int, m: int, ske: int) -> bool:
     return ke % ske == 0
 
 
+def _cache_key(name: str, p: GemmProblem, dims: Tuple[int, int, int],
+               fused: bool, skip: bool) -> str:
+    """THE autotune key for one (entry, problem) pair — built from the
+    GemmProblem so plan(), the concrete-autotune path, and the shard_map
+    tuner can never disagree about problem identity.  ``dims`` is the
+    shape the kernel body actually runs (per-shard local under
+    shard_map); a fused epilogue changes the flush cost and an in-kernel
+    block skip changes the traversal, so both suffix the key."""
+    return autotune.cache_key(
+        name, dims[0], dims[1], dims[2], p.n, p.m, p.dtype,
+        epilogue=p.epilogue if fused else None,
+        activation=p.activation if skip else None)
+
+
 def plan(
-    mode: str, *, b: int, ke: int, o: int, n: int, m: int, dtype,
+    problem,
+    *,
     dispatch: Optional[DispatchConfig] = None,
-    differentiating: bool = False,
-    sharded: bool = False,
-    shard: Optional[ShardSpec] = None,
-    static_scales: bool = False,
-    epilogue: Optional[str] = None,
-    dual: bool = False,
+    **legacy,
 ) -> DispatchDecision:
     """Pure decision function: what would the engine run for this problem?
 
-    ``shard`` describes how the active mesh slices the problem at its use
-    site; with one, the engine plans the third execution class —
-    ``shard_map`` over the registry kernel — fitting blocks against the
-    per-shard local shape.  ``sharded`` without a spec (mesh installed but
-    the call-site gave no PartitionSpecs) still falls back to jnp.
-    Quantized problems (int8 | fp8) keep the shard_map class too: the
-    per-channel weight scale rides along as an extra leaf with its own
-    PartitionSpec and activations quantize inside the shard body.
-    ``static_scales`` records
-    whether the use-site carries calibrated activation scales (decode
-    skips the per-row absmax pass); it only annotates the decision.
+    The canonical form takes ONE :class:`GemmProblem` — every dispatch
+    axis lives on the frozen value object::
+
+        plan(GemmProblem("compressed", b=8, ke=1024, o=512, n=2,
+                         dtype=jnp.int8, epilogue="bias+silu"),
+             dispatch=dcfg)
+
+    The legacy spelling ``plan(mode, b=..., ke=..., ...)`` still works —
+    the kwargs are folded into a GemmProblem behind a warn-once
+    ``DeprecationWarning``.
+
+    ``problem.shard`` describes how the active mesh slices the problem
+    at its use site; with one, the engine plans the third execution
+    class — ``shard_map`` over the registry kernel — fitting blocks
+    against the per-shard local shape.  ``sharded`` without a spec (mesh
+    installed but the call-site gave no PartitionSpecs) still falls back
+    to jnp.  Quantized problems (int8 | fp8) keep the shard_map class
+    too: the per-channel weight scale rides along as an extra leaf with
+    its own PartitionSpec and activations quantize inside the shard
+    body.  ``static_scales`` records whether the use-site carries
+    calibrated activation scales (decode skips the per-row absmax pass);
+    it only annotates the decision.
 
     ``epilogue`` is the requested lattice point (``EpilogueSpec.point``,
     e.g. ``"bias+silu"``); the decision carries it back with
     ``epilogue_fused`` saying whether the kernel's flush applies it in
     VMEM.  Fusion needs a single-placement kernel decision — shard_map
     bodies psum BEFORE the epilogue may run, and the jnp tier applies
-    the reference formulation — so every other route reports
-    ``[jnp]`` and the caller applies ``apply_reference``.  ``dual``
-    marks a fused gate-up (two same-shaped weights, one activation
-    read); it additionally requires the selected entry to carry a
-    ``run_dual`` kernel.
+    the reference formulation — so every other route reports ``[jnp]``
+    and the caller applies ``apply_reference``.  ``dual`` marks a fused
+    gate-up (two same-shaped weights, one activation read); it
+    additionally requires the selected entry to carry a ``run_dual``
+    kernel.
+
+    ``activation`` is the dynamic activation-sparsity point
+    (``ActivationSpec.point``).  The mask pass is applied to ``x`` on
+    every route (it is the semantics of the execution class), so the
+    decision only reports whether the selected kernel additionally
+    *skips* dead K-blocks in-kernel (``activation_skip``) — which needs
+    a single-placement, non-dual decision on an entry whose adapter
+    carries a masked variant.  Declining the skip never changes
+    numerics.
     """
+    if isinstance(problem, str):
+        quant.warn_deprecated_once(
+            "plan(mode, b=..., ke=..., ...)",
+            "plan(GemmProblem(mode, b=..., ke=..., ...), dispatch=...)")
+        problem = GemmProblem(mode=problem, **legacy)
+    elif legacy:
+        raise TypeError(
+            "plan(GemmProblem, ...) accepts no per-axis kwargs — put "
+            f"{sorted(legacy)} on the GemmProblem")
+    p = problem
     dcfg = dispatch or _DEFAULT
     backend = registry.resolve_backend(dcfg.backend)
-    dt_name = dtype_name(dtype)
+    dt_name = dtype_name(p.dtype)
+    shard = p.shard
 
     def _jnp(reason):
-        return DispatchDecision(mode, "jnp", JNP_REFERENCE, None, reason,
-                                dtype=dt_name, epilogue=epilogue)
+        return DispatchDecision(p.mode, "jnp", JNP_REFERENCE, None, reason,
+                                dtype=dt_name, epilogue=p.epilogue,
+                                activation=p.activation)
 
-    if mode == "masked":
+    if p.mode == "masked":
         return _jnp("SR-STE training path needs its custom VJP")
     if backend == "jnp":
         return _jnp("backend=jnp")
-    if differentiating:
+    if p.differentiating:
         return _jnp("under autodiff: kernels carry no VJP rules")
     if shard is not None and all(s == 1 for s in shard.shards):
         shard = None  # trivial slicing: single-device execution class
-    if sharded and shard is None:
+    if p.sharded and shard is None:
         return _jnp("mesh env active with no use-site shard spec: "
                     "XLA owns the layout")
-    if b == 0:
+    if p.b == 0:
         return _jnp("empty batch")
 
     shards = (1, 1, 1)
     placement, local, collective = "single", None, None
     if shard is not None:
         shards = shard.shards
-        local = registry.local_dims((b, ke, o), shards)
+        local = registry.local_dims((p.b, p.ke, p.o), shards)
         if local is None:
             return _jnp(f"shard spec {shards} does not divide "
-                        f"(b={b},ke={ke},o={o})")
-        if not _meta_axis_sliceable(mode, ke, n, m, shards[1]):
-            return _jnp(f"shard spec slices the {n}:{m} metadata axis "
-                        f"non-divisibly (ke={ke} over {shards[1]} shards)")
+                        f"(b={p.b},ke={p.ke},o={p.o})")
+        if not _meta_axis_sliceable(p.mode, p.ke, p.n, p.m, shards[1]):
+            return _jnp(f"shard spec slices the {p.n}:{p.m} metadata axis "
+                        f"non-divisibly (ke={p.ke} over {shards[1]} shards)")
         placement, collective = "shard_map", shard.collective
 
-    sel = registry.select(mode, b=b, ke=ke, o=o, n=n, m=m, dtype=dtype,
-                          backend=backend, shards=shards)
+    sel = registry.select(p.mode, b=p.b, ke=p.ke, o=p.o, n=p.n, m=p.m,
+                          dtype=p.dtype, backend=backend, shards=shards)
     if sel is None:
         where = "local shard " if shard is not None else ""
-        dims = local if shard is not None else (b, ke, o)
+        dims = local if shard is not None else (p.b, p.ke, p.o)
         return _jnp(f"no registered kernel fits {where}(b={dims[0]},"
-                    f"ke={dims[1]},o={dims[2]},{n}:{m},"
-                    f"{dtype_name(dtype)})")
+                    f"ke={dims[1]},o={dims[2]},{p.n}:{p.m},"
+                    f"{dt_name})")
     entry, blocks = sel
-    acts = (("static" if static_scales else "dynamic")
+    acts = (("static" if p.static_scales else "dynamic")
             if entry.quantized else None)
-    fused = (epilogue is not None and placement == "single"
-             and (not dual or entry.run_dual is not None))
+    fused = (p.epilogue is not None and placement == "single"
+             and (not p.dual or entry.run_dual is not None))
+    # in-kernel dead-block skip: single placement only (shard_map bodies
+    # would need per-shard maps), never on duals (no masked dual
+    # kernels), and only on entries whose adapter carries the variant
+    skip = (p.activation is not None and placement == "single"
+            and not p.dual and entry.activation_skip)
 
     def _decision(blocks, reason, source):
         return DispatchDecision(
-            mode, backend, entry.name, blocks, reason, blocks_source=source,
+            p.mode, backend, entry.name, blocks, reason, blocks_source=source,
             placement=placement, local_dims=local, shards=shards if shard else None,
             collective=collective, act_scales=acts, dtype=dt_name,
-            epilogue=epilogue, epilogue_fused=fused)
+            epilogue=p.epilogue, epilogue_fused=fused,
+            activation=p.activation, activation_skip=skip)
 
     if dcfg.blocks is not None:
         return _decision(tuple(dcfg.blocks), "blocks pinned by config",
                          "pinned")
     # autotune cache keys are per-shard local problems under shard_map —
-    # that is the shape the kernel body actually runs; a FUSED epilogue
-    # changes the flush cost, so it suffixes the key
-    kb, kke, ko = local if local is not None else (b, ke, o)
-    key = autotune.cache_key(entry.name, kb, kke, ko, n, m, dtype,
-                             epilogue=epilogue if fused else None)
+    # that is the shape the kernel body actually runs
+    kb, kke, ko = local if local is not None else (p.b, p.ke, p.o)
+    key = _cache_key(entry.name, p, (kb, kke, ko), fused, skip)
     tuned = autotune.lookup(backend, key)
     if tuned is not None:
         return _decision(tuned, "autotuned blocks (cache)", "tuned")
@@ -1073,9 +1219,11 @@ def plan_for(
     b = math.prod(x_shape[:-1]) if len(x_shape) > 1 else 1
     fake_x = jax.ShapeDtypeStruct(tuple(x_shape), dtype)
     ke, o = _problem_dims(mode, params, fake_x)
-    return plan(mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m, dtype=dtype,
-                dispatch=dispatch, sharded=_mesh_active(), shard=shard,
-                static_scales=quant.has_static_scales(params))
+    return plan(GemmProblem(mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m,
+                            dtype=dtype, sharded=_mesh_active(),
+                            shard=shard,
+                            static_scales=quant.has_static_scales(params)),
+                dispatch=dispatch)
 
 
 def iter_linear_items(tree, _names=()):
@@ -1194,10 +1342,11 @@ def pretune(params_tree, batch: int, cfg,
         mode = _mode_of(leaf, lcfg)
         _, o = _problem_dims(mode, leaf, x)
         shard = leaf_shard_spec(names, cfg)
-        decision = plan(mode, b=batch, ke=ke, o=o, n=lcfg.n, m=lcfg.m,
-                        dtype=dt, dispatch=dcfg, sharded=_mesh_active(),
-                        shard=shard,
-                        static_scales=quant.has_static_scales(leaf))
+        decision = plan(
+            GemmProblem(mode, b=batch, ke=ke, o=o, n=lcfg.n, m=lcfg.m,
+                        dtype=dt, sharded=_mesh_active(), shard=shard,
+                        static_scales=quant.has_static_scales(leaf)),
+            dispatch=dcfg)
         if not decision.uses_kernel or decision.blocks_source != "fitted":
             continue  # jnp-routed or already cached: nothing to tune
         sparse_matmul(x, leaf, lcfg, dispatch=dcfg, shard=shard)
@@ -1265,10 +1414,11 @@ def dispatch_report(params_tree, batches, cfg,
         if (_mode_of(uleaf, lcfg) != mode
                 or _problem_dims(mode, uleaf, fake_x) != (ke, o)):
             continue
-        d = plan(mode, b=batch, ke=ke, o=o, n=lcfg.n, m=lcfg.m, dtype=dt,
-                 dispatch=dcfg, sharded=_mesh_active(), shard=shard,
-                 static_scales=quant.has_static_scales(gleaf),
-                 epilogue="silu_mul", dual=True)
+        d = plan(GemmProblem(mode, b=batch, ke=ke, o=o, n=lcfg.n, m=lcfg.m,
+                             dtype=dt, sharded=_mesh_active(), shard=shard,
+                             static_scales=quant.has_static_scales(gleaf),
+                             epilogue="silu_mul", dual=True),
+                 dispatch=dcfg)
         dual_seen.setdefault((batch, d.mode, lcfg.n, ke, o, hint), d)
     lines = []
     for (batch, _, n, ke, o, hint), d in sorted(seen.items(), key=lambda kv: (
@@ -1394,6 +1544,8 @@ def sparse_matmul(
     dispatch: Optional[DispatchConfig] = None,
     shard: Optional[ShardSpec] = None,
     epilogue: Optional[Epilogue] = None,
+    activation: Optional[ActivationSpec] = None,
+    local: bool = False,
 ) -> jax.Array:
     """y = x @ W for any SparseLinear layout, via the dispatch engine.
 
@@ -1416,10 +1568,23 @@ def sparse_matmul(
     ``x`` may arrive already narrow (int8/fp8): that means an upstream
     kernel's fused epilogue requantized it against THIS leaf's
     calibrated ``act_scale``, and the quantize pass here is skipped.
+
+    ``activation`` opts this call into the dynamic activation-sparsity
+    execution class: the induced mask is applied to ``x`` up front on
+    EVERY route (identity for kind ``"zeros"``), and when the plan lands
+    on a single-placement kernel whose adapter carries a masked variant,
+    dead (row-block, K-block) tiles are additionally skipped in-kernel —
+    loads elided, dots never issued — with bit-identical output.
+
+    ``local=True`` says this call already runs INSIDE a shard_map body
+    (e.g. MoE expert linears): planning must not consult the mesh env,
+    because nesting shard_map is not supported.
     """
     dcfg = dispatch or _DEFAULT
     g = constrain_fn or (lambda w: w)
     mode = _mode_of(params, cfg)
+    if activation is not None:
+        x = apply_mask(x, activation)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     b = x2.shape[0]
@@ -1449,15 +1614,16 @@ def sparse_matmul(
             and not pre_q):
         quant.record_calibration(params[quant._CALIB_KEY], x2)
 
-    decision = plan(
+    problem = GemmProblem(
         mode, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m, dtype=exec_dtype,
-        dispatch=dcfg,
         differentiating=_under_autodiff(x2, params),
-        sharded=_mesh_active(),
+        sharded=False if local else _mesh_active(),
         shard=shard,
         static_scales=quant.has_static_scales(params),
         epilogue=epilogue.spec.point if epilogue is not None else None,
+        activation=activation.point if activation is not None else None,
     )
+    decision = plan(problem, dispatch=dcfg)
 
     if pre_q and not (decision.uses_kernel
                       and decision.placement == "single"):
@@ -1486,8 +1652,8 @@ def sparse_matmul(
         # Autotune the per-shard local problem through the same wrapper.
         if (dcfg.autotune and decision.blocks_source == "fitted"
                 and not isinstance(x2, jax.core.Tracer)):
-            key = autotune.cache_key(entry.name, lb, lke, lo,
-                                     cfg.n, cfg.m, exec_dtype)
+            key = _cache_key(entry.name, problem, (lb, lke, lo),
+                             False, False)
             cands = entry.candidates(lb, lke, lo, cfg.n, cfg.m, exec_dtype)
             tuned = autotune.tune(runner, cands, backend=decision.backend,
                                   key=key, persist=dcfg.persist_autotune)
@@ -1500,17 +1666,21 @@ def sparse_matmul(
         return y2.reshape(*lead, o)
 
     fused_epi = epilogue if decision.epilogue_fused else None
+    # the masked (block-skip) variant only runs when the plan granted it
+    # — the adapter then derives the skip maps from the operand it
+    # actually contracts (padded narrow rows for the quantized entries)
+    act_kw = ({"activation": activation}
+              if decision.activation_skip else {})
 
     # Autotune on first concrete sighting of a problem (never mid-trace).
     if (dcfg.autotune and decision.blocks_source == "fitted"
             and not isinstance(x2, jax.core.Tracer)):
-        key = autotune.cache_key(
-            entry.name, b, ke, o, cfg.n, cfg.m, exec_dtype,
-            epilogue=epilogue.spec.point if fused_epi is not None else None)
+        key = _cache_key(entry.name, problem, (b, ke, o),
+                         fused_epi is not None, decision.activation_skip)
         cands = entry.candidates(b, ke, o, cfg.n, cfg.m, exec_dtype)
         tuned = autotune.tune(
             lambda blk: entry.run(x2, params, cfg, g, blk, interpret,
-                                  out_dt, epilogue=fused_epi),
+                                  out_dt, epilogue=fused_epi, **act_kw),
             cands, backend=decision.backend, key=key,
             persist=dcfg.persist_autotune,
         )
@@ -1518,7 +1688,7 @@ def sparse_matmul(
             blocks = tuned
 
     y2 = entry.run(x2, params, cfg, g, blocks, interpret, out_dt,
-                   epilogue=fused_epi)
+                   epilogue=fused_epi, **act_kw)
     if epilogue is not None and fused_epi is None:
         y2 = epilib.apply_reference(y2, epilogue)
     return y2.reshape(*lead, o)
@@ -1602,30 +1772,47 @@ def gate_up_matmul(
     constrain_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
     dispatch: Optional[DispatchConfig] = None,
     shard: Optional[ShardSpec] = None,
-    requant: Optional[str] = None,
-    requant_scale=None,
+    epilogue: Optional[Epilogue] = None,
+    activation: Optional[ActivationSpec] = None,
+    local: bool = False,
 ) -> jax.Array:
     """``silu(x @ Wg) * (x @ Wu)`` — the gate-up projection as ONE
     engine call.
 
+    ``epilogue`` is the SAME :class:`Epilogue` object ``sparse_matmul``
+    takes — the gate-up path no longer smuggles a ``requant=`` /
+    ``requant_scale=`` side-channel.  It must sit on the ``silu_mul``
+    lattice point (optionally extended with ``requant:<dtype>`` from
+    :func:`requant_plan` on the next linear); ``None`` means the bare
+    ``silu_mul`` point.  ``activation`` / ``local`` thread the dynamic
+    activation-sparsity class and the inside-shard_map marker exactly as
+    on :func:`sparse_matmul`.
+
     When both leaves share mode/shape/dtype class and the plan lands on
     a single-placement kernel with a ``run_dual`` variant, ONE
     pallas_call reads each activation tile once, contracts it against
-    both weights, and emits the ``silu_mul`` epilogue point directly
-    (optionally extended with ``requant`` / ``requant_scale`` from
-    :func:`requant_plan` on the next linear).  Otherwise the fallback
-    still reads the activation once where that helps — dense and
-    compressed pairs headed for a (non-dual) kernel concat along O
+    both weights, and emits the epilogue directly.  Otherwise the
+    fallback still reads the activation once where that helps — dense
+    and compressed pairs headed for a (non-dual) kernel concat along O
     into a single GEMM, while jnp-tier pairs run as two plain GEMMs
     (a per-call weight concat costs more than a decode-shape GEMM
     there) — and applies the float silu*mul reference (never the
     requant: the consumer's own quantize pass is bit-identical on
-    float rows).
+    float rows, and the caller sees that in the float dtype of the
+    result).
     """
     dcfg = dispatch or _DEFAULT
     g = constrain_fn or (lambda w: w)
+    if epilogue is None:
+        epilogue = epilib.make(act="silu_mul")
+    if epilogue.spec.act != "silu_mul" or epilogue.spec.bias:
+        raise ValueError(
+            f"gate_up_matmul epilogue must sit on the silu_mul lattice "
+            f"point (optionally +requant), got {epilogue.spec.point!r}")
     mode_g = _mode_of(params_g, cfg)
     mode_u = _mode_of(params_u, cfg)
+    if activation is not None:
+        x = apply_mask(x, activation)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     b = x2.shape[0]
@@ -1647,18 +1834,21 @@ def gate_up_matmul(
         and (quant.has_static_scales(params_u)
              == quant.has_static_scales(params_g))
     )
-    spec = EpilogueSpec(act="silu_mul", requant=requant)
-    epi = Epilogue(spec, requant_scale=requant_scale)
+    spec, epi = epilogue.spec, epilogue
 
     decision = None
     if pair_ok:
         decision = plan(
-            mode_g, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m,
-            dtype=qdt or x2.dtype, dispatch=dcfg,
-            differentiating=_under_autodiff(x2, params_g, params_u),
-            sharded=_mesh_active(), shard=shard,
-            static_scales=quant.has_static_scales(params_g),
-            epilogue=spec.point, dual=True)
+            GemmProblem(
+                mode_g, b=b, ke=ke, o=o, n=cfg.n, m=cfg.m,
+                dtype=qdt or x2.dtype,
+                differentiating=_under_autodiff(x2, params_g, params_u),
+                sharded=False if local else _mesh_active(), shard=shard,
+                static_scales=quant.has_static_scales(params_g),
+                epilogue=spec.point, dual=True,
+                activation=(activation.point if activation is not None
+                            else None)),
+            dispatch=dcfg)
     if decision is not None and decision.epilogue_fused:
         entry = _entry_by_name(mode_g, decision.kernel)
         interpret = decision.backend == "interpret"
@@ -1678,13 +1868,15 @@ def gate_up_matmul(
            else None)
     if cat is not None:
         y2 = sparse_matmul(x2, cat, cfg, constrain_fn=g, dispatch=dcfg,
-                           shard=shard)
+                           shard=shard, activation=activation, local=local)
         y_g, y_u = y2[:, :o], y2[:, o:]
     else:
         y_g = sparse_matmul(x2, params_g, cfg, constrain_fn=g,
-                            dispatch=dcfg, shard=shard)
+                            dispatch=dcfg, shard=shard,
+                            activation=activation, local=local)
         y_u = sparse_matmul(x2, params_u, cfg, constrain_fn=g,
-                            dispatch=dcfg, shard=shard)
+                            dispatch=dcfg, shard=shard,
+                            activation=activation, local=local)
     h = jax.nn.silu(y_g.astype(jnp.float32)) * y_u.astype(jnp.float32)
     return h.astype(y_g.dtype).reshape(*lead, o)
 
@@ -1716,10 +1908,11 @@ def attention(
     b, hkv, grp, tq, d = qg.shape
     tk = k.shape[1]
     decision = plan(
-        "attention", b=tq, ke=tk, o=d, n=4, m=4, dtype=qg.dtype,
+        GemmProblem("attention", b=tq, ke=tk, o=d, n=4, m=4,
+                    dtype=qg.dtype,
+                    differentiating=_under_autodiff(qg, k, v),
+                    sharded=_mesh_active()),
         dispatch=dcfg,
-        differentiating=_under_autodiff(qg, k, v),
-        sharded=_mesh_active(),
     )
     if not decision.uses_kernel or tq != tk or q_offset != 0:
         return chunked_attention(qg, k, v, causal, chunk, q_offset,

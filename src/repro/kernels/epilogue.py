@@ -187,14 +187,17 @@ def flush_tile(acc32: jax.Array, spec: EpilogueSpec, out_dtype,
 def tile_in_specs(spec: EpilogueSpec, block_o: int):
     """BlockSpecs for the epilogue operands of a row-major (B, O) kernel:
     the bias row ``(1, block_o)`` and the scalar requant scale ``(1, 1)``,
-    in that order — appended after the GEMM operands of every family."""
+    in that order — appended after the GEMM operands of every family.
+    The index maps absorb trailing args so the same specs serve plain
+    grids and the masked kernels' scalar-prefetch grids (whose maps also
+    receive the kmap/kmask refs)."""
     from jax.experimental import pallas as pl
 
     specs = []
     if spec.bias:
-        specs.append(pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)))
+        specs.append(pl.BlockSpec((1, block_o), lambda i, j, kk, *_: (0, j)))
     if spec.requant:
-        specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)))
+        specs.append(pl.BlockSpec((1, 1), lambda i, j, kk, *_: (0, 0)))
     return specs
 
 

@@ -253,6 +253,144 @@ def _nm_spmm_quantized(
       *tile_operands(epi, bias, requant_scale, o))
 
 
+def _spmm_masked_kernel(*refs, n: int, nk: int, acc_dtype, quant: bool,
+                        epi: EpilogueSpec):
+    """Activation-sparsity (block-skip) flush body for the compressed
+    family.  Ref order: kmap, kmask (scalar prefetch), then exactly the
+    :func:`_spmm_kernel` order.  Init is SPLIT from the accumulate (step
+    kk==0 may be dead); the mux-expand + dot run only on live blocks —
+    dead x blocks are exact zeros, so the skip is bit-identical and the
+    kmap-driven index maps elide the x/values/meta copies too."""
+    it = list(refs)
+    kmask_ref = it[1]
+    x_ref, v_ref, pm_ref = it[2], it[3], it[4]
+    p = 5
+    xs_ref = ws_ref = bias_ref = rq_ref = None
+    if quant:
+        xs_ref, ws_ref = it[p], it[p + 1]
+        p += 2
+    if epi.bias:
+        bias_ref = it[p]
+        p += 1
+    if epi.requant:
+        rq_ref = it[p]
+        p += 1
+    o_ref, acc_ref = it[p], it[p + 1]
+
+    i = pl.program_id(0)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(kmask_ref[i, kk] != 0)
+    def _accumulate():
+        idx = _unpack_meta_tile(pm_ref[...])
+        w = _decompress_tile(v_ref[...], idx, n)
+        acc_ref[...] += jnp.dot(x_ref[...], w,
+                                preferred_element_type=acc_dtype)
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        t = acc_ref[...].astype(jnp.float32)
+        if quant:
+            t = t * xs_ref[...] * ws_ref[...]
+        o_ref[...] = flush_tile(
+            t, epi, o_ref.dtype,
+            bias_tile=None if bias_ref is None else bias_ref[...],
+            rq_scale=None if rq_ref is None else rq_ref[0, 0])
+
+
+def nm_spmm_masked(
+    x: jax.Array,
+    values: jax.Array,
+    meta_packed: jax.Array,
+    kmap: jax.Array,
+    kmask: jax.Array,
+    n: int,
+    x_scale: jax.Array = None,
+    w_scale: jax.Array = None,
+    *,
+    acc_dtype=jnp.float32,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_ke: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    bias: jax.Array = None,
+    requant_scale=None,
+) -> jax.Array:
+    """:func:`nm_spmm` with an in-kernel activation-sparsity block skip —
+    the sparse-activation x N:M-weight SpGEMM case.  ``kmap``/``kmask``
+    are ``(B/block_b, K_eff/block_ke)`` int32 maps from
+    ``repro.kernels.actsparse.block_maps`` over the masked ``x``; they
+    ride the grid as scalar-prefetch operands.  Float when ``x_scale is
+    None``; scaled-quantized with both scales (``acc_dtype`` int32 for
+    int8, fp32 for fp8).  Bit-identical to the unmasked kernel on the
+    same masked ``x``.
+    """
+    epi = epilogue or _IDENT
+    b, ke = x.shape
+    kc, o = values.shape
+    assert ke * n == kc * 4, (x.shape, values.shape, n)
+    assert meta_packed.shape == (kc // 4, o), meta_packed.shape
+    quant = x_scale is not None
+    assert quant == (w_scale is not None), "pass both scales or neither"
+    if not quant:
+        acc_dtype = jnp.float32
+    else:
+        assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
+            x_scale.shape, w_scale.shape)
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_ke = min(block_ke, ke)
+    assert b % block_b == 0 and o % block_o == 0 and ke % block_ke == 0
+    block_kc = block_ke * n // 4
+    assert block_kc % 4 == 0, "block_ke*n/4 must be a multiple of 4 for packing"
+    nk = ke // block_ke
+    assert kmap.shape == (b // block_b, nk) == kmask.shape, (
+        kmap.shape, kmask.shape, (b // block_b, nk))
+
+    in_specs = [
+        pl.BlockSpec((block_b, block_ke),
+                     lambda i, j, kk, kmap_, kmask_: (i, kmap_[i, kk])),
+        pl.BlockSpec((block_kc, block_o),
+                     lambda i, j, kk, kmap_, kmask_: (kmap_[i, kk], j)),
+        pl.BlockSpec((block_kc // 4, block_o),
+                     lambda i, j, kk, kmap_, kmask_: (kmap_[i, kk], j)),
+    ]
+    operands = [x, values, meta_packed]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((block_b, 1), lambda i, j, kk, *_: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk, *_: (0, j)),
+        ]
+        operands += [x_scale, w_scale]
+    in_specs += tile_in_specs(epi, block_o)
+    operands += tile_operands(epi, bias, requant_scale, o)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_o),
+                               lambda i, j, kk, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
+    )
+    return pl.pallas_call(
+        lambda *refs: _spmm_masked_kernel(*refs, n=n, nk=nk,
+                                          acc_dtype=acc_dtype, quant=quant,
+                                          epi=epi),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kmap, kmask, *operands)
+
+
 def _spmm_dual_kernel(*refs, n: int, nk: int, acc_dtype, quant: bool,
                       epi: EpilogueSpec):
     """Fused gate-up flush for the compressed family: two N:M SpMMs over

@@ -87,6 +87,14 @@ class KernelEntry:
     ``silu_mul`` epilogue point) directly.  Entries without it decline
     dual plans and the gate-up dispatcher falls back to a single
     concatenated GEMM + jnp epilogue.
+
+    ``activation_skip`` marks entries whose run adapter carries a masked
+    (block-skip) kernel variant for the dynamic activation-sparsity
+    execution class — on a single-placement decision with an
+    ``activation`` axis, the engine hands the adapter the trace-time
+    block maps and dead K-blocks are elided in-kernel.  Entries without
+    it still execute sparse-activation problems correctly (the mask pass
+    is applied to ``x`` regardless); they just never skip.
     """
 
     name: str
@@ -100,6 +108,7 @@ class KernelEntry:
     run_quantized: Optional[Callable[..., jax.Array]] = None
     supported: Optional[Callable[[str], bool]] = None
     run_dual: Optional[Callable[..., jax.Array]] = None
+    activation_skip: bool = False
 
 
 _REGISTRY: Dict[str, List[KernelEntry]] = {}

@@ -196,6 +196,142 @@ def _tile_gemm_quantized(
       *tile_operands(epi, bias, requant_scale, o))
 
 
+def _gemm_masked_kernel(*refs, nk: int, acc_dtype, quant: bool,
+                        epi: EpilogueSpec):
+    """Activation-sparsity (block-skip) flush body.
+
+    Ref order: kmap, kmask (scalar prefetch), then exactly the
+    :func:`_gemm_kernel` order.  The init is SPLIT from the accumulate —
+    unlike ``_gemm_accumulate`` — because step kk==0 may be dead: the
+    zero-init must run unconditionally, the dot only on live blocks.
+    Dead blocks hold exact zeros (the mask pass produced them), so
+    skipping their dot is bit-identical to accumulating them, and their
+    index-map entries repeat the previous live block so the HBM->VMEM
+    copies are elided too.
+    """
+    it = list(refs)
+    kmap_ref, kmask_ref = it[0], it[1]
+    del kmap_ref  # consumed by the index maps; the body keys on kmask
+    x_ref, w_ref = it[2], it[3]
+    p = 4
+    xs_ref = ws_ref = bias_ref = rq_ref = None
+    if quant:
+        xs_ref, ws_ref = it[p], it[p + 1]
+        p += 2
+    if epi.bias:
+        bias_ref = it[p]
+        p += 1
+    if epi.requant:
+        rq_ref = it[p]
+        p += 1
+    o_ref, acc_ref = it[p], it[p + 1]
+
+    i = pl.program_id(0)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(kmask_ref[i, kk] != 0)
+    def _accumulate():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=acc_dtype)
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        t = acc_ref[...].astype(jnp.float32)
+        if quant:
+            t = t * xs_ref[...] * ws_ref[...]
+        o_ref[...] = flush_tile(
+            t, epi, o_ref.dtype,
+            bias_tile=None if bias_ref is None else bias_ref[...],
+            rq_scale=None if rq_ref is None else rq_ref[0, 0])
+
+
+def tile_gemm_masked(
+    x: jax.Array,
+    w: jax.Array,
+    kmap: jax.Array,
+    kmask: jax.Array,
+    x_scale: jax.Array = None,
+    w_scale: jax.Array = None,
+    *,
+    acc_dtype=jnp.float32,
+    block_b: int = 128,
+    block_o: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    epilogue: EpilogueSpec = None,
+    bias: jax.Array = None,
+    requant_scale=None,
+) -> jax.Array:
+    """:func:`tile_gemm` with an in-kernel activation-sparsity block skip.
+
+    ``kmap``/``kmask`` are the ``(B/block_b, K/block_k)`` int32 maps from
+    ``repro.kernels.actsparse.block_maps`` over the (masked) ``x``; they
+    ride the grid as scalar-prefetch operands — ``kmask`` gates the
+    accumulate, ``kmap`` drives the x/w index maps so dead K-blocks are
+    never copied in.  Float when ``x_scale is None``; scaled-quantized
+    (int8/fp8 by ``acc_dtype``) with both scales, same flush contract as
+    the plain kernels.  Output is bit-identical to the unmasked kernel
+    on the same masked ``x``.
+    """
+    epi = epilogue or _IDENT
+    b, k = x.shape
+    k2, o = w.shape
+    assert k == k2, (x.shape, w.shape)
+    quant = x_scale is not None
+    assert quant == (w_scale is not None), "pass both scales or neither"
+    if not quant:
+        acc_dtype = jnp.float32
+    else:
+        assert x_scale.shape == (b, 1) and w_scale.shape == (1, o), (
+            x_scale.shape, w_scale.shape)
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    block_k = min(block_k, k)
+    assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
+    nk = k // block_k
+    assert kmap.shape == (b // block_b, nk) == kmask.shape, (
+        kmap.shape, kmask.shape, (b // block_b, nk))
+
+    in_specs = [
+        pl.BlockSpec((block_b, block_k),
+                     lambda i, j, kk, kmap_, kmask_: (i, kmap_[i, kk])),
+        pl.BlockSpec((block_k, block_o),
+                     lambda i, j, kk, kmap_, kmask_: (kmap_[i, kk], j)),
+    ]
+    operands = [x, w]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((block_b, 1), lambda i, j, kk, *_: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j, kk, *_: (0, j)),
+        ]
+        operands += [x_scale, w_scale]
+    in_specs += tile_in_specs(epi, block_o)
+    operands += tile_operands(epi, bias, requant_scale, o)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b // block_b, o // block_o, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_o),
+                               lambda i, j, kk, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
+    )
+    return pl.pallas_call(
+        lambda *refs: _gemm_masked_kernel(*refs, nk=nk, acc_dtype=acc_dtype,
+                                          quant=quant, epi=epi),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype_for(epi, out_dtype)),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(kmap, kmask, *operands)
+
+
 def _gemm_dual_kernel(*refs, nk: int, acc_dtype, quant: bool,
                       epi: EpilogueSpec):
     """Fused gate-up flush: two GEMMs over ONE activation tile read.

@@ -25,6 +25,11 @@ class ModelConfig:
     num_experts: int = 0
     top_k: int = 0
     moe_capacity_factor: float = 1.25
+    # expert execution: "gather" scatters a capacity of tokens per expert
+    # into a dense tile; "spgemm" keeps the full token set and runs the
+    # expert FFN as a sparse x sparse contraction (routing holes become
+    # dynamic activation sparsity the masked kernels skip in-block)
+    moe_expert_path: str = "gather"
     # --- SSM (Mamba-2 / SSD) ---
     ssm_state: int = 0
     ssm_expand: int = 2

@@ -104,7 +104,9 @@ def apply_mlp(p: Params, x: jax.Array, act: str, sp: SparsityConfig) -> jax.Arra
         # dispatch reads it once (fused dual kernel when the plan
         # allows, one concatenated GEMM otherwise)
         h = apply_gate_up(p["w_gate"], p["w_in"], x, sp, gather="col",
-                          requant=requant, requant_scale=rq_scale)
+                          epilogue=epilib.make(act="silu_mul",
+                                               requant=requant,
+                                               requant_scale=rq_scale))
     else:
         h = apply_linear(
             p["w_in"], x, sp, gather="col",

@@ -13,6 +13,17 @@ experts via ``lax.scan`` on stacked weights.
 Capacity semantics: per-(data-shard, expert) top-C selection (Switch-style
 local dispatch) — tokens over capacity are dropped, standard for
 capacity-factor MoE.
+
+Expert execution (``cfg.moe_expert_path``): the default ``"gather"`` path
+scatters a capacity of tokens per expert into a dense tile; ``"spgemm"``
+instead zeroes the unrouted rows of the FULL token set and runs the
+expert FFN as a sparse x sparse contraction — the routing holes become
+dynamic activation sparsity (``ActivationSpec("zeros")``) against the
+expert's N:M weights, so the masked kernels skip whole dead row-blocks.
+Because the FFN is row-independent the two paths are bit-identical on
+fp32; spgemm additionally passes ``local=True`` so the expert linears
+may plan kernels even inside the MoE's own shard_map body (the nesting
+problem the gather path sidesteps by falling back to jnp).
 """
 
 from __future__ import annotations
@@ -27,6 +38,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.sparse_linear import (
     SparsityConfig, apply_gate_up, apply_linear, init_linear)
+from repro.kernels.actsparse import ActivationSpec
 
 from .config import ModelConfig
 from .pjit_utils import axis_env
@@ -55,24 +67,33 @@ def init_moe(key, cfg: ModelConfig) -> Params:
     return p
 
 
-def _expert_ffn(wp: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def _expert_ffn(wp: Params, x: jax.Array, cfg: ModelConfig,
+                activation: ActivationSpec = None,
+                local: bool = False) -> jax.Array:
     from repro.kernels import dispatch, epilogue as epilib
 
     rq = dispatch.requant_plan(wp["w_out"], x.shape[:-1], cfg.sparsity)
     requant, rq_scale = rq if rq is not None else (None, None)
     if cfg.act == "swiglu":
-        # one gate-up dispatch per expert: the gathered token tile is
+        # one gate-up dispatch per expert: the expert's token tile is
         # read once (hint-less site — inside shard_map/scan bodies)
         h = apply_gate_up(wp["w_gate"], wp["w_in"], x, cfg.sparsity,
-                          requant=requant, requant_scale=rq_scale)
+                          epilogue=epilib.make(act="silu_mul",
+                                               requant=requant,
+                                               requant_scale=rq_scale),
+                          activation=activation, local=local)
     else:
         h = apply_linear(
             wp["w_in"], x, cfg.sparsity,
             epilogue=epilib.make(act="gelu", requant=requant,
-                                 requant_scale=rq_scale))
+                                 requant_scale=rq_scale),
+            activation=activation, local=local)
     # pre-quantized h dequantizes to fp32 in w_out — keep the expert
-    # output in the token dtype the combine expects
-    return apply_linear(wp["w_out"], h, cfg.sparsity).astype(x.dtype)
+    # output in the token dtype the combine expects.  The FFN is
+    # row-wise, so zeroed (unrouted) input rows stay zero in h and the
+    # "zeros" activation class carries through to w_out.
+    return apply_linear(wp["w_out"], h, cfg.sparsity,
+                        activation=activation, local=local).astype(x.dtype)
 
 
 def _route(router: jax.Array, xf: jax.Array, cfg: ModelConfig):
@@ -101,6 +122,40 @@ def _capacity(tokens: int, cfg: ModelConfig) -> int:
     return min(tokens, max(8, c))
 
 
+def _spgemm_expert_body(xf: jax.Array, cap: int, cfg: ModelConfig,
+                        local: bool):
+    """Expert body for the sparse x sparse path (``moe_expert_path``).
+
+    No gather of the inputs: the capacity winners keep their combine
+    weight, every other row of the full token set is zeroed, and the
+    expert FFN runs as SpGEMM — the masked kernels skip the dead
+    row-blocks via the ``"zeros"`` activation class.  The capacity drop
+    (top-C per expert) and the weighted scatter-add combine are
+    replicated verbatim from the gather path (same scatter, same
+    multiply — an elementwise ``acc + y*w`` form would let XLA contract
+    it to an FMA inside the scan body and drift one ulp), and the FFN
+    is row-independent, so outputs are bit-identical on fp32.
+    """
+
+    def expert_body(acc, inp):
+        wp, w_e = inp                                    # w_e: (T,) combine wts
+        score = jnp.where(w_e > 0, w_e, -jnp.inf)
+        top_w, top_idx = jax.lax.top_k(score, cap)       # capacity winners
+        keep = top_w > 0
+        w_tok = jnp.zeros((xf.shape[0],), jnp.float32).at[top_idx].set(
+            jnp.where(keep, top_w, 0.0))
+        routed = (w_tok > 0)[:, None]                    # (T, 1)
+        x_full = xf * routed.astype(xf.dtype)
+        y = _expert_ffn(wp, x_full, cfg,
+                        activation=ActivationSpec("zeros"), local=local)
+        y_e = jnp.take(y, top_idx, axis=0)               # (cap, d)
+        y_e = y_e * (jnp.where(keep, top_w, 0.0)[:, None]).astype(y.dtype)
+        acc = acc.at[top_idx].add(y_e)
+        return acc, None
+
+    return expert_body
+
+
 def _moe_local(p: Params, x: jax.Array, cfg: ModelConfig, n_local: int) -> jax.Array:
     """Experts stacked (n_local, ...). x: (B, T, d) -> (B, T, d)."""
     b, t, d = x.shape
@@ -119,6 +174,9 @@ def _moe_local(p: Params, x: jax.Array, cfg: ModelConfig, n_local: int) -> jax.A
         y_e = y_e * (jnp.where(keep, top_w, 0.0)[:, None]).astype(y_e.dtype)
         acc = acc.at[top_idx].add(y_e)
         return acc, None
+
+    if cfg.moe_expert_path == "spgemm":
+        expert_body = _spgemm_expert_body(xf, cap, cfg, local=False)
 
     # weights columns for the local experts only (offset handled by caller
     # slicing p["router"]-aligned weight matrix — here full when local=E)
@@ -157,6 +215,12 @@ def _moe_shardmap(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
             y_e = _expert_ffn(wp, x_e, cfg)
             y_e = y_e * (jnp.where(keep, top_w, 0.0)[:, None]).astype(y_e.dtype)
             return acc.at[top_idx].add(y_e), None
+
+        if cfg.moe_expert_path == "spgemm":
+            # full-token SpGEMM dissolves the experts-inside-shard_map
+            # nesting: local=True lets each expert linear plan a kernel
+            # on its per-rank slice instead of declining to jnp
+            expert_body = _spgemm_expert_body(xf, cap, cfg, local=True)
 
         acc0 = jnp.zeros_like(xf)
         acc, _ = jax.lax.scan(expert_body, acc0, (experts_loc, w_local.T))

@@ -1,10 +1,10 @@
 """``ServingSpec`` + ``prepare``: the one offline-prep entry point.
 
 Before this module, preparing weights for serving meant composing four
-ad-hoc steps by hand — ``convert_to_serving(..., quantize=...)`` per
-leaf, ``quantize_tree`` for whole models, ``calibrate_activation_scales``
-for static scales, and a ``DispatchConfig`` + mesh placement dance copied
-between ``launch/serve.py``, the examples, and the benchmarks.  Now:
+ad-hoc steps by hand — per-leaf layout conversion + quantization,
+whole-model tree walks, activation-scale calibration for static scales,
+and a ``DispatchConfig`` + mesh placement dance copied between
+``launch/serve.py``, the examples, and the benchmarks.  Now:
 
 ```python
 prepared = repro.serving.prepare(params, ServingSpec(layout="compressed",
@@ -13,8 +13,11 @@ prepared = repro.serving.prepare(params, ServingSpec(layout="compressed",
 ```
 
 does all of it, in the documented order (layout conversion -> weight
-quantization -> activation-scale calibration -> mesh placement), and the
-old entry points are warn-once deprecation shims.
+quantization -> activation-scale calibration -> mesh placement).  The
+old per-piece entry points (``convert_to_serving``, ``quantize_tree``,
+``calibrate_activation_scales``) went through a warn-once deprecation
+cycle and have been removed; ``convert_layout`` remains the offline
+single-leaf primitive this pipeline composes.
 """
 
 from __future__ import annotations

@@ -1,0 +1,317 @@
+"""Dynamic activation sparsity: mask construction, the GemmProblem plan
+API, in-kernel block-skip parity across all three kernel families, the
+epilogue-unified gate-up entry point, and the MoE SpGEMM expert path.
+
+The execution-class contract under test: the activation mask is ALWAYS
+applied at trace time (so every fallback is bit-identical by
+construction), and the in-kernel block skip is an optimization any path
+may decline — a declined skip must still bit-match the dense dispatch.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SparsityConfig, apply_gate_up, apply_linear, nm
+from repro.core import quantize as q
+from repro.core.sparse_linear import init_linear
+from repro.kernels import autotune, dispatch, epilogue as epilib
+from repro.kernels.actsparse import ActivationSpec, apply_mask, block_maps
+
+
+def _allclose(got, want, atol=1e-5):
+    got, want = np.asarray(got, np.float32), np.asarray(want, np.float32)
+    scale = np.abs(want).max() + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale, atol=atol)
+
+
+def _w(k=128, o=64, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (k, o), jnp.float32)
+
+
+def _family_params(family, w, n):
+    if family == "dense":
+        return {"w": w}
+    if family == "compressed":
+        pruned, _ = nm.prune_nm(w, n, 4)
+        c = nm.compress_nm(pruned, n, 4)
+        return {"values": c.values, "meta_packed": nm.pack_meta(c.meta)}
+    if family == "gather":
+        k = w.shape[0]
+        kc = k * n // 4
+        base = jnp.arange(kc, dtype=jnp.int32) % 4
+        idx = jnp.sort(base.reshape(-1, n), axis=1).reshape(kc)
+        blk = (jnp.arange(kc, dtype=jnp.int32) // n) * 4
+        return {"values": w[blk + idx, :], "gather_idx": idx}
+    raise ValueError(family)
+
+
+def _rowsparse_x(b=32, k=128, live=8, seed=1):
+    """(b, k) activations with only the first ``live`` rows non-zero."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, k), jnp.float32)
+    return x.at[live:].set(0.0)
+
+
+# ---------------------------------------------------------------------------
+# mask construction
+# ---------------------------------------------------------------------------
+
+def test_apply_mask_semantics():
+    x = jnp.asarray([[3.0, -2.0, 0.5, -0.1],
+                     [0.0, 0.0, 0.0, 0.0]], jnp.float32)
+    # zeros: identity — the sparsity is already in the data
+    assert jnp.array_equal(apply_mask(x, ActivationSpec("zeros")), x)
+    # threshold: keep strictly-above-|t| entries
+    y = apply_mask(x, ActivationSpec("threshold", threshold=0.4))
+    assert jnp.array_equal(y, jnp.asarray([[3.0, -2.0, 0.5, 0.0],
+                                           [0.0, 0.0, 0.0, 0.0]]))
+    # topk: keep the k largest magnitudes per row
+    y = apply_mask(x, ActivationSpec("topk", k=2))
+    assert jnp.array_equal(y[0], jnp.asarray([3.0, -2.0, 0.0, 0.0]))
+
+
+def test_activation_spec_points():
+    assert ActivationSpec("topk", k=64).point == "top64"
+    assert ActivationSpec("threshold", threshold=0.5).point == "thr0.5"
+    assert ActivationSpec("zeros").point == "zeros"
+
+
+def test_block_maps_live_blocks_and_readdressing():
+    x = jnp.zeros((8, 16), jnp.float32)
+    x = x.at[0, 0].set(1.0)      # block (0, 0) live
+    x = x.at[0, 12].set(1.0)     # block (0, 3) live
+    kmap, kmask = block_maps(x, block_b=4, block_ke=4)
+    assert kmap.shape == (2, 4) and kmask.shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(kmask),
+                                  [[1, 0, 0, 1], [0, 0, 0, 0]])
+    # dead blocks re-address the previous live block (copy elision)
+    np.testing.assert_array_equal(np.asarray(kmap),
+                                  [[0, 0, 0, 3], [0, 0, 0, 0]])
+    with pytest.raises(ValueError):
+        block_maps(x, block_b=3, block_ke=4)
+
+
+# ---------------------------------------------------------------------------
+# GemmProblem plan API: canonical object vs legacy kwarg shim
+# ---------------------------------------------------------------------------
+
+_MATRIX = [
+    dict(mode="dense", b=32, ke=128, o=64, n=4, m=4),
+    dict(mode="compressed", b=32, ke=128, o=64, n=2, m=4),
+    dict(mode="gather", b=32, ke=128, o=64, n=2, m=4),
+    dict(mode="compressed", b=32, ke=128, o=64, n=1, m=4,
+         epilogue="gelu"),
+    dict(mode="dense", b=32, ke=128, o=64, n=4, m=4,
+         epilogue="silu_mul", dual=True),
+    dict(mode="compressed", b=32, ke=128, o=64, n=2, m=4,
+         activation="top16"),
+    dict(mode="compressed", b=32, ke=100, o=64, n=1, m=4),  # jnp decline
+]
+
+
+@pytest.mark.parametrize("cell", _MATRIX,
+                         ids=lambda c: "-".join(str(v) for v in c.values()))
+def test_problem_vs_legacy_kwarg_plan_parity(cell):
+    """plan(GemmProblem(...)) and the warn-once kwarg shim produce the
+    SAME decision across the execution-class matrix."""
+    dcfg = dispatch.DispatchConfig(backend="interpret")
+    d_new = dispatch.plan(dispatch.GemmProblem(**cell), dispatch=dcfg)
+    q._DEPRECATION_WARNED.clear()
+    kwargs = dict(cell)
+    mode = kwargs.pop("mode")
+    with pytest.warns(DeprecationWarning, match="GemmProblem"):
+        d_old = dispatch.plan(mode, dispatch=dcfg, **kwargs)
+    assert d_new == d_old
+
+
+def test_legacy_kwarg_shim_warns_once():
+    import warnings
+
+    q._DEPRECATION_WARNED.clear()
+    with pytest.warns(DeprecationWarning):
+        dispatch.plan("dense", b=8, ke=128, o=64)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        dispatch.plan("dense", b=8, ke=128, o=64)  # second call: silent
+
+
+def test_mixed_problem_and_kwargs_rejected():
+    p = dispatch.GemmProblem("dense", b=8, ke=128, o=64)
+    with pytest.raises(TypeError, match="no per-axis kwargs"):
+        dispatch.plan(p, b=8)
+
+
+def test_problem_is_frozen_and_hashable():
+    p = dispatch.GemmProblem("dense", b=8, ke=128, o=64)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.b = 16
+    assert hash(p) == hash(dispatch.GemmProblem("dense", b=8, ke=128, o=64))
+
+
+def test_cache_key_has_activation_axis():
+    base = autotune.cache_key("tile_gemm", 32, 128, 64, 4, 4, jnp.float32)
+    act = autotune.cache_key("tile_gemm", 32, 128, 64, 4, 4, jnp.float32,
+                             activation="top16")
+    assert base != act and "_act" in act
+
+
+# ---------------------------------------------------------------------------
+# masked-kernel parity: families x sparsity x dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["fp32", "int8"])
+@pytest.mark.parametrize("n", [1, 2, 4])
+@pytest.mark.parametrize("family", ["dense", "compressed", "gather"])
+def test_masked_kernel_parity(family, n, dtype):
+    """The skip path must bit-match the dense dispatch on identical
+    (pre-masked) inputs, and allclose-match the jnp reference."""
+    if family == "dense" and n != 4:
+        pytest.skip("dense has no sparsity axis")
+    cfg = SparsityConfig(n=n, m=4, mode=family)
+    p = _family_params(family, _w(), n)
+    if dtype == "int8":
+        p = q.quantize_linear(p)
+    x = _rowsparse_x()                      # 75% of rows zero
+    spec = ActivationSpec("threshold", threshold=0.0)
+    with dispatch.use_dispatch(backend="interpret"):
+        d = dispatch.plan(
+            dispatch.GemmProblem(
+                family, b=x.shape[0], ke=x.shape[1], o=64, n=n, m=4,
+                dtype=jnp.int8 if dtype == "int8" else x.dtype,
+                activation=spec.point),
+            dispatch=dispatch.DispatchConfig(backend="interpret"))
+        assert d.uses_kernel and d.activation_skip, dispatch.describe(d)
+        y_masked = apply_linear(p, x, cfg, activation=spec)
+        y_dense = apply_linear(p, x, cfg)
+    # skip is an elision, not an approximation
+    assert jnp.array_equal(y_masked, y_dense)
+    with dispatch.use_dispatch(backend="jnp"):
+        y_ref = apply_linear(p, x, cfg, activation=spec)
+    _allclose(y_masked, y_ref, atol=3e-2 if dtype == "int8" else 1e-5)
+
+
+@pytest.mark.parametrize("kind,kw", [("topk", {"k": 16}),
+                                     ("threshold", {"threshold": 0.8})])
+def test_masked_kernel_matches_masked_reference(kind, kw):
+    """A value-selecting mask (not just zeros) computes the GEMM of the
+    MASKED activations — vs a plain jnp reference on apply_mask(x)."""
+    w = _w()
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 128), jnp.float32)
+    spec = ActivationSpec(kind, **kw)
+    cfg = SparsityConfig(mode="dense")
+    with dispatch.use_dispatch(backend="interpret"):
+        y = apply_linear({"w": w}, x, cfg, activation=spec)
+    _allclose(y, apply_mask(x, spec) @ w)
+
+
+def test_rowwise_fallback_applies_mask_without_skip():
+    """rowwise has no masked kernel: mask-only execution, same math."""
+    cfg = SparsityConfig(n=2, m=4, mode="rowwise")
+    from repro.core.sparse_linear import convert_layout
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (128, 64)))
+    w = jnp.asarray(w * (np.random.default_rng(0).random((128, 64)) < 0.3),
+                    jnp.float32)
+    p = convert_layout({"w": w}, cfg, "rowwise")
+    x = _rowsparse_x()
+    spec = ActivationSpec("topk", k=32)
+    y = apply_linear(p, x, cfg, activation=spec)
+    y_ref = apply_linear(p, apply_mask(x, spec), cfg)
+    assert jnp.array_equal(y, y_ref)
+
+
+# ---------------------------------------------------------------------------
+# gate-up epilogue unification (the retired requant= side-channel)
+# ---------------------------------------------------------------------------
+
+def test_gate_up_epilogue_object_default_parity():
+    cfg = SparsityConfig(mode="dense")
+    pg = init_linear(jax.random.PRNGKey(5), 128, 64, cfg, jnp.float32)
+    pu = init_linear(jax.random.PRNGKey(6), 128, 64, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(7), (16, 128), jnp.float32)
+    y0 = apply_gate_up(pg, pu, x, cfg)
+    y1 = apply_gate_up(pg, pu, x, cfg, epilogue=epilib.make(act="silu_mul"))
+    assert jnp.array_equal(y0, y1)
+
+
+def test_gate_up_rejects_off_lattice_epilogue():
+    cfg = SparsityConfig(mode="dense")
+    pg = init_linear(jax.random.PRNGKey(5), 128, 64, cfg, jnp.float32)
+    pu = init_linear(jax.random.PRNGKey(6), 128, 64, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(7), (16, 128), jnp.float32)
+    with pytest.raises(ValueError, match="silu_mul"):
+        apply_gate_up(pg, pu, x, cfg, epilogue=epilib.make(act="gelu"))
+
+
+def test_gate_up_rowwise_fallback_applies_requant():
+    """The rowwise two-call fallback must APPLY a requesting epilogue's
+    requantization (the old side-channel silently dropped it)."""
+    cfg = SparsityConfig(n=2, m=4, mode="rowwise")
+    pg = init_linear(jax.random.PRNGKey(8), 128, 64, cfg, jnp.float32)
+    pu = init_linear(jax.random.PRNGKey(9), 128, 64, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(10), (16, 128), jnp.float32)
+    scale = jnp.abs(jax.random.normal(jax.random.PRNGKey(11), (64,))) + 0.5
+    y = apply_gate_up(pg, pu, x, cfg,
+                      epilogue=epilib.make(act="silu_mul", requant="int8",
+                                           requant_scale=scale))
+    assert y.dtype == jnp.int8
+    # and the values are the requantized silu_mul of the two projections
+    y_g = apply_linear(pg, x, cfg)
+    y_u = apply_linear(pu, x, cfg)
+    h = jax.nn.silu(y_g.astype(jnp.float32)) * y_u.astype(jnp.float32)
+    want = epilib.requant_rows(h, scale, "int8")
+    assert jnp.array_equal(y, want)
+
+
+# ---------------------------------------------------------------------------
+# MoE expert SpGEMM path
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(**kw):
+    from repro.models.config import ModelConfig
+    base = dict(name="t", family="moe", num_layers=1, d_model=64,
+                num_heads=2, num_kv_heads=2, d_ff=128, vocab_size=256,
+                num_experts=4, top_k=2, moe_capacity_factor=16.0,
+                dtype="float32", sparsity=SparsityConfig(mode="dense"))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_moe_spgemm_bit_identical_to_gather_fp32():
+    from repro.models import moe
+
+    cfg = _moe_cfg()
+    p = moe.init_moe(jax.random.PRNGKey(11), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, 16, 64), jnp.float32)
+    y_gather = moe.apply_moe(p, x, cfg)
+    y_spgemm = moe.apply_moe(
+        p, x, dataclasses.replace(cfg, moe_expert_path="spgemm"))
+    assert jnp.array_equal(y_spgemm, y_gather)
+
+
+def test_moe_spgemm_bit_identical_with_sparse_weights_and_kernels():
+    from repro.models import moe
+
+    cfg = _moe_cfg(sparsity=SparsityConfig(n=2, m=4, mode="compressed"))
+    p = moe.init_moe(jax.random.PRNGKey(13), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(14), (2, 16, 64), jnp.float32)
+    with dispatch.use_dispatch(backend="interpret"):
+        y_gather = moe.apply_moe(p, x, cfg)
+        y_spgemm = moe.apply_moe(
+            p, x, dataclasses.replace(cfg, moe_expert_path="spgemm"))
+    assert jnp.array_equal(y_spgemm, y_gather)
+
+
+def test_moe_spgemm_dropping_capacity_matches_gather():
+    """At a tight capacity factor both paths drop the SAME tokens."""
+    from repro.models import moe
+
+    cfg = _moe_cfg(moe_capacity_factor=1.0)
+    p = moe.init_moe(jax.random.PRNGKey(15), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(16), (2, 16, 64), jnp.float32)
+    y_gather = moe.apply_moe(p, x, cfg)
+    y_spgemm = moe.apply_moe(
+        p, x, dataclasses.replace(cfg, moe_expert_path="spgemm"))
+    assert jnp.array_equal(y_spgemm, y_gather)

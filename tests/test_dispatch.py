@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SparsityConfig, apply_linear, convert_to_serving, init_linear
+from repro.core import SparsityConfig, apply_linear, convert_layout, init_linear
 from repro.kernels import autotune, dispatch, registry
 
 
@@ -59,7 +59,7 @@ def test_converted_serving_parity_3d_batch():
     cfg_m = SparsityConfig(n=2, m=4, mode="masked")
     p = init_linear(jax.random.PRNGKey(0), 64, 32, cfg_m, dtype=jnp.float32)
     cfg_c = SparsityConfig(n=2, m=4, mode="compressed")
-    pc = convert_to_serving(p, cfg_c, "compressed")
+    pc = convert_layout(p, cfg_c, "compressed")
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 64))
     with dispatch.use_dispatch(backend="jnp"):
         y_ref = apply_linear(pc, x, cfg_c)
@@ -110,20 +110,23 @@ def test_registry_fallback_on_unfittable_shape():
     # meta packing) -> no kernel fits -> engine plans the jnp reference
     assert registry.select("compressed", b=4, ke=100, o=32, n=1, m=4,
                            dtype=jnp.float32, backend="interpret") is None
-    d = dispatch.plan("compressed", b=4, ke=100, o=32, n=1, m=4,
-                      dtype=jnp.float32,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=4, ke=100, o=32, n=1, m=4,
+                             dtype=jnp.float32),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert not d.uses_kernel and "no registered kernel" in d.reason
 
 
 def test_masked_and_jnp_backend_always_reference():
-    d = dispatch.plan("masked", b=16, ke=128, o=64, n=2, m=4,
-                      dtype=jnp.float32,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("masked", b=16, ke=128, o=64, n=2, m=4,
+                             dtype=jnp.float32),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert not d.uses_kernel
-    d = dispatch.plan("compressed", b=16, ke=128, o=64, n=2, m=4,
-                      dtype=jnp.float32,
-                      dispatch=dispatch.DispatchConfig(backend="jnp"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=16, ke=128, o=64, n=2, m=4,
+                             dtype=jnp.float32),
+        dispatch=dispatch.DispatchConfig(backend="jnp"))
     assert not d.uses_kernel
 
 
@@ -213,14 +216,16 @@ def test_attention_registry_entry_and_plan():
     sel = registry.select("attention", b=256, ke=256, o=64, n=4, m=4,
                           dtype=jnp.bfloat16, backend="interpret")
     assert sel is not None and sel[0].name == "flash_attention"
-    d = dispatch.plan("attention", b=256, ke=256, o=64, n=4, m=4,
-                      dtype=jnp.bfloat16,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("attention", b=256, ke=256, o=64, n=4, m=4,
+                             dtype=jnp.bfloat16),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert d.uses_kernel and d.kernel == "flash_attention"
     # odd head_dim fails the lane constraint -> jnp reason in plan
-    d = dispatch.plan("attention", b=256, ke=256, o=63, n=4, m=4,
-                      dtype=jnp.bfloat16,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("attention", b=256, ke=256, o=63, n=4, m=4,
+                             dtype=jnp.bfloat16),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert not d.uses_kernel and "no registered kernel" in d.reason
 
 
@@ -355,8 +360,9 @@ def test_autotuned_blocks_feed_dispatch(tmp_path, monkeypatch):
     key = autotune.cache_key("nm_spmm", 8, 64, 32, 2, 4, jnp.float32)
     tuned = autotune.lookup("interpret", key)
     assert tuned is not None
-    d = dispatch.plan("compressed", b=8, ke=64, o=32, n=2, m=4,
-                      dtype=jnp.float32,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=8, ke=64, o=32, n=2, m=4,
+                             dtype=jnp.float32),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert d.blocks == tuned and "autotuned" in d.reason
     autotune.clear_memory_cache()

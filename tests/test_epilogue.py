@@ -103,21 +103,26 @@ def test_autotune_keys_distinct_per_lattice_point():
 
 
 def test_plan_carries_epilogue_and_describe():
-    d = dispatch.plan("dense", b=B, ke=K, o=O, n=4, m=4,
-                      dtype=jnp.float32, dispatch=KERN,
-                      epilogue="bias+gelu")
+    d = dispatch.plan(
+        dispatch.GemmProblem("dense", b=B, ke=K, o=O, n=4, m=4,
+                             dtype=jnp.float32, epilogue="bias+gelu"),
+        dispatch=KERN)
     assert d.epilogue == "bias+gelu" and d.epilogue_fused
     assert "epilogue=bias+gelu[fused]" in dispatch.describe(d)
     # mesh env active without a spec: jnp tier, epilogue applied unfused
-    d2 = dispatch.plan("dense", b=B, ke=K, o=O, n=4, m=4,
-                       dtype=jnp.float32, dispatch=KERN,
-                       epilogue="bias+gelu", sharded=True)
+    d2 = dispatch.plan(
+        dispatch.GemmProblem("dense", b=B, ke=K, o=O, n=4, m=4,
+                             dtype=jnp.float32, epilogue="bias+gelu",
+                             sharded=True),
+        dispatch=KERN)
     assert not d2.epilogue_fused and d2.backend == "jnp"
     assert "epilogue=bias+gelu[jnp]" in dispatch.describe(d2)
     # autodiff declines fusion
-    d3 = dispatch.plan("dense", b=B, ke=K, o=O, n=4, m=4,
-                       dtype=jnp.float32, dispatch=KERN,
-                       epilogue="gelu", differentiating=True)
+    d3 = dispatch.plan(
+        dispatch.GemmProblem("dense", b=B, ke=K, o=O, n=4, m=4,
+                             dtype=jnp.float32, epilogue="gelu",
+                             differentiating=True),
+        dispatch=KERN)
     assert not d3.epilogue_fused and d3.backend == "jnp"
 
 
@@ -137,9 +142,10 @@ def test_fused_matches_unfused_float(family, n, point):
     cfg = _cfg(family, n)
     x = _x()
     epi = _epi(point)
-    d = dispatch.plan(cfg.mode, b=B, ke=x.shape[1], o=O, n=n, m=4,
-                      dtype=jnp.float32, dispatch=KERN,
-                      epilogue=epi.spec.point)
+    d = dispatch.plan(
+        dispatch.GemmProblem(cfg.mode, b=B, ke=x.shape[1], o=O, n=n, m=4,
+                             dtype=jnp.float32, epilogue=epi.spec.point),
+        dispatch=KERN)
     assert d.epilogue_fused, dispatch.describe(d)
     got = sparse_matmul(x, params, cfg, dispatch=KERN, epilogue=epi)
     # unfused reference: same GEMM through the jnp tier + apply_reference
@@ -163,8 +169,10 @@ def test_fused_rides_quantized_flush(family, qdtype):
     x = _x()
     epi = _epi(dict(act="gelu", bias=True))
     qdt = q.quant_dtype(params)
-    d = dispatch.plan(cfg.mode, b=B, ke=x.shape[1], o=O, n=n, m=4,
-                      dtype=qdt, dispatch=KERN, epilogue=epi.spec.point)
+    d = dispatch.plan(
+        dispatch.GemmProblem(cfg.mode, b=B, ke=x.shape[1], o=O, n=n, m=4,
+                             dtype=qdt, epilogue=epi.spec.point),
+        dispatch=KERN)
     assert d.epilogue_fused, dispatch.describe(d)
     got = sparse_matmul(x, params, cfg, dispatch=KERN, epilogue=epi)
     bare = sparse_matmul(x, params, cfg, dispatch=KERN)
@@ -219,9 +227,11 @@ def test_unfittable_tiles_fall_back_bit_exact():
     cfg = _cfg("compressed", 2)
     x = _x(k=40)
     epi = _epi(dict(act="silu", bias=True))
-    d = dispatch.plan("compressed", b=B, ke=40, o=O, n=2, m=4,
-                      dtype=q.quant_dtype(params), dispatch=KERN,
-                      epilogue=epi.spec.point)
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=B, ke=40, o=O, n=2, m=4,
+                             dtype=q.quant_dtype(params),
+                             epilogue=epi.spec.point),
+        dispatch=KERN)
     assert not d.uses_kernel and not d.epilogue_fused
     got = sparse_matmul(x, params, cfg, dispatch=KERN, epilogue=epi)
     want = epilib.apply_reference(
@@ -259,9 +269,10 @@ def test_gate_up_fused_matches_two_singles(family, n):
     pu = _family_params(family, _w(seed=2), n)
     cfg = _cfg(family, n)
     x = _x()
-    d = dispatch.plan(cfg.mode, b=B, ke=x.shape[1], o=O, n=n, m=4,
-                      dtype=jnp.float32, dispatch=KERN,
-                      epilogue="silu_mul", dual=True)
+    d = dispatch.plan(
+        dispatch.GemmProblem(cfg.mode, b=B, ke=x.shape[1], o=O, n=n, m=4,
+                             dtype=jnp.float32, epilogue="silu_mul", dual=True),
+        dispatch=KERN)
     assert d.epilogue_fused, dispatch.describe(d)
     got = gate_up_matmul(x, pg, pu, cfg, dispatch=KERN)
     y_g = sparse_matmul(x, pg, cfg, dispatch=KERN)

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SparsityConfig, apply_linear, convert_to_serving, nm
+from repro.core import SparsityConfig, apply_linear, convert_layout, nm
 from repro.core import quantize as q
 from repro.kernels import autotune, dispatch, registry
 
@@ -109,27 +109,27 @@ def test_fp8_static_scale_saturates_never_nan():
     assert got[1, 0] == 448.0 and got[1, 1] == -448.0
 
 
-def test_convert_to_serving_fp8_every_mode():
+def test_convert_layout_fp8_every_mode():
     w = _w()
-    dense = convert_to_serving({"w": w}, SparsityConfig(mode="dense"),
+    dense = convert_layout({"w": w}, SparsityConfig(mode="dense"),
                                "dense", quantize="fp8")
     assert dense["w"].dtype == FP8 and dense["scale"].shape == (64,)
     cfg = SparsityConfig(n=2, m=4, mode="compressed")
-    comp = convert_to_serving({"w": w}, cfg, "compressed", quantize="fp8")
+    comp = convert_layout({"w": w}, cfg, "compressed", quantize="fp8")
     assert comp["values"].dtype == FP8 and "meta_packed" in comp
-    gath = convert_to_serving({"w": w}, SparsityConfig(n=2, m=4, mode="gather"),
+    gath = convert_layout({"w": w}, SparsityConfig(n=2, m=4, mode="gather"),
                               "gather", quantize="fp8")
     assert gath["values"].dtype == FP8 and "gather_idx" in gath
-    rw = convert_to_serving({"w": w}, cfg, "rowwise", quantize="fp8")
+    rw = convert_layout({"w": w}, cfg, "rowwise", quantize="fp8")
     for seg in rw["rowwise"].values():
         assert seg["values"].dtype == FP8 and "scale" in seg
     with pytest.raises(ValueError):
-        convert_to_serving({"w": w}, cfg, "compressed", quantize="fp4")
+        convert_layout({"w": w}, cfg, "compressed", quantize="fp4")
 
 
 def test_quantize_tree_fp8_alias():
     w = _w(64, 32)
-    qt = q.quantize_tree({"blk": {"w_in": {"w": w}}}, "fp8")
+    qt = q._quantize_tree({"blk": {"w_in": {"w": w}}}, "fp8")
     assert qt["blk"]["w_in"]["w"].dtype == FP8
     assert q.quant_dtype(qt["blk"]["w_in"]) == jnp.dtype(FP8)
 
@@ -230,8 +230,10 @@ def test_fp8_tiling_stricter_than_fp32():
                            dtype=jnp.float32, backend="interpret") is not None
     assert registry.select("compressed", b=32, ke=40, o=64, n=2, m=4,
                            dtype=FP8, backend="interpret") is None
-    d = dispatch.plan("compressed", b=32, ke=40, o=64, n=2, m=4, dtype=FP8,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=32, ke=40, o=64, n=2, m=4,
+                             dtype=FP8),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert not d.uses_kernel and "no registered kernel" in d.reason
     assert "float8_e4m3fn" in d.reason
 
@@ -276,9 +278,10 @@ def test_fp8_autodiff_falls_back_to_dequant_reference():
 def test_fp8_shard_spec_plans_shard_map():
     spec = dispatch.ShardSpec(
         mesh=types.SimpleNamespace(shape={"model": 2}), ke="model")
-    d = dispatch.plan("compressed", b=32, ke=128, o=64, n=2, m=4,
-                      dtype=FP8, shard=spec,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=32, ke=128, o=64, n=2, m=4,
+                             dtype=FP8, shard=spec),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert d.uses_kernel and d.uses_shard_map, dispatch.describe(d)
     assert d.kernel == "nm_spmm_fp8" and d.collective == "psum"
     assert d.act_scales == "dynamic" and d.dtype == "float8_e4m3fn"
@@ -328,7 +331,7 @@ def test_fp8_calibration_uses_fp8_qmax():
             b = apply_linear(p["f8"]["w_in"], x0, cfg)
         return a + b
 
-    calibrated, n_sites = q.calibrate_activation_scales(tree, batch_fn)
+    calibrated, n_sites = q._calibrate_activation_scales(tree, batch_fn)
     assert n_sites == 2
     absmax = float(jnp.max(jnp.abs(x0)))
     s_i8 = float(calibrated["i8"]["w_in"][q.ACT_SCALE_KEY])
@@ -429,9 +432,10 @@ def test_plan_fp8_shard_map_matrix(env):
         for mode, n, kernel in cases:
             for hint, coll in [("col", "none"), ("row", "psum")]:
                 shard = dispatch.shard_spec_from_env(hint)
-                d = dispatch.plan(mode, b=32, ke=512, o=256, n=n, m=4,
-                                  dtype=FP8, dispatch=dcfg,
-                                  sharded=True, shard=shard)
+                d = dispatch.plan(
+                    dispatch.GemmProblem(mode, b=32, ke=512, o=256, n=n, m=4,
+                                         dtype=FP8, sharded=True, shard=shard),
+                    dispatch=dcfg)
                 assert d.uses_shard_map and d.kernel == kernel, (
                     mode, n, hint, dispatch.describe(d))
                 assert d.collective == coll

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SparsityConfig, apply_linear, convert_to_serving, nm
+from repro.core import SparsityConfig, apply_linear, convert_layout, nm
 from repro.core import quantize as q
 from repro.kernels import autotune, dispatch, registry
 
@@ -29,7 +29,7 @@ def _w(k=128, o=64, seed=0):
 def _family_params(family, w, n):
     """Serving-layout params for one kernel family at sparsity n:4.
 
-    Built by hand (not via convert_to_serving) so n=4 genuinely
+    Built by hand (not via convert_layout) so n=4 genuinely
     exercises the compressed and gather layouts instead of degenerating
     to dense.
     """
@@ -75,22 +75,22 @@ def test_quantize_rows_bound_and_zero_rows():
     assert not np.isnan(np.asarray(xs)).any()
 
 
-def test_convert_to_serving_quantizes_every_mode():
+def test_convert_layout_quantizes_every_mode():
     w = _w()
-    dense = convert_to_serving({"w": w}, SparsityConfig(mode="dense"),
+    dense = convert_layout({"w": w}, SparsityConfig(mode="dense"),
                                "dense", quantize="int8")
     assert dense["w"].dtype == jnp.int8 and dense["scale"].shape == (64,)
     cfg = SparsityConfig(n=2, m=4, mode="compressed")
-    comp = convert_to_serving({"w": w}, cfg, "compressed", quantize="int8")
+    comp = convert_layout({"w": w}, cfg, "compressed", quantize="int8")
     assert comp["values"].dtype == jnp.int8 and "meta_packed" in comp
-    gath = convert_to_serving({"w": w}, SparsityConfig(n=2, m=4, mode="gather"),
+    gath = convert_layout({"w": w}, SparsityConfig(n=2, m=4, mode="gather"),
                               "gather", quantize="int8")
     assert gath["values"].dtype == jnp.int8 and "gather_idx" in gath
-    rw = convert_to_serving({"w": w}, cfg, "rowwise", quantize="int8")
+    rw = convert_layout({"w": w}, cfg, "rowwise", quantize="int8")
     for seg in rw["rowwise"].values():
         assert seg["values"].dtype == jnp.int8 and "scale" in seg
     with pytest.raises(ValueError):
-        convert_to_serving({"w": w}, cfg, "compressed", quantize="fp4")
+        convert_layout({"w": w}, cfg, "compressed", quantize="fp4")
 
 
 def test_quantize_tree_touches_only_linear_leaves():
@@ -101,7 +101,7 @@ def test_quantize_tree_touches_only_linear_leaves():
                 "w_in": {"w": jnp.stack([w, w])}},   # stacked experts
         "norm": {"gamma": jnp.ones((64,))},
     }
-    qt = q.quantize_tree(tree)
+    qt = q._quantize_tree(tree)
     assert qt["embed"].dtype == tree["embed"].dtype
     assert qt["moe"]["router"].dtype == tree["moe"]["router"].dtype
     assert qt["norm"]["gamma"].dtype == jnp.float32
@@ -191,9 +191,10 @@ def test_int8_tiling_stricter_than_fp32():
                            dtype=jnp.float32, backend="interpret") is not None
     assert registry.select("compressed", b=32, ke=40, o=64, n=2, m=4,
                            dtype=jnp.int8, backend="interpret") is None
-    d = dispatch.plan("compressed", b=32, ke=40, o=64, n=2, m=4,
-                      dtype=jnp.int8,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=32, ke=40, o=64, n=2, m=4,
+                             dtype=jnp.int8),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert not d.uses_kernel and "no registered kernel" in d.reason
 
 
@@ -201,8 +202,10 @@ def test_plan_reason_uses_canonical_dtype_name():
     """The no-entry-fits reason prints 'float32'/'int8', never the raw
     ``<class 'jax.numpy.float32'>`` repr (stable reports + asserts)."""
     for dt, name in [(jnp.float32, "float32"), (jnp.int8, "int8")]:
-        d = dispatch.plan("compressed", b=4, ke=100, o=32, n=1, m=4, dtype=dt,
-                          dispatch=dispatch.DispatchConfig(backend="interpret"))
+        d = dispatch.plan(
+            dispatch.GemmProblem("compressed", b=4, ke=100, o=32, n=1, m=4,
+                                 dtype=dt),
+            dispatch=dispatch.DispatchConfig(backend="interpret"))
         assert not d.uses_kernel
         assert name in d.reason and "<class" not in d.reason
     assert registry.dtype_name(jnp.float32) == "float32"
@@ -234,25 +237,28 @@ def test_quantized_shard_spec_plans_shard_map():
     contraction), no longer the dequantize reference."""
     spec = dispatch.ShardSpec(
         mesh=types.SimpleNamespace(shape={"model": 2}), ke="model")
-    d = dispatch.plan("compressed", b=32, ke=128, o=64, n=2, m=4,
-                      dtype=jnp.int8, shard=spec,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=32, ke=128, o=64, n=2, m=4,
+                             dtype=jnp.int8, shard=spec),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert d.uses_kernel and d.uses_shard_map, dispatch.describe(d)
     assert d.kernel == "nm_spmm_int8" and d.collective == "psum"
     assert d.act_scales == "dynamic"
     assert "act-scales=dynamic" in dispatch.describe(d)
     # the fp32 twin of the same problem keeps the shard_map class too
-    d = dispatch.plan("compressed", b=32, ke=128, o=64, n=2, m=4,
-                      dtype=jnp.float32, shard=spec,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=32, ke=128, o=64, n=2, m=4,
+                             dtype=jnp.float32, shard=spec),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert d.uses_kernel and d.uses_shard_map and d.act_scales is None
     # a local contraction slice that misses the int8 sublane quantum
     # still declines to the reference: ke=48 slices the 2:4 metadata
     # cleanly (48 % 16 == 0) but the local ke=24 has no block hitting
     # the 64-multiple int8 quantum for n=2
-    d = dispatch.plan("compressed", b=32, ke=48, o=64, n=2, m=4,
-                      dtype=jnp.int8, shard=spec,
-                      dispatch=dispatch.DispatchConfig(backend="interpret"))
+    d = dispatch.plan(
+        dispatch.GemmProblem("compressed", b=32, ke=48, o=64, n=2, m=4,
+                             dtype=jnp.int8, shard=spec),
+        dispatch=dispatch.DispatchConfig(backend="interpret"))
     assert not d.uses_kernel and "no registered kernel" in d.reason
 
 
@@ -311,7 +317,7 @@ def test_calibrate_activation_scales_stacked_tree():
         return ys
 
     with dispatch.use_dispatch(backend="jnp"):
-        calibrated, n_sites = q.calibrate_activation_scales(tree, batch_fn)
+        calibrated, n_sites = q._calibrate_activation_scales(tree, batch_fn)
     assert n_sites == 1
     leaf = calibrated["blk"]["w_in"]
     # the scale broadcasts over the stacked layer dim (scan-sliceable)
@@ -346,8 +352,8 @@ def test_recalibration_through_cached_jit_records_fresh_store():
 
     x1 = jax.random.normal(jax.random.PRNGKey(5), (4, 64))
     x2 = 3.0 * x1      # same shapes -> jit cache hit on the second call
-    c1, n1 = q.calibrate_activation_scales(tree, lambda p: fwd(p, x1))
-    c2, n2 = q.calibrate_activation_scales(tree, lambda p: fwd(p, x2))
+    c1, n1 = q._calibrate_activation_scales(tree, lambda p: fwd(p, x1))
+    c2, n2 = q._calibrate_activation_scales(tree, lambda p: fwd(p, x2))
     assert n1 == 1 and n2 == 1
     s1 = float(c1["blk"]["w_in"][q.ACT_SCALE_KEY])
     s2 = float(c2["blk"]["w_in"][q.ACT_SCALE_KEY])
@@ -443,9 +449,11 @@ def test_plan_int8_shard_map_matrix(env):
         for mode, n, kernel in cases:
             for hint, coll in [("col", "none"), ("row", "psum")]:
                 shard = dispatch.shard_spec_from_env(hint)
-                d = dispatch.plan(mode, b=32, ke=512, o=256, n=n, m=4,
-                                  dtype=jnp.int8, dispatch=dcfg,
-                                  sharded=True, shard=shard)
+                d = dispatch.plan(
+                    dispatch.GemmProblem(mode, b=32, ke=512, o=256, n=n, m=4,
+                                         dtype=jnp.int8, sharded=True,
+                                         shard=shard),
+                    dispatch=dcfg)
                 assert d.uses_shard_map and d.kernel == kernel, (
                     mode, n, hint, dispatch.describe(d))
                 assert d.collective == coll
@@ -602,7 +610,7 @@ def test_quantized_moe_experts_decode_under_mesh(env):
     from repro.models.pjit_utils import use_axis_env
 
     cfg = get_smoke_config("qwen3_moe_235b_a22b")
-    params = q.quantize_tree(init_params(jax.random.PRNGKey(0), cfg))
+    params = q._quantize_tree(init_params(jax.random.PRNGKey(0), cfg))
 
     # static scales too: the (E,)-shaped act_scale aux leaf must survive
     # expert placement in both branches (it crashed _ff_dim_divisible)

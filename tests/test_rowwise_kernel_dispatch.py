@@ -9,7 +9,7 @@ import pytest
 
 from repro.core import rowwise
 from repro.core.sparse_linear import (
-    SparsityConfig, apply_linear, convert_to_serving, init_linear)
+    SparsityConfig, apply_linear, convert_layout, init_linear)
 from repro.kernels import dispatch
 
 
@@ -51,14 +51,14 @@ def test_rowwise_kernel_all_tiers_present():
 # ---------------------------------------------------------------------------
 
 def test_rowwise_apply_linear_exact():
-    """convert_to_serving(..., "rowwise") + apply_linear == x @ w, on both
+    """convert_layout(..., "rowwise") + apply_linear == x @ w, on both
     the jnp reference and the per-tier kernel dispatch."""
     rng = np.random.default_rng(7)
     k, o, b = 256, 96, 32
     w = rng.normal(size=(k, o)) * (rng.random((k, o)) < 0.15)
     w = jnp.asarray(w, jnp.float32)
     cfg = SparsityConfig(n=2, m=4, mode="rowwise")
-    p = convert_to_serving({"w": w}, cfg, "rowwise")
+    p = convert_layout({"w": w}, cfg, "rowwise")
     assert set(p) == {"rowwise", "inv_perm"}
     x = jax.random.normal(jax.random.PRNGKey(0), (b, k), jnp.float32)
     want = x @ w
@@ -89,7 +89,7 @@ def test_rowwise_leaves_visible_to_dispatch_report():
     w = jnp.asarray(rng.normal(size=(64, 32)) * (rng.random((64, 32)) < 0.3),
                     jnp.float32)
     cfg = SparsityConfig(n=2, m=4, mode="rowwise")
-    p = convert_to_serving({"w": w}, cfg, "rowwise")
+    p = convert_layout({"w": w}, cfg, "rowwise")
     items = list(dispatch.iter_linear_items({"ffn": {"w_out": p}}))
     assert items, "rowwise tiers should be discoverable"
     for names, leaf in items:

@@ -436,37 +436,22 @@ def test_prepare_on_bare_leaf_matches_convert_layout():
                                       np.asarray(want[k]))
 
 
-def test_deprecated_shims_warn_once_and_still_work():
-    """``convert_to_serving`` / ``quantize_tree`` /
-    ``calibrate_activation_scales`` keep working but emit ONE
-    DeprecationWarning per process, pointing at the serving API."""
-    import warnings
+def test_deprecated_shims_are_removed():
+    """The PR-6 warn-once shims are gone: ``convert_to_serving``,
+    ``quantize_tree`` and ``calibrate_activation_scales`` no longer
+    exist as public names (migration: ``serving.prepare`` /
+    ``convert_layout``; internals live on underscore-prefixed)."""
+    from repro.core import quantize as q, sparse_linear
 
-    from repro.core import quantize as q
-    from repro.core.sparse_linear import (SparsityConfig, convert_layout,
-                                          convert_to_serving)
-
-    w = jax.random.normal(jax.random.PRNGKey(2), (64, 32), jnp.float32)
-    cfg = SparsityConfig(n=2, m=4, mode="compressed")
-
-    q._DEPRECATION_WARNED.clear()
-    with pytest.warns(DeprecationWarning, match="repro.serving.prepare"):
-        old = convert_to_serving({"w": w}, cfg, "compressed")
-    new = convert_layout({"w": w}, cfg, "compressed")
-    for k in new:
-        np.testing.assert_array_equal(np.asarray(old[k]),
-                                      np.asarray(new[k]))
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        convert_to_serving({"w": w}, cfg, "compressed")  # second: silent
-
-    q._DEPRECATION_WARNED.clear()
-    with pytest.warns(DeprecationWarning, match="ServingSpec"):
-        qt = q.quantize_tree({"lin": {"w": w}}, "int8")
-    assert qt["lin"]["w"].dtype == jnp.int8
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        q.quantize_tree({"lin": {"w": w}}, "int8")
+    assert not hasattr(sparse_linear, "convert_to_serving")
+    assert "convert_to_serving" not in sparse_linear.__all__
+    assert not hasattr(q, "quantize_tree")
+    assert not hasattr(q, "calibrate_activation_scales")
+    # the internals the serving pipeline uses are still there
+    assert callable(q._quantize_tree)
+    assert callable(q._calibrate_activation_scales)
+    # the warn-once channel itself survives for the plan() kwarg shim
+    assert callable(q.warn_deprecated_once)
 
 
 def test_prepare_static_scales_requires_calibration_inputs():

@@ -68,9 +68,11 @@ def test_plan_shard_map_decisions(env):
         for mode, n, kernel in cases:
             for hint, coll in [("col", "none"), ("row", "psum")]:
                 shard = dispatch.shard_spec_from_env(hint)
-                d = dispatch.plan(mode, b=32, ke=256, o=128, n=n, m=4,
-                                  dtype=jnp.float32, dispatch=dcfg,
-                                  sharded=True, shard=shard)
+                d = dispatch.plan(
+                    dispatch.GemmProblem(mode, b=32, ke=256, o=128, n=n, m=4,
+                                         dtype=jnp.float32, sharded=True,
+                                         shard=shard),
+                    dispatch=dcfg)
                 assert d.uses_shard_map and d.kernel == kernel, (mode, n, d)
                 assert d.collective == coll
                 assert d.shards == ((2, 1, 4) if hint == "col" else (2, 4, 1))
@@ -85,32 +87,44 @@ def test_plan_jnp_reasons_under_mesh(env):
     dcfg = dispatch.DispatchConfig(backend="interpret")
     with use_axis_env(env):
         # mesh active, no use-site spec -> jnp (the pre-refactor behavior)
-        d = dispatch.plan("compressed", b=32, ke=256, o=128, n=2, m=4,
-                          dtype=jnp.float32, dispatch=dcfg, sharded=True)
+        d = dispatch.plan(
+            dispatch.GemmProblem("compressed", b=32, ke=256, o=128, n=2, m=4,
+                                 dtype=jnp.float32, sharded=True),
+            dispatch=dcfg)
         assert not d.uses_kernel and "no use-site shard spec" in d.reason
         # non-divisible out dim -> jnp with the shard-divide reason
         shard = dispatch.shard_spec_from_env("col")
-        d = dispatch.plan("compressed", b=32, ke=256, o=129, n=2, m=4,
-                          dtype=jnp.float32, dispatch=dcfg, shard=shard)
+        d = dispatch.plan(
+            dispatch.GemmProblem("compressed", b=32, ke=256, o=129, n=2, m=4,
+                                 dtype=jnp.float32, shard=shard),
+            dispatch=dcfg)
         assert not d.uses_kernel and "does not divide" in d.reason
         # ke slice that splits packed N:M metadata -> dedicated reason:
         # ke=16, n=1: values rows 4, meta rows 1 — not splittable 4-ways
         shard = dispatch.shard_spec_from_env("row")
-        d = dispatch.plan("compressed", b=32, ke=16, o=128, n=1, m=4,
-                          dtype=jnp.float32, dispatch=dcfg, shard=shard)
+        d = dispatch.plan(
+            dispatch.GemmProblem("compressed", b=32, ke=16, o=128, n=1, m=4,
+                                 dtype=jnp.float32, shard=shard),
+            dispatch=dcfg)
         assert not d.uses_kernel and "metadata axis" in d.reason
         # batch not divisible by the data axis -> jnp
         shard = dispatch.shard_spec_from_env("col")
-        d = dispatch.plan("compressed", b=3, ke=256, o=128, n=2, m=4,
-                          dtype=jnp.float32, dispatch=dcfg, shard=shard)
+        d = dispatch.plan(
+            dispatch.GemmProblem("compressed", b=3, ke=256, o=128, n=2, m=4,
+                                 dtype=jnp.float32, shard=shard),
+            dispatch=dcfg)
         assert not d.uses_kernel and "does not divide" in d.reason
         # masked and autodiff guards outrank the shard path
-        d = dispatch.plan("masked", b=32, ke=256, o=128, n=2, m=4,
-                          dtype=jnp.float32, dispatch=dcfg, shard=shard)
+        d = dispatch.plan(
+            dispatch.GemmProblem("masked", b=32, ke=256, o=128, n=2, m=4,
+                                 dtype=jnp.float32, shard=shard),
+            dispatch=dcfg)
         assert not d.uses_kernel
-        d = dispatch.plan("compressed", b=32, ke=256, o=128, n=2, m=4,
-                          dtype=jnp.float32, dispatch=dcfg, shard=shard,
-                          differentiating=True)
+        d = dispatch.plan(
+            dispatch.GemmProblem("compressed", b=32, ke=256, o=128, n=2, m=4,
+                                 dtype=jnp.float32, shard=shard,
+                                 differentiating=True),
+            dispatch=dcfg)
         assert not d.uses_kernel and "autodiff" in d.reason
 
 
@@ -217,10 +231,10 @@ def test_rowwise_apply_linear_parity_under_mesh(env):
     k, o = 256, 96
     w = rng.normal(size=(k, o)) * (rng.random((k, o)) < 0.2)
     w = jnp.asarray(w, jnp.float32)
-    from repro.core.sparse_linear import convert_to_serving
+    from repro.core.sparse_linear import convert_layout
 
     cfg = SparsityConfig(n=2, m=4, mode="rowwise")
-    p = convert_to_serving({"w": w}, cfg, "rowwise")
+    p = convert_layout({"w": w}, cfg, "rowwise")
     x = jax.random.normal(jax.random.PRNGKey(1), (32, k))
     want = x @ w
     with use_axis_env(env):

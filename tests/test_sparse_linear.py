@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SparsityConfig, apply_linear, convert_to_serving, init_linear
+from repro.core import SparsityConfig, apply_linear, convert_layout, init_linear
 from repro.core.ste import srste_prune
 
 
@@ -16,7 +16,7 @@ def test_masked_equals_compressed_serving():
         p = init_linear(key, 64, 32, cfg_m, dtype=jnp.float32)
         y_m = apply_linear(p, x, cfg_m)
         cfg_c = SparsityConfig(n=n, m=4, mode="compressed")
-        pc = convert_to_serving(p, cfg_c, "compressed")
+        pc = convert_layout(p, cfg_c, "compressed")
         y_c = apply_linear(pc, x, cfg_c)
         np.testing.assert_allclose(np.asarray(y_m), np.asarray(y_c), atol=1e-5)
 

@@ -84,7 +84,7 @@ def test_train_sparse_masked_mode(tmp_path):
     # trained weights, once pruned+compressed, serve equivalently
     from repro.core import nm
     from repro.models import forward
-    from repro.core.sparse_linear import convert_to_serving
+    from repro.core.sparse_linear import convert_layout
 
     params = out["params"]
     w = params["stages"][0]["slot0"]["mixer"]["wq"]["w"][0, 0]
