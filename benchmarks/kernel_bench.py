@@ -70,6 +70,21 @@ def _kernel_plan(params, x_shape, cfg, dtype) -> str:
     return f"{d.kernel}(b{bb}/ke{bke}/o{bo})"
 
 
+def _fallback_row(sweep: str, rows: List[dict]) -> None:
+    """Fallback-surface row for one sweep: how many of its dispatch
+    probes resolved to the jnp reference instead of a registry kernel.
+    Rides the smoke CSV ungated (the perf gate only diffs ``us_*``
+    fields on ``kernel_``/``serving_`` rows) so the longitudinal
+    ``BENCH_*.json`` series tracks fallback surface alongside latency;
+    the static counterpart with per-site reason codes is
+    ``python -m repro.launch.audit``."""
+    sites = [str(r["dispatch"]) for r in rows if "dispatch" in r]
+    fallbacks = sum(1 for d in sites
+                    if "jnp-only" in d or kdispatch.JNP_REFERENCE in d)
+    print(f"audit_fallback_count/{sweep},fallbacks={fallbacks},"
+          f"sites={len(sites)}")
+
+
 def run(workloads=("BERT-L1", "GPT-L1")) -> List[dict]:
     rows = []
     for name in workloads:
@@ -518,19 +533,22 @@ def _print_epilogue(args) -> None:
             print("kernel_epilogue-exec/fp8,SKIP,"
                   "no native fp8 dot on this backend")
             continue
-        for r in run_epilogue(qdtype=tag):
+        epi_rows = run_epilogue(qdtype=tag)
+        for r in epi_rows:
             print(f"kernel_epilogue-{r['name']},"
                   f"us_unfused={r['us_unfused']:.0f},"
                   f"us_fused={r['us_fused']:.0f},"
                   f"speedup={r['speedup']:.2f}x,"
                   f"dispatch={r['dispatch']}")
-        for r in run_epilogue_exec(qdtype=tag):
+        exec_rows = run_epilogue_exec(qdtype=tag)
+        for r in exec_rows:
             print(f"kernel_epilogue-exec/{r['name']},"
                   f"dispatch={r['dispatch']},"
                   f"rel_err_vs_unfused_ref="
                   f"{r['rel_err_vs_unfused_ref']:.4f},"
                   f"rel_err_dual_vs_unfused_ref="
                   f"{r['rel_err_dual_vs_unfused_ref']:.4f}")
+        _fallback_row(f"epilogue-{tag or 'fp32'}", epi_rows + exec_rows)
 
 
 # decode/MoE activation regime: most rows of the batch are dead (not
@@ -631,6 +649,7 @@ def _print_actsparse(args) -> None:
             raise RuntimeError(
                 f"actsparse {r['name']}: masked dispatch is not "
                 f"bit-identical to dense")
+    _fallback_row("actsparse", rows)
     if backend != "tpu":
         print(f"kernel_actsparse,SKIP,masked kernels are not a perf "
               f"path on backend={backend}")
@@ -676,13 +695,15 @@ def main(argv: Optional[List[str]] = None):
         _print_actsparse(args)
         return None
     if args.dtype in ("all", "fp32"):
-        for r in run():
+        fp32_rows = run()
+        for r in fp32_rows:
             print(f"kernel_{r['name']},us_dense={r['us_dense']:.0f},"
                   f"us_spmm_engine={r['us_spmm_engine']:.0f},"
                   f"dispatch={r['dispatch']},"
                   f"weight_bytes={r['weight_bytes_dense']}->"
                   f"{r['weight_bytes_compressed']},"
                   f"hbm_reduction={r['hbm_reduction']:.2f}x")
+        _fallback_row("fp32", fp32_rows)
     for qdtype in ("int8", "fp8"):
         if args.dtype not in ("all", qdtype):
             continue
@@ -701,7 +722,8 @@ def main(argv: Optional[List[str]] = None):
                           f"no native fp8 dot on this backend")
             print("kernel_fp8-exec,SKIP,no native fp8 dot on this backend")
             continue
-        for r in run_quantized(qdtype=qdtype):
+        q_rows = run_quantized(qdtype=qdtype)
+        for r in q_rows:
             print(f"kernel_{r['name']},us_fp32={r['us_fp32']:.0f},"
                   f"us_{qdtype}={r[f'us_{qdtype}']:.0f},"
                   f"speedup={r['speedup']:.2f}x,"
@@ -709,10 +731,12 @@ def main(argv: Optional[List[str]] = None):
                   f"weight_bytes={r['weight_bytes_fp32']}->"
                   f"{r[f'weight_bytes_{qdtype}']},"
                   f"hbm_reduction={r['hbm_reduction']:.2f}x")
-        for r in run_quantized_registry(qdtype=qdtype):
+        reg_rows = run_quantized_registry(qdtype=qdtype)
+        for r in reg_rows:
             print(f"kernel_{r['name']},dispatch={r['dispatch']},"
                   f"rel_err_vs_dequant_ref="
                   f"{r['rel_err_vs_dequant_ref']:.4f}")
+        _fallback_row(qdtype, q_rows + reg_rows)
     _print_epilogue(args)
     _print_actsparse(args)
     if args.mesh:
@@ -726,8 +750,10 @@ def main(argv: Optional[List[str]] = None):
             print(f"kernel_int8-sharded,SKIP,{why}")
             print(f"kernel_fp8-sharded,SKIP,{why}")
         else:
+            mesh_rows = []
             if args.dtype in ("all", "fp32"):
                 for r in run_mesh((d_, m_)):
+                    mesh_rows.append(r)
                     t_sm = (f"{r['us_shard_map']:.0f}"
                             if r["us_shard_map"] is not None else "n/a")
                     print(f"kernel_mesh_{r['name']},"
@@ -742,12 +768,14 @@ def main(argv: Optional[List[str]] = None):
                           "no native fp8 dot on this backend")
                     continue
                 for r in run_mesh_quantized((d_, m_), qdtype=qdtype):
+                    mesh_rows.append(r)
                     print(f"kernel_{r['name']},"
                           f"us_jnp_mesh={r['us_jnp_mesh']:.0f},"
                           f"us_shard_map={r['us_shard_map']:.0f},"
                           f"dispatch={r['dispatch']},"
                           f"rel_err_vs_dequant_ref="
                           f"{r['rel_err_vs_dequant_ref']:.4f}")
+            _fallback_row("mesh", mesh_rows)
     return None
 
 

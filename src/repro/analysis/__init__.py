@@ -1,0 +1,37 @@
+"""Static plan analysis: audit, lint, and CI fallback budgets.
+
+The package answers, without weights or devices, the question the
+VEGETA promise hangs on: *which GEMMs of this config actually land on
+the matrix engine, and why do the rest fall off?*
+
+- :func:`audit_model` (:mod:`.audit`) — enumerate every GemmProblem a
+  (ModelConfig, ServingSpec) pair will plan across decode/prefill/grad
+  and classify each decision by the frozen
+  :class:`~repro.kernels.reasons.ReasonCode` catalog.
+- :func:`lint_audit` (:mod:`.lint`) — severity-ranked findings
+  (ERROR: quantized site silently dequantizing; WARN: fusable epilogue
+  declined, requant dropped; INFO: documented fallbacks).
+- :mod:`.budget` — committed per-config fallback-budget manifests
+  (``experiments/audit/*.json``) and the diff the CI gate fails on.
+
+CLI: ``python -m repro.launch.audit`` (and ``--explain`` on
+``launch/serve.py``).
+"""
+
+from repro.analysis.audit import (  # noqa: F401
+    PHASES,
+    PlanAudit,
+    Site,
+    audit_model,
+)
+from repro.analysis.budget import (  # noqa: F401
+    BudgetDiff,
+    audit_from_manifest,
+    compare,
+    config_from_manifest,
+    load_manifest,
+    manifest_from,
+    save_manifest,
+    spec_from_manifest,
+)
+from repro.analysis.lint import Finding, lint_audit  # noqa: F401

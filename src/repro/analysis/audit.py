@@ -1,0 +1,464 @@
+"""Static plan auditor: every GEMM the model will plan, without weights.
+
+Given a :class:`~repro.models.config.ModelConfig` and a
+:class:`~repro.serving.ServingSpec`, :func:`audit_model` enumerates every
+:class:`~repro.kernels.dispatch.GemmProblem` the serving and training
+paths will hand to :func:`~repro.kernels.dispatch.plan` — decode steps,
+prefill chunks, and the grad path — and records each decision as a
+:class:`Site`.  No weights are materialized and nothing executes: the
+params tree comes from ``jax.eval_shape`` (ShapeDtypeStruct leaves), the
+serving quantization transform is mirrored shape-level, and mesh
+placement is described by a duck-typed :class:`_AuditMesh` whose only
+obligation is the ``mesh.shape[axis]`` lookup
+:meth:`~repro.kernels.dispatch.ShardSpec.axis_size` performs — so a
+2x4-device audit runs on a weightless single-CPU box in well under a
+second.
+
+The traversal deliberately reuses the engine's OWN structural walkers
+(``iter_linear_items``, ``leaf_config``, ``input_features``) and mirrors
+the use-site conventions of ``apply_mlp`` / ``_expert_ffn`` /
+``dispatch_report`` (gate-up dual pairing, requant_decision on the
+``w_out`` consumer, hint-less expert sites, the spgemm "zeros"
+activation class), so what the auditor predicts is what the model plans.
+
+Every decision is classified by the frozen
+:class:`~repro.kernels.reasons.ReasonCode` catalog; :mod:`.lint` turns
+the codes into severity-ranked findings and :mod:`.budget` diffs the
+code counts against committed manifests in CI.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from collections import Counter
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as quant
+from repro.core.sparse_linear import gather_hint
+from repro.kernels import reasons
+from repro.kernels.dispatch import (
+    DispatchConfig,
+    GemmProblem,
+    ShardSpec,
+    describe,
+    input_features,
+    iter_linear_items,
+    leaf_config,
+    plan,
+    requant_decision,
+)
+from repro.kernels.dispatch import _mode_of, _problem_dims  # engine-owned
+from repro.kernels.epilogue import EpilogueSpec
+from repro.kernels.reasons import ReasonCode
+
+__all__ = ["PHASES", "Site", "PlanAudit", "audit_model"]
+
+#: decode = one engine step over ``spec.slots`` streams; prefill = one
+#: ``spec.prefill_chunk``-token prompt chunk; grad = the same prefill
+#: shape under autodiff (training step) — expected jnp fallbacks.
+PHASES = ("decode", "prefill", "grad")
+
+_ENV_FP8 = "REPRO_FP8_NATIVE"
+
+
+class _AuditMesh:
+    """Duck-typed stand-in for ``jax.sharding.Mesh`` at PLAN time.
+
+    ``ShardSpec.axis_size`` only ever reads ``mesh.shape[axis]``, and
+    :func:`~repro.kernels.dispatch.plan` never touches the mesh beyond
+    that — the real device mesh is an execution-time concern
+    (``_shard_map_runner``).  Carrying a dict-shaped ``shape`` lets the
+    auditor describe an N-device (data, model) mesh on a host with one
+    CPU and zero TPUs.
+    """
+
+    def __init__(self, data: int, model: int):
+        self.shape = {"data": data, "model": model}
+
+    def __repr__(self):  # pragma: no cover - debug only
+        return f"_AuditMesh(data={self.shape['data']}, model={self.shape['model']})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """One planned GEMM use-site: the problem, the decision, the codes.
+
+    ``path`` is the ``iter_linear_items`` name path joined with "/"
+    (first-layer representative of a stacked layout); synthetic sites
+    use engine vocabulary ("attention/flash", ".../gate_up").
+    ``requant_reason`` rides on MLP *producer* sites — the
+    :func:`~repro.kernels.dispatch.requant_decision` outcome for the
+    ``w_out`` consumer they feed.
+    """
+
+    path: str
+    phase: str
+    hint: Optional[str]
+    problem: GemmProblem
+    decision: Any                       # kernels.dispatch.DispatchDecision
+    requant_reason: Optional[ReasonCode] = None
+
+    @property
+    def codes(self) -> Tuple[str, ...]:
+        """Every budgetable reason-code string this site contributes.
+
+        Kernel-tier blocks provenance (pinned/tuned/fitted) collapses to
+        the aggregate ``"kernel-tier"`` key: whether the autotune cache
+        happened to be warm is host state, not plan surface, and budget
+        manifests must be reproducible across machines.
+        """
+        d = self.decision
+        out: List[str] = []
+        if d.reason_code in reasons.KERNEL_CODES:
+            out.append("kernel-tier")
+        elif d.reason_code is not None:
+            out.append(d.reason_code.value)
+        for code in (d.epilogue_reason, d.activation_reason,
+                     self.requant_reason):
+            if code is not None:
+                out.append(code.value)
+        return tuple(out)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = self.decision
+        p = self.problem
+        return {
+            "path": self.path,
+            "phase": self.phase,
+            "hint": self.hint,
+            "mode": p.mode,
+            "b": p.b, "ke": p.ke, "o": p.o, "n": p.n, "m": p.m,
+            "dtype": reasons.dtype_name(p.dtype),
+            "epilogue": p.epilogue,
+            "activation": p.activation,
+            "dual": p.dual,
+            "kernel": d.kernel if d.uses_kernel else None,
+            "placement": d.placement if d.uses_kernel else None,
+            "collective": d.collective,
+            "blocks_source": d.blocks_source,
+            "reason_code": d.reason_code.value if d.reason_code else None,
+            "reason": d.reason,
+            "epilogue_reason": (d.epilogue_reason.value
+                                if d.epilogue_reason else None),
+            "activation_reason": (d.activation_reason.value
+                                  if d.activation_reason else None),
+            "requant_reason": (self.requant_reason.value
+                               if self.requant_reason else None),
+            "plan": describe(d),
+        }
+
+
+@dataclasses.dataclass
+class PlanAudit:
+    """The full static dispatch surface of one (config, spec) pair.
+
+    ``counts`` is the budgetable summary :mod:`.budget` diffs against a
+    committed manifest; ``findings`` is filled by :func:`.lint.lint_audit`
+    (``audit_model`` runs the linter before returning).
+    """
+
+    arch: str
+    spec: Any                            # serving.ServingSpec
+    backend: str
+    phases: Tuple[str, ...]
+    sites: List[Site]
+    findings: List[Any] = dataclasses.field(default_factory=list)
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        c: Counter = Counter()
+        for s in self.sites:
+            c.update(s.codes)
+        return dict(sorted(c.items()))
+
+    @property
+    def fallback_sites(self) -> List[Site]:
+        return [s for s in self.sites if not s.decision.uses_kernel]
+
+    def severity_counts(self) -> Dict[str, int]:
+        c = Counter(f.severity.name for f in self.findings)
+        return {name: c.get(name, 0) for name in ("ERROR", "WARN", "INFO")}
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch,
+            "spec": _spec_dict(self.spec),
+            "backend": self.backend,
+            "phases": list(self.phases),
+            "counts": self.counts,
+            "severities": self.severity_counts(),
+            "sites": [s.to_dict() for s in self.sites],
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+    def summary_lines(self) -> List[str]:
+        """Human-readable report (the CLI and ``--explain`` render this)."""
+        lines = [f"plan audit: {self.arch} backend={self.backend} "
+                 f"phases={','.join(self.phases)}"]
+        for phase in self.phases:
+            sites = [s for s in self.sites if s.phase == phase]
+            fb = sum(1 for s in sites if not s.decision.uses_kernel)
+            lines.append(f" {phase}: {len(sites)} site(s), "
+                         f"{fb} jnp fallback(s)")
+            for s in sites:
+                p = s.problem
+                tag = "gate-up " if p.dual else ""
+                lines.append(
+                    f"   [{tag}{s.hint or 'rep'}] {s.path} "
+                    f"(B={p.b}, K={p.ke}, O={p.o}) {describe(s.decision)}")
+        lines.append(" counts: " + ", ".join(
+            f"{k}={v}" for k, v in self.counts.items()))
+        sev = self.severity_counts()
+        lines.append(f" lint: {sev['ERROR']} error(s), {sev['WARN']} "
+                     f"warning(s), {sev['INFO']} info")
+        for f in self.findings:
+            lines.append(f"   {f.severity.name}: [{f.rule}] {f.phase} "
+                         f"{f.site}: {f.message}")
+        return lines
+
+
+def _spec_dict(spec) -> Dict[str, Any]:
+    d = dataclasses.asdict(spec)
+    if d.get("sparsity") is not None:
+        d["sparsity"] = list(d["sparsity"])
+    if d.get("mesh") is not None:
+        d["mesh"] = list(d["mesh"])
+    return d
+
+
+@contextlib.contextmanager
+def _assume_fp8_native(enabled: bool):
+    """Audit the documented TPU target, not the analysis host.
+
+    The fp8 registry entries gate on :func:`registry.fp8_native_dot`,
+    which probes the executing device; the auditor describes what a
+    native-fp8 TPU would plan, so it pins the env override for the
+    duration of planning (restoring whatever the host had).
+    """
+    if not enabled:
+        yield
+        return
+    prev = os.environ.get(_ENV_FP8)
+    os.environ[_ENV_FP8] = "1"
+    try:
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop(_ENV_FP8, None)
+        else:
+            os.environ[_ENV_FP8] = prev
+
+
+def _abstract_quantize(tree, qdtype, static_scales: bool):
+    """Shape-level mirror of ``prepare``'s weight-quantization step.
+
+    Maps every linear leaf's float operand to a ShapeDtypeStruct of the
+    narrow dtype and attaches the per-channel ``scale`` (and, for
+    ``static_scales``, a CONCRETE scalar ``act_scale`` — 0-D, so
+    ``iter_linear_items`` passes it through and ``requant_decision`` can
+    build its operand without a materialized calibration pass).
+    """
+    qdt = quant.canonical_qdtype(qdtype)
+
+    def _q(leaf):
+        key = "w" if "w" in leaf else "values" if "values" in leaf else None
+        if key is None or quant.is_quantized(leaf):
+            return leaf
+        v = leaf[key]
+        out = dict(leaf)
+        out[key] = jax.ShapeDtypeStruct(tuple(v.shape), qdt)
+        out[quant.SCALE_KEY] = jax.ShapeDtypeStruct(
+            tuple(v.shape[:-2]) + (v.shape[-1],), jnp.float32)
+        if static_scales:
+            out[quant.ACT_SCALE_KEY] = jnp.asarray(1.0, jnp.float32)
+        return out
+
+    return quant.map_linear_leaves(tree, _q)
+
+
+def _leaf_shard_spec(names, scfg, mesh) -> Optional[ShardSpec]:
+    """``dispatch.leaf_shard_spec`` under the duck mesh.
+
+    Same decision table — unhinted sites get no spec, rowwise tier
+    segments under a column hint keep only batch sharding — but the spec
+    is built directly instead of through the installed axis env (the
+    auditor never installs one; it has no devices to install over).
+    """
+    if mesh is None:
+        return None
+    hint = gather_hint(names)
+    if hint is None:
+        return None
+    if hint == "col" and leaf_config(names, scfg) is not scfg:
+        return ShardSpec(mesh=mesh, batch="data")
+    if hint == "col":
+        return ShardSpec(mesh=mesh, batch="data", o="model")
+    return ShardSpec(mesh=mesh, batch="data", ke="model")
+
+
+def _phase_tokens(phase: str, spec) -> int:
+    return spec.slots if phase == "decode" else spec.prefill_chunk
+
+
+def audit_model(
+    cfg,
+    spec,
+    *,
+    phases: Sequence[str] = PHASES,
+    backend: str = "tpu",
+    assume_fp8_native: bool = True,
+    arch: str = "",
+) -> PlanAudit:
+    """Statically plan every GEMM of ``cfg`` served under ``spec``.
+
+    ``backend`` is the dispatch backend being AUDITED (default "tpu":
+    the deployment target), independent of where the audit runs.
+    ``assume_fp8_native`` pins the fp8-capability probe to the
+    documented target rather than the analysis host.  Returns a
+    :class:`PlanAudit` with lint findings attached.
+    """
+    from repro.models.moe import _capacity
+    from repro.models.transformer import init_params
+
+    mcfg = spec.apply_to(cfg)
+    scfg = spec.sparsity_config
+    tree = jax.eval_shape(lambda k: init_params(k, mcfg),
+                          jax.random.PRNGKey(0))
+    if spec.qdtype is not None:
+        tree = _abstract_quantize(tree, spec.qdtype, spec.static_scales)
+
+    mesh = _AuditMesh(*spec.mesh) if spec.mesh is not None else None
+    dcfg = DispatchConfig(backend=backend, autotune=spec.autotune)
+    spgemm = mcfg.moe_expert_path == "spgemm"
+
+    items = list(iter_linear_items(tree))
+    by_parent: Dict[Tuple[str, ...], Dict[str, Any]] = {}
+    for names, leaf in items:
+        by_parent.setdefault(tuple(names[:-1]), {})[names[-1]] = leaf
+
+    # Rowwise MLPs: the w_out consumer is a rowwise WRAPPER, so
+    # ``apply_mlp`` runs requant_decision against the wrapper (never a
+    # tier).  Reconstruct the wrapper from the yielded tier leaves and
+    # remember which producer tier site carries the outcome — one
+    # ride-along per MLP, on the first gate/up tier.
+    rowwise_requant: Dict[Tuple[str, ...], Dict[str, Any]] = {}
+    for parent, sibs in by_parent.items():
+        if len(parent) < 2 or parent[-1] != "rowwise" or parent[-2] != "w_out":
+            continue
+        wrapper = {"rowwise": dict(sibs), "inv_perm": None}
+        mlp = parent[:-2]
+        for proj in ("w_gate", "w_in"):
+            tiers = by_parent.get(mlp + (proj, "rowwise"))
+            if tiers:
+                first = sorted(tiers)[0]
+                rowwise_requant[mlp + (proj, "rowwise", first)] = wrapper
+                break
+
+    sites: List[Site] = []
+
+    def _plan_site(names, leaf, phase, *, epilogue=None, dual=False,
+                   requant_reason=None, path_suffix=""):
+        lcfg = leaf_config(names, scfg)
+        try:
+            ke = input_features(leaf, lcfg)
+        except ValueError:
+            return
+        expert = "experts" in names
+        mode = _mode_of(leaf, lcfg)
+        _, o = _problem_dims(mode, leaf,
+                             jax.ShapeDtypeStruct((1, ke), jnp.float32))
+        dt = leaf.get("values", leaf.get("w")).dtype
+        tokens = _phase_tokens(phase, spec)
+        activation = None
+        if expert:
+            # expert linears are hint-less (inside the MoE scan /
+            # shard_map body); the spgemm path runs the FULL token set
+            # with the "zeros" activation class and single placement,
+            # the gather path runs capacity-gathered tiles
+            hint, shard = None, None
+            if spgemm:
+                b, sharded, activation = tokens, False, "zeros"
+            else:
+                b = _capacity(tokens, mcfg)
+                sharded = mesh is not None
+        else:
+            hint = gather_hint(names)
+            shard = _leaf_shard_spec(names, scfg, mesh)
+            b, sharded = tokens, mesh is not None
+        p = GemmProblem(mode, b=b, ke=ke, o=o, n=lcfg.n, m=lcfg.m,
+                        dtype=dt, differentiating=(phase == "grad"),
+                        sharded=sharded, shard=shard,
+                        static_scales=quant.has_static_scales(leaf),
+                        epilogue=epilogue, dual=dual, activation=activation)
+        d = plan(p, dispatch=dcfg)
+        sites.append(Site(path="/".join(names) + path_suffix, phase=phase,
+                          hint=hint, problem=p, decision=d,
+                          requant_reason=requant_reason))
+
+    def _requant_for(parent, phase) -> Tuple[Optional[str], Optional[ReasonCode]]:
+        """Producer-side fused-requantize outcome for this MLP's w_out."""
+        wout = by_parent[parent].get("w_out")
+        if wout is None:
+            return None, None
+        names = parent + ("w_out",)
+        expert = "experts" in names
+        shard = None if expert else _leaf_shard_spec(names, scfg, mesh)
+        tokens = _phase_tokens(phase, spec)
+        result, code = requant_decision(
+            wout, (tokens,), leaf_config(names, scfg),
+            dispatch=dcfg, shard=shard)
+        return (result[0] if result is not None else None), code
+
+    with _assume_fp8_native(assume_fp8_native):
+        for phase in phases:
+            tokens = _phase_tokens(phase, spec)
+            for names, leaf in items:
+                parent, last = tuple(names[:-1]), names[-1]
+                sibs = by_parent[parent]
+                swiglu_pair = ("w_gate" in sibs and "w_in" in sibs
+                               and mcfg.act == "swiglu")
+                if last == "w_in" and swiglu_pair:
+                    continue  # executed as the gate-up dual site below
+                if last == "w_gate" and swiglu_pair:
+                    rq_dt, rq_code = _requant_for(parent, phase)
+                    epi = EpilogueSpec(act="silu_mul", requant=rq_dt).point
+                    _plan_site(names, leaf, phase, epilogue=epi, dual=True,
+                               requant_reason=rq_code,
+                               path_suffix="+w_in")
+                    continue
+                if last == "w_in" and "w_out" in sibs:
+                    rq_dt, rq_code = _requant_for(parent, phase)
+                    epi = EpilogueSpec(act="gelu", requant=rq_dt).point
+                    _plan_site(names, leaf, phase, epilogue=epi,
+                               requant_reason=rq_code)
+                    continue
+                wrapper = rowwise_requant.get(tuple(names))
+                rq_code = None
+                if wrapper is not None:
+                    _, rq_code = requant_decision(
+                        wrapper, (tokens,), scfg, dispatch=dcfg,
+                        shard=_leaf_shard_spec(parent[:-2] + ("w_out",),
+                                               scfg, mesh))
+                _plan_site(names, leaf, phase, requant_reason=rq_code)
+            # attention plans one flash problem per prefill chunk
+            # (decode always takes the chunked reference structurally —
+            # tq != tk is not a plan decline, so it is not a site)
+            if phase != "decode" and mcfg.num_heads > 0:
+                p = GemmProblem("attention", b=tokens, ke=tokens,
+                                o=mcfg.head_dim, dtype=mcfg.jnp_dtype,
+                                differentiating=(phase == "grad"),
+                                sharded=mesh is not None)
+                d = plan(p, dispatch=dcfg)
+                sites.append(Site(path="attention/flash", phase=phase,
+                                  hint=None, problem=p, decision=d))
+
+    audit = PlanAudit(arch=arch or mcfg.name, spec=spec, backend=backend,
+                      phases=tuple(phases), sites=sites)
+    from repro.analysis.lint import lint_audit
+    audit.findings = lint_audit(audit)
+    return audit

@@ -1,0 +1,153 @@
+"""Fallback-budget manifests: the CI gate behind the plan auditor.
+
+A manifest under ``experiments/audit/`` freezes the EXPECTED dispatch
+surface of one (config, spec) pair: the per-reason-code site counts and
+the tolerated lint severities.  CI re-runs the audit from the manifest's
+own recipe and diffs — any site newly sliding off the kernel tier (a
+reason-code count above budget, or an ERROR/WARN overshoot) fails the
+build the way ``benchmarks/check_regression.py`` fails a perf
+regression.  Counts *below* budget don't fail; they surface as
+rebaseline notes so shrunken fallback surface gets locked in.
+
+The manifest is self-contained — ``{"config": {...}, "spec": {...}}``
+reconstructs the exact audit — so the gate needs no flag replay and a
+reviewer can read the expected surface from the JSON alone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List
+
+__all__ = [
+    "BudgetDiff",
+    "manifest_from",
+    "load_manifest",
+    "save_manifest",
+    "config_from_manifest",
+    "spec_from_manifest",
+    "audit_from_manifest",
+    "compare",
+]
+
+
+@dataclasses.dataclass
+class BudgetDiff:
+    """Outcome of diffing one audit against its manifest."""
+
+    manifest: str
+    failures: List[str] = dataclasses.field(default_factory=list)
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def lines(self) -> List[str]:
+        head = "OK" if self.ok else "FAIL"
+        out = [f"[{head}] {self.manifest}"]
+        out += [f"  FAIL {f}" for f in self.failures]
+        out += [f"  note {n}" for n in self.notes]
+        return out
+
+
+def manifest_from(audit, *, arch: str, smoke: bool = True,
+                  overrides: Dict[str, Any] = None) -> Dict[str, Any]:
+    """Freeze one audit as a budget manifest.
+
+    ``overrides`` are ``dataclasses.replace`` fields applied to the
+    registry config (e.g. ``{"moe_expert_path": "spgemm"}``) so the
+    recipe stays reproducible from the JSON alone.
+    """
+    from repro.analysis.audit import _spec_dict
+
+    sev = audit.severity_counts()
+    return {
+        "config": {"arch": arch, "smoke": bool(smoke),
+                   "overrides": dict(overrides or {})},
+        "spec": _spec_dict(audit.spec),
+        "backend": audit.backend,
+        "phases": list(audit.phases),
+        "budget": {"ERROR": sev["ERROR"], "WARN": sev["WARN"]},
+        "codes": audit.counts,
+    }
+
+
+def load_manifest(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_manifest(path: str, manifest: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def config_from_manifest(manifest: Dict[str, Any]):
+    from repro.configs import get_config, get_smoke_config
+
+    mc = manifest["config"]
+    cfg = (get_smoke_config(mc["arch"]) if mc.get("smoke", True)
+           else get_config(mc["arch"]))
+    if mc.get("overrides"):
+        cfg = dataclasses.replace(cfg, **mc["overrides"])
+    return cfg
+
+
+def spec_from_manifest(manifest: Dict[str, Any]):
+    from repro.serving import ServingSpec
+
+    d = dict(manifest["spec"])
+    if d.get("sparsity") is not None:
+        d["sparsity"] = tuple(d["sparsity"])
+    if d.get("mesh") is not None:
+        d["mesh"] = tuple(d["mesh"])
+    return ServingSpec(**d)
+
+
+def audit_from_manifest(manifest: Dict[str, Any]):
+    """Re-run the audit the manifest describes (the CI gate's path)."""
+    from repro.analysis.audit import audit_model
+
+    from repro.analysis.audit import PHASES
+
+    return audit_model(config_from_manifest(manifest),
+                       spec_from_manifest(manifest),
+                       phases=tuple(manifest.get("phases") or PHASES),
+                       backend=manifest.get("backend", "tpu"),
+                       arch=manifest["config"]["arch"])
+
+
+def compare(audit, manifest: Dict[str, Any], name: str = "") -> BudgetDiff:
+    """Diff one audit against its budget.  Over budget -> failure;
+    under budget -> rebaseline note; new code -> failure (any count of
+    a code the manifest never saw is by definition unexpected)."""
+    diff = BudgetDiff(manifest=name or manifest["config"]["arch"])
+    budget_codes: Dict[str, int] = manifest.get("codes", {})
+    counts = audit.counts
+    for code, n in counts.items():
+        allowed = budget_codes.get(code, 0)
+        if n > allowed:
+            diff.failures.append(
+                f"reason {code}: {n} site(s) > budget {allowed}")
+    for code, allowed in budget_codes.items():
+        n = counts.get(code, 0)
+        if n < allowed:
+            diff.notes.append(
+                f"reason {code}: {n} site(s) < budget {allowed} "
+                "(surface shrank — rebaseline with --update)")
+    sev = audit.severity_counts()
+    budget_sev = manifest.get("budget", {})
+    for level in ("ERROR", "WARN"):
+        allowed = int(budget_sev.get(level, 0))
+        if sev[level] > allowed:
+            diff.failures.append(
+                f"lint {level}: {sev[level]} finding(s) > budget {allowed}")
+        elif sev[level] < allowed:
+            diff.notes.append(
+                f"lint {level}: {sev[level]} finding(s) < budget {allowed}")
+    return diff

@@ -1,0 +1,143 @@
+"""Lint rules over a :class:`~repro.analysis.audit.PlanAudit`.
+
+Each rule turns reason codes into a severity-ranked :class:`Finding`.
+The ladder encodes the repo's dispatch promises:
+
+ERROR — the VEGETA promise is broken and numerics quietly degrade to
+the slow path: a *quantized* site planning the jnp dequantize reference
+on a serving phase (``quantized-jnp-fallback``), or a quantized tile no
+registered kernel can legally tile (``unfittable-tile``).
+
+WARN — performance left on the table that a config/layout change could
+reclaim: a fusable epilogue declined (``epilogue-declined``), a
+consumer dropping the fused producer requantize (``requant-dropped``),
+float tiles nothing fits (``float-unfittable-tile``), mesh slicings
+the kernels cannot follow (``shard-indivisible``), hinted sites losing
+their shard spec (``no-shard-spec``), and kernel sites still on fitted
+default blocks while the spec asked for autotuning (``untuned``).
+
+INFO — expected, documented fallbacks: the grad path (kernels carry no
+VJP rules), an explicit ``backend=jnp`` choice, hint-less expert sites
+under a mesh (the gather path's shard_map-nesting limitation), and
+mask-only activation downgrades (numerics-preserving by construction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+from repro.core.quantize import is_quantized_dtype
+from repro.kernels.reasons import (
+    EPILOGUE_DECLINE_CODES,
+    ReasonCode,
+    Severity,
+)
+
+__all__ = ["Finding", "lint_audit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint hit: a rule, where it fired, and the code behind it."""
+
+    severity: Severity
+    rule: str
+    site: str
+    phase: str
+    code: ReasonCode
+    message: str
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "severity": self.severity.name,
+            "rule": self.rule,
+            "site": self.site,
+            "phase": self.phase,
+            "code": self.code.value,
+            "message": self.message,
+        }
+
+
+def _findings_for(site, spec) -> List[Finding]:
+    out: List[Finding] = []
+    d = site.decision
+    code = d.reason_code
+    quantized = is_quantized_dtype(site.problem.dtype)
+    grad = site.phase == "grad"
+
+    def hit(severity, rule, c, message):
+        out.append(Finding(severity, rule, site.path, site.phase,
+                           c, message))
+
+    if not d.uses_kernel:
+        if grad:
+            hit(Severity.INFO, "grad-fallback", code,
+                "expected training-path fallback: " + d.reason)
+        elif code is ReasonCode.BACKEND_JNP:
+            hit(Severity.INFO, "backend-jnp", code,
+                "explicit jnp backend: reference formulation by choice")
+        elif code is ReasonCode.NO_KERNEL_FITS:
+            sev = Severity.ERROR if quantized else Severity.WARN
+            rule = "unfittable-tile" if quantized else "float-unfittable-tile"
+            hit(sev, rule, code, d.reason)
+        elif quantized:
+            # the decision dequantizes the narrow weights back to float
+            # and contracts on the jnp tier — the silent-slow case the
+            # auditor exists to catch
+            hit(Severity.ERROR, "quantized-jnp-fallback", code,
+                f"quantized site dequantizes on the jnp tier: {d.reason}")
+        elif code is ReasonCode.NO_SHARD_SPEC:
+            expert = "experts" in site.path.split("/")
+            attn = site.problem.mode == "attention"
+            if expert:
+                msg = ("documented shard_map-nesting limitation of the "
+                       "MoE gather path")
+            elif attn:
+                msg = ("attention sharding is head-parallel and stays "
+                       "with XLA by design")
+            else:
+                msg = d.reason
+            hit(Severity.INFO if (expert or attn) else Severity.WARN,
+                "no-shard-spec", code, msg)
+        elif code in (ReasonCode.SHARD_INDIVISIBLE,
+                      ReasonCode.META_AXIS_SPLIT):
+            hit(Severity.WARN, "shard-indivisible", code, d.reason)
+        else:
+            hit(Severity.INFO, "jnp-fallback", code, d.reason)
+    else:
+        if (d.epilogue_reason in EPILOGUE_DECLINE_CODES and not grad):
+            hit(Severity.WARN, "epilogue-declined", d.epilogue_reason,
+                f"fusable epilogue {site.problem.epilogue!r} declined: "
+                + _code_text(d.epilogue_reason))
+        if d.activation_reason is not None and not d.activation_skip \
+                and not grad:
+            hit(Severity.INFO, "mask-only-activation", d.activation_reason,
+                f"activation class {site.problem.activation!r} runs "
+                "mask-only (numerics preserved, no block skip)")
+        if spec.autotune and d.blocks_source == "fitted" and not grad:
+            hit(Severity.WARN, "untuned", code,
+                "autotune requested but this problem plans fitted "
+                "default blocks (cold cache) — run pretune()")
+
+    if site.requant_reason in (ReasonCode.REQUANT_LAYOUT,
+                               ReasonCode.REQUANT_CONSUMER_FALLBACK) \
+            and not grad:
+        hit(Severity.WARN, "requant-dropped", site.requant_reason,
+            "producer keeps emitting float rows: "
+            + _code_text(site.requant_reason))
+    return out
+
+
+def _code_text(code: ReasonCode) -> str:
+    from repro.kernels import reasons
+    return reasons.render(code)
+
+
+def lint_audit(audit) -> List[Finding]:
+    """All findings for one audit, most severe first (stable within)."""
+    findings: List[Finding] = []
+    for site in audit.sites:
+        findings.extend(_findings_for(site, audit.spec))
+    findings.sort(key=lambda f: -int(f.severity))
+    return findings

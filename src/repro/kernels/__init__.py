@@ -26,4 +26,5 @@ from repro.kernels.dispatch import (  # noqa: F401
     sparse_matmul,
     use_dispatch,
 )
+from repro.kernels.reasons import ReasonCode, Severity  # noqa: F401
 from repro.kernels.registry import detect_backend, select  # noqa: F401

@@ -75,6 +75,8 @@ from repro.core import quantize as quant
 from repro.core.ste import srste_prune
 from repro.kernels import autotune, registry
 from repro.kernels import epilogue as epilib
+from repro.kernels import reasons
+from repro.kernels.reasons import ReasonCode
 from repro.kernels.actsparse import ActivationSpec, apply_mask, block_maps
 from repro.kernels.epilogue import Epilogue
 from repro.kernels.registry import (KernelEntry, dtype_name,
@@ -90,6 +92,8 @@ __all__ = [
     "sparse_matmul",
     "gate_up_matmul",
     "requant_plan",
+    "requant_decision",
+    "ReasonCode",
     "attention",
     "plan",
     "describe",
@@ -240,7 +244,15 @@ class DispatchDecision:
     ``blocks_source`` is the structured origin of ``blocks`` —
     "none" (jnp reference), "fitted" (per-problem default fitting),
     "tuned" (autotune cache hit), or "pinned" (config override).  Logic
-    branches on it; ``reason`` is display text only.
+    branches on it; ``reason`` is display text only, rendered from the
+    frozen :class:`repro.kernels.reasons.ReasonCode` catalog.
+
+    ``reason_code`` is the machine-readable identity of ``reason``: a
+    fallback code (jnp tier) or a blocks-provenance code (kernel tier).
+    ``epilogue_reason`` / ``activation_reason`` carry the structured
+    counterpart of ``epilogue_fused`` / ``activation_skip`` — fused or
+    why not, skip or why mask-only — so the static plan auditor
+    (:mod:`repro.analysis`) can gate on declines without parsing text.
 
     ``placement`` is the execution class: "single" (one device / XLA owns
     any layout) or "shard_map" (kernel runs per-shard under the mesh; the
@@ -264,6 +276,9 @@ class DispatchDecision:
     epilogue_fused: bool = False       # True: kernel flush applies it in VMEM
     activation: Optional[str] = None   # activation-sparsity point (ActivationSpec.point)
     activation_skip: bool = False      # True: kernel elides dead K-blocks in-kernel
+    reason_code: Optional[ReasonCode] = None       # catalog identity of ``reason``
+    epilogue_reason: Optional[ReasonCode] = None   # fused, or why not
+    activation_reason: Optional[ReasonCode] = None  # skip, or why mask-only
 
     @property
     def uses_kernel(self) -> bool:
@@ -274,13 +289,29 @@ class DispatchDecision:
         return self.placement == "shard_map"
 
 
+def _epi_annotation(d: DispatchDecision) -> str:
+    if d.epilogue_reason is not None:
+        return reasons.epilogue_annotation(d.epilogue_reason)
+    if not d.uses_kernel:
+        return "jnp"
+    return "fused" if d.epilogue_fused else "jnp"
+
+
+def _act_annotation(d: DispatchDecision) -> str:
+    if d.activation_reason is not None:
+        return reasons.activation_annotation(d.activation_reason)
+    if not d.uses_kernel:
+        return "jnp"
+    return "skip" if d.activation_skip else "mask-only"
+
+
 def describe(d: DispatchDecision) -> str:
     if not d.uses_kernel:
         base = f"{d.mode}: {JNP_REFERENCE} ({d.reason})"
         if d.epilogue is not None:
-            base += f" epilogue={d.epilogue}[jnp]"
+            base += f" epilogue={d.epilogue}[{_epi_annotation(d)}]"
         if d.activation is not None:
-            base += f" activation={d.activation}[jnp]"
+            base += f" activation={d.activation}[{_act_annotation(d)}]"
         return base
     bb, bke, bo = d.blocks
     base = (f"{d.mode}: {d.kernel}[{d.backend}] "
@@ -288,11 +319,9 @@ def describe(d: DispatchDecision) -> str:
     if d.dtype is not None:
         base += f" dtype={d.dtype}"
     if d.epilogue is not None:
-        base += f" epilogue={d.epilogue}" + (
-            "[fused]" if d.epilogue_fused else "[jnp]")
+        base += f" epilogue={d.epilogue}[{_epi_annotation(d)}]"
     if d.activation is not None:
-        base += f" activation={d.activation}" + (
-            "[skip]" if d.activation_skip else "[mask-only]")
+        base += f" activation={d.activation}[{_act_annotation(d)}]"
     if d.uses_shard_map:
         lb, lke, lo = d.local_dims
         sb, ske, so = d.shards
@@ -1137,24 +1166,28 @@ def plan(
     dt_name = dtype_name(p.dtype)
     shard = p.shard
 
-    def _jnp(reason):
-        return DispatchDecision(p.mode, "jnp", JNP_REFERENCE, None, reason,
-                                dtype=dt_name, epilogue=p.epilogue,
-                                activation=p.activation)
+    def _jnp(code, **ctx):
+        return DispatchDecision(
+            p.mode, "jnp", JNP_REFERENCE, None, reasons.render(code, **ctx),
+            dtype=dt_name, epilogue=p.epilogue, activation=p.activation,
+            reason_code=code,
+            epilogue_reason=(ReasonCode.EPILOGUE_JNP_TIER
+                             if p.epilogue is not None else None),
+            activation_reason=(ReasonCode.ACT_MASK_ONLY_JNP
+                               if p.activation is not None else None))
 
     if p.mode == "masked":
-        return _jnp("SR-STE training path needs its custom VJP")
+        return _jnp(ReasonCode.SRSTE_TRAINING)
     if backend == "jnp":
-        return _jnp("backend=jnp")
+        return _jnp(ReasonCode.BACKEND_JNP)
     if p.differentiating:
-        return _jnp("under autodiff: kernels carry no VJP rules")
+        return _jnp(ReasonCode.AUTODIFF)
     if shard is not None and all(s == 1 for s in shard.shards):
         shard = None  # trivial slicing: single-device execution class
     if p.sharded and shard is None:
-        return _jnp("mesh env active with no use-site shard spec: "
-                    "XLA owns the layout")
+        return _jnp(ReasonCode.NO_SHARD_SPEC)
     if p.b == 0:
-        return _jnp("empty batch")
+        return _jnp(ReasonCode.EMPTY_BATCH)
 
     shards = (1, 1, 1)
     placement, local, collective = "single", None, None
@@ -1162,11 +1195,11 @@ def plan(
         shards = shard.shards
         local = registry.local_dims((p.b, p.ke, p.o), shards)
         if local is None:
-            return _jnp(f"shard spec {shards} does not divide "
-                        f"(b={p.b},ke={p.ke},o={p.o})")
+            return _jnp(ReasonCode.SHARD_INDIVISIBLE, shards=shards,
+                        b=p.b, ke=p.ke, o=p.o)
         if not _meta_axis_sliceable(p.mode, p.ke, p.n, p.m, shards[1]):
-            return _jnp(f"shard spec slices the {p.n}:{p.m} metadata axis "
-                        f"non-divisibly (ke={p.ke} over {shards[1]} shards)")
+            return _jnp(ReasonCode.META_AXIS_SPLIT, n=p.n, m=p.m,
+                        ke=p.ke, ske=shards[1])
         placement, collective = "shard_map", shard.collective
 
     sel = registry.select(p.mode, b=p.b, ke=p.ke, o=p.o, n=p.n, m=p.m,
@@ -1174,30 +1207,52 @@ def plan(
     if sel is None:
         where = "local shard " if shard is not None else ""
         dims = local if shard is not None else (p.b, p.ke, p.o)
-        return _jnp(f"no registered kernel fits {where}(b={dims[0]},"
-                    f"ke={dims[1]},o={dims[2]},{p.n}:{p.m},"
-                    f"{dt_name})")
+        return _jnp(ReasonCode.NO_KERNEL_FITS, where=where,
+                    b=dims[0], ke=dims[1], o=dims[2],
+                    n=p.n, m=p.m, dtype=dt_name)
     entry, blocks = sel
     acts = (("static" if p.static_scales else "dynamic")
             if entry.quantized else None)
-    fused = (p.epilogue is not None and placement == "single"
-             and (not p.dual or entry.run_dual is not None))
+    # epilogue fusion: single placement only (shard_map bodies psum
+    # BEFORE the epilogue may run); dual plans additionally need an
+    # entry carrying a run_dual kernel
+    epi_code = None
+    if p.epilogue is not None:
+        if placement != "single":
+            epi_code = ReasonCode.EPILOGUE_SHARDED
+        elif p.dual and entry.run_dual is None:
+            epi_code = ReasonCode.EPILOGUE_NO_DUAL_KERNEL
+        else:
+            epi_code = ReasonCode.EPILOGUE_FUSED
+    fused = epi_code is ReasonCode.EPILOGUE_FUSED
     # in-kernel dead-block skip: single placement only (shard_map bodies
     # would need per-shard maps), never on duals (no masked dual
     # kernels), and only on entries whose adapter carries the variant
-    skip = (p.activation is not None and placement == "single"
-            and not p.dual and entry.activation_skip)
+    act_code = None
+    if p.activation is not None:
+        if placement != "single":
+            act_code = ReasonCode.ACT_MASK_ONLY_SHARDED
+        elif p.dual:
+            act_code = ReasonCode.ACT_MASK_ONLY_DUAL
+        elif not entry.activation_skip:
+            act_code = ReasonCode.ACT_MASK_ONLY_ENTRY
+        else:
+            act_code = ReasonCode.ACT_SKIP
+    skip = act_code is ReasonCode.ACT_SKIP
 
-    def _decision(blocks, reason, source):
+    def _decision(blocks, code, source):
         return DispatchDecision(
-            p.mode, backend, entry.name, blocks, reason, blocks_source=source,
+            p.mode, backend, entry.name, blocks, reasons.render(code),
+            blocks_source=source,
             placement=placement, local_dims=local, shards=shards if shard else None,
             collective=collective, act_scales=acts, dtype=dt_name,
             epilogue=p.epilogue, epilogue_fused=fused,
-            activation=p.activation, activation_skip=skip)
+            activation=p.activation, activation_skip=skip,
+            reason_code=code, epilogue_reason=epi_code,
+            activation_reason=act_code)
 
     if dcfg.blocks is not None:
-        return _decision(tuple(dcfg.blocks), "blocks pinned by config",
+        return _decision(tuple(dcfg.blocks), ReasonCode.BLOCKS_PINNED,
                          "pinned")
     # autotune cache keys are per-shard local problems under shard_map —
     # that is the shape the kernel body actually runs
@@ -1205,8 +1260,8 @@ def plan(
     key = _cache_key(entry.name, p, (kb, kke, ko), fused, skip)
     tuned = autotune.lookup(backend, key)
     if tuned is not None:
-        return _decision(tuned, "autotuned blocks (cache)", "tuned")
-    return _decision(blocks, "fitted default blocks", "fitted")
+        return _decision(tuned, ReasonCode.BLOCKS_TUNED, "tuned")
+    return _decision(blocks, ReasonCode.BLOCKS_FITTED, "fitted")
 
 
 def plan_for(
@@ -1226,6 +1281,21 @@ def plan_for(
                 dispatch=dispatch)
 
 
+def _first_layer_slice(v, nd: int):
+    """Strip leading layer-stack dims off one leaf (first layer's slice).
+
+    Works on concrete arrays AND on ``jax.ShapeDtypeStruct`` leaves —
+    the static plan auditor walks ``jax.eval_shape`` trees through the
+    same :func:`iter_linear_items`, so weight-free traversal must not
+    require a materialized array.
+    """
+    if v.ndim <= nd:
+        return v
+    if isinstance(v, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct(tuple(v.shape[v.ndim - nd:]), v.dtype)
+    return v.reshape((-1,) + tuple(v.shape[v.ndim - nd:]))[0]
+
+
 def iter_linear_items(tree, _names=()):
     """Yield ``(names, leaf)`` for every SparseLinear param dict in a
     (possibly layer-stacked) params tree, with leading stack dims stripped
@@ -1237,8 +1307,10 @@ def iter_linear_items(tree, _names=()):
     hint-less inside the MoE's own shard_map body.
 
     This is the ONE place that knows how to recognize a linear layout
-    inside a model pytree — pretune and the serving dispatch report both
-    build on it so the detection can't drift between them.
+    inside a model pytree — pretune, the serving dispatch report, and
+    the static plan auditor (which walks ``jax.eval_shape`` trees of
+    ``ShapeDtypeStruct`` leaves) all build on it so the detection can't
+    drift between them.
     """
     if isinstance(tree, dict):
         if quant.is_linear_leaf(tree):
@@ -1247,12 +1319,10 @@ def iter_linear_items(tree, _names=()):
                 # static activation scales and calibration tags are 0-D
                 # per layer; per-channel quantization scales and gather
                 # indices are 1-D; everything else is a 2-D operand
-                if k in (quant.ACT_SCALE_KEY, quant._CALIB_KEY):
-                    leaf[k] = v.reshape(-1)[0] if v.ndim > 0 else v
-                    continue
-                nd = 1 if k in ("gather_idx", quant.SCALE_KEY) else 2
-                leaf[k] = (v.reshape((-1,) + tuple(v.shape[-nd:]))[0]
-                           if v.ndim > nd else v)
+                nd = (0 if k in (quant.ACT_SCALE_KEY, quant._CALIB_KEY)
+                      else 1 if k in ("gather_idx", quant.SCALE_KEY)
+                      else 2)
+                leaf[k] = _first_layer_slice(v, nd)
             yield _names, leaf
             return
         mark = ("experts",) if "router" in tree else ()
@@ -1694,12 +1764,13 @@ def sparse_matmul(
     return y2.reshape(*lead, o)
 
 
-def requant_plan(
+def requant_decision(
     consumer_params: Dict[str, Any], batch_shape: Sequence[int], cfg,
     dispatch: Optional[DispatchConfig] = None,
     shard: Optional[ShardSpec] = None,
-) -> Optional[Tuple[str, jax.Array]]:
-    """Should the PRODUCER of these activations fuse a requantize?
+) -> Tuple[Optional[Tuple[str, jax.Array]], ReasonCode]:
+    """Should the PRODUCER of these activations fuse a requantize — and
+    if not, the structured :class:`ReasonCode` saying why.
 
     A producing kernel may extend its epilogue with
     ``requant:<dtype>`` — emitting the narrow rows the next quantized
@@ -1709,25 +1780,47 @@ def requant_plan(
     (b) run a single-placement kernel itself (the jnp dequantize
     reference and the shard_map bodies want float rows).
     ``batch_shape`` is the leading (batch) shape of the activations the
-    producer will emit.  Returns the ``(dtype_name, scalar_scale)`` to
-    put on the producer's epilogue, or ``None`` — both sides derive the
-    decision from this one function, so producer and consumer can never
-    disagree.
+    producer will emit.  Returns ``((dtype_name, scalar_scale), code)``
+    on a fused plan or ``(None, code)`` on a decline — both sides derive
+    the decision from this one function, so producer and consumer can
+    never disagree, and the plan auditor lints the decline codes.
     """
     qdt = quant.quant_dtype(consumer_params)
-    if qdt is None or not quant.has_static_scales(consumer_params):
-        return None
+    if qdt is None:
+        # a rowwise consumer hides its quantized operands in per-tier
+        # segments — the wrapper itself plans nothing, so the producer
+        # cannot target one scale; that is a LAYOUT decline (the lint
+        # gate warns), not a benign float consumer
+        if isinstance(consumer_params, dict) and "rowwise" in consumer_params \
+                and any(quant.quant_dtype(t) is not None
+                        for t in consumer_params["rowwise"].values()):
+            return None, ReasonCode.REQUANT_LAYOUT
+        return None, ReasonCode.REQUANT_NO_QUANT
+    if not quant.has_static_scales(consumer_params):
+        return None, ReasonCode.REQUANT_DYNAMIC_SCALES
     try:
         ke = input_features(consumer_params, cfg)
         d = plan_for(consumer_params, tuple(batch_shape) + (ke,), cfg,
                      dtype=qdt, dispatch=dispatch, shard=shard)
     except ValueError:   # unrecognized layout (e.g. rowwise): no requant
-        return None
+        return None, ReasonCode.REQUANT_LAYOUT
     if not (d.uses_kernel and d.placement == "single"):
-        return None
+        return None, ReasonCode.REQUANT_CONSUMER_FALLBACK
     s = jnp.asarray(consumer_params[quant.ACT_SCALE_KEY],
                     jnp.float32).reshape(())
-    return dtype_name(qdt), s
+    return (dtype_name(qdt), s), ReasonCode.REQUANT_FUSED
+
+
+def requant_plan(
+    consumer_params: Dict[str, Any], batch_shape: Sequence[int], cfg,
+    dispatch: Optional[DispatchConfig] = None,
+    shard: Optional[ShardSpec] = None,
+) -> Optional[Tuple[str, jax.Array]]:
+    """:func:`requant_decision` minus the reason code — the execution
+    paths (``apply_mlp``, the MoE expert FFN) only need the operands."""
+    result, _ = requant_decision(consumer_params, batch_shape, cfg,
+                                 dispatch=dispatch, shard=shard)
+    return result
 
 
 def _concat_gate_up(pg, pu, mode):

@@ -1,0 +1,260 @@
+"""The frozen dispatch-reason catalog: every way the engine declines.
+
+Before this module, the decline paths of :mod:`repro.kernels.dispatch`
+— the jnp fallback tier, epilogue-fusion refusals, mask-only activation
+downgrades, and ``requant_plan`` declines — were free-form strings
+spelled at each call site.  Nothing could gate on them: a config change
+silently pushing a hot layer off the kernel tier was only ever caught
+by a perf regression.
+
+This module is the single source of truth the whole stack renders from:
+
+- :class:`ReasonCode` — the machine-readable catalog.  Every decision
+  the engine makes carries one (``DispatchDecision.reason_code``), and
+  the epilogue / activation / requant side-decisions carry their own.
+- :func:`render` — the one place reason *text* is produced.
+  ``describe()``, the serving dispatch report, ``plan_for``, and the
+  benchmark SKIP markers all call it, so their spellings can never
+  disagree (several tier-1 tests assert substrings of these strings —
+  the templates preserve the historical wording verbatim).
+- :func:`dtype_name` — THE dtype-display canonicalization table.
+  ``registry.dtype_name`` delegates here; reasons, reports, and
+  autotune cache keys all normalize dtype spellings through one table
+  instead of per-module ``<class 'jax.numpy.float32'>``-style repros.
+- The static plan auditor (:mod:`repro.analysis`) classifies sites and
+  diffs fallback budgets by these codes.
+
+The catalog is append-only: a committed budget manifest under
+``experiments/audit/`` names codes by their string values, so renaming
+or deleting one is a breaking change to every manifest.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Any, FrozenSet
+
+import jax.numpy as jnp
+
+__all__ = [
+    "Severity",
+    "ReasonCode",
+    "render",
+    "dtype_name",
+    "epilogue_annotation",
+    "activation_annotation",
+    "FALLBACK_CODES",
+    "KERNEL_CODES",
+    "EPILOGUE_DECLINE_CODES",
+    "ACTIVATION_DECLINE_CODES",
+    "REQUANT_DECLINE_CODES",
+]
+
+
+class Severity(enum.IntEnum):
+    """Lint-finding severity ladder (ordered: ERROR > WARN > INFO)."""
+
+    INFO = 0
+    WARN = 1
+    ERROR = 2
+
+
+class ReasonCode(str, enum.Enum):
+    """Every structured reason the dispatch engine can report.
+
+    The string values are the stable wire format — they appear in audit
+    JSON, budget manifests, and ``--json`` CLI output.  Grouped by the
+    decision they annotate:
+
+    - ``DispatchDecision.reason_code``: one fallback code (jnp tier) or
+      one blocks-provenance code (kernel tier).
+    - ``DispatchDecision.epilogue_reason``: fused, or why not.
+    - ``DispatchDecision.activation_reason``: in-kernel skip, or why
+      the mask-only downgrade.
+    - :func:`repro.kernels.dispatch.requant_decision`: fused producer
+      requantize, or why the producer keeps emitting float rows.
+    """
+
+    # --- jnp fallback tier (the decision routed off the kernels) ---
+    SRSTE_TRAINING = "srste-training"
+    BACKEND_JNP = "backend-jnp"
+    AUTODIFF = "autodiff"
+    NO_SHARD_SPEC = "no-shard-spec"
+    EMPTY_BATCH = "empty-batch"
+    SHARD_INDIVISIBLE = "shard-indivisible"
+    META_AXIS_SPLIT = "meta-axis-split"
+    NO_KERNEL_FITS = "no-kernel-fits"
+    # --- kernel tier (blocks provenance; decision ran a kernel) ---
+    BLOCKS_PINNED = "blocks-pinned"
+    BLOCKS_TUNED = "blocks-tuned"
+    BLOCKS_FITTED = "blocks-fitted"
+    # --- epilogue fusion ---
+    EPILOGUE_FUSED = "epilogue-fused"
+    EPILOGUE_JNP_TIER = "epilogue-jnp-tier"
+    EPILOGUE_SHARDED = "epilogue-sharded"
+    EPILOGUE_NO_DUAL_KERNEL = "epilogue-no-dual-kernel"
+    # --- activation-sparsity skip ---
+    ACT_SKIP = "activation-skip"
+    ACT_MASK_ONLY_JNP = "activation-mask-only-jnp"
+    ACT_MASK_ONLY_SHARDED = "activation-mask-only-sharded"
+    ACT_MASK_ONLY_DUAL = "activation-mask-only-dual"
+    ACT_MASK_ONLY_ENTRY = "activation-mask-only-entry"
+    # --- producer-side fused requantize (requant_decision) ---
+    REQUANT_FUSED = "requant-fused"
+    REQUANT_NO_QUANT = "requant-no-quantized-consumer"
+    REQUANT_DYNAMIC_SCALES = "requant-dynamic-scales"
+    REQUANT_LAYOUT = "requant-layout"
+    REQUANT_CONSUMER_FALLBACK = "requant-consumer-fallback"
+
+
+#: codes that mean "this GEMM runs the jnp reference, not a kernel"
+FALLBACK_CODES: FrozenSet[ReasonCode] = frozenset({
+    ReasonCode.SRSTE_TRAINING,
+    ReasonCode.BACKEND_JNP,
+    ReasonCode.AUTODIFF,
+    ReasonCode.NO_SHARD_SPEC,
+    ReasonCode.EMPTY_BATCH,
+    ReasonCode.SHARD_INDIVISIBLE,
+    ReasonCode.META_AXIS_SPLIT,
+    ReasonCode.NO_KERNEL_FITS,
+})
+
+#: codes that mean "a kernel runs; this is where its blocks came from"
+KERNEL_CODES: FrozenSet[ReasonCode] = frozenset({
+    ReasonCode.BLOCKS_PINNED,
+    ReasonCode.BLOCKS_TUNED,
+    ReasonCode.BLOCKS_FITTED,
+})
+
+#: a requested epilogue the kernel flush will NOT apply
+EPILOGUE_DECLINE_CODES: FrozenSet[ReasonCode] = frozenset({
+    ReasonCode.EPILOGUE_JNP_TIER,
+    ReasonCode.EPILOGUE_SHARDED,
+    ReasonCode.EPILOGUE_NO_DUAL_KERNEL,
+})
+
+#: an activation-sparsity class whose dead blocks will NOT be skipped
+ACTIVATION_DECLINE_CODES: FrozenSet[ReasonCode] = frozenset({
+    ReasonCode.ACT_MASK_ONLY_JNP,
+    ReasonCode.ACT_MASK_ONLY_SHARDED,
+    ReasonCode.ACT_MASK_ONLY_DUAL,
+    ReasonCode.ACT_MASK_ONLY_ENTRY,
+})
+
+#: a producer that will keep emitting float rows to a quantized consumer
+REQUANT_DECLINE_CODES: FrozenSet[ReasonCode] = frozenset({
+    ReasonCode.REQUANT_NO_QUANT,
+    ReasonCode.REQUANT_DYNAMIC_SCALES,
+    ReasonCode.REQUANT_LAYOUT,
+    ReasonCode.REQUANT_CONSUMER_FALLBACK,
+})
+
+
+# Display templates.  The fallback/blocks wording is LOAD-BEARING: tier-1
+# tests (and downstream log scrapers) assert substrings of these exact
+# strings, so edit them only with the same care as a wire format.
+_TEMPLATES = {
+    ReasonCode.SRSTE_TRAINING:
+        "SR-STE training path needs its custom VJP",
+    ReasonCode.BACKEND_JNP:
+        "backend=jnp",
+    ReasonCode.AUTODIFF:
+        "under autodiff: kernels carry no VJP rules",
+    ReasonCode.NO_SHARD_SPEC:
+        "mesh env active with no use-site shard spec: XLA owns the layout",
+    ReasonCode.EMPTY_BATCH:
+        "empty batch",
+    ReasonCode.SHARD_INDIVISIBLE:
+        "shard spec {shards} does not divide (b={b},ke={ke},o={o})",
+    ReasonCode.META_AXIS_SPLIT:
+        "shard spec slices the {n}:{m} metadata axis non-divisibly "
+        "(ke={ke} over {ske} shards)",
+    ReasonCode.NO_KERNEL_FITS:
+        "no registered kernel fits {where}(b={b},ke={ke},o={o},"
+        "{n}:{m},{dtype})",
+    ReasonCode.BLOCKS_PINNED: "blocks pinned by config",
+    ReasonCode.BLOCKS_TUNED: "autotuned blocks (cache)",
+    ReasonCode.BLOCKS_FITTED: "fitted default blocks",
+    ReasonCode.EPILOGUE_FUSED:
+        "epilogue applied in the kernel flush",
+    ReasonCode.EPILOGUE_JNP_TIER:
+        "epilogue unfused: jnp reference tier applies apply_reference",
+    ReasonCode.EPILOGUE_SHARDED:
+        "epilogue unfused: shard_map psums before the epilogue may run",
+    ReasonCode.EPILOGUE_NO_DUAL_KERNEL:
+        "epilogue unfused: selected entry carries no dual kernel",
+    ReasonCode.ACT_SKIP:
+        "dead K-blocks skipped in-kernel",
+    ReasonCode.ACT_MASK_ONLY_JNP:
+        "mask-only: jnp reference contracts the masked operand",
+    ReasonCode.ACT_MASK_ONLY_SHARDED:
+        "mask-only: shard_map bodies take no per-shard skip maps",
+    ReasonCode.ACT_MASK_ONLY_DUAL:
+        "mask-only: no masked dual (gate-up) kernels",
+    ReasonCode.ACT_MASK_ONLY_ENTRY:
+        "mask-only: selected entry carries no masked variant",
+    ReasonCode.REQUANT_FUSED:
+        "producer fuses requantize against the consumer's static scale",
+    ReasonCode.REQUANT_NO_QUANT:
+        "no fused requantize: consumer is not quantized",
+    ReasonCode.REQUANT_DYNAMIC_SCALES:
+        "no fused requantize: consumer has no calibrated static scale",
+    ReasonCode.REQUANT_LAYOUT:
+        "no fused requantize: consumer layout is not a plannable linear "
+        "(e.g. rowwise tiers)",
+    ReasonCode.REQUANT_CONSUMER_FALLBACK:
+        "no fused requantize: consumer plans off the single-placement "
+        "kernel tier",
+}
+
+
+def render(code: ReasonCode, **ctx: Any) -> str:
+    """The display string for one reason code (THE reason-text factory).
+
+    ``ctx`` fills the code's template fields (shapes, shard counts,
+    dtype names); codes with no fields take none.
+    """
+    return _TEMPLATES[ReasonCode(code)].format(**ctx)
+
+
+def epilogue_annotation(code) -> str:
+    """``describe()``'s bracket suffix for an epilogue decision."""
+    return "fused" if ReasonCode(code) is ReasonCode.EPILOGUE_FUSED else "jnp"
+
+
+def activation_annotation(code) -> str:
+    """``describe()``'s bracket suffix for an activation decision."""
+    code = ReasonCode(code)
+    if code is ReasonCode.ACT_SKIP:
+        return "skip"
+    if code is ReasonCode.ACT_MASK_ONLY_JNP:
+        return "jnp"
+    return "mask-only"
+
+
+# dtype-display aliases accepted on top of everything ``jnp.dtype``
+# already parses — the ONE canonicalization table for reason/report
+# spellings (``repro.core.quantize`` keeps its own, stricter table for
+# what may be a quantization *target*; display is a wider set).
+_DTYPE_DISPLAY_ALIASES = {
+    "fp8": "float8_e4m3fn",
+    "e4m3": "float8_e4m3fn",
+    "fp32": "float32",
+    "fp16": "float16",
+    "bf16": "bfloat16",
+}
+
+
+def dtype_name(dtype) -> str:
+    """Canonical dtype name for dispatch reasons, reports, and cache keys.
+
+    ``dtype`` may be a jnp scalar type (``jnp.float32``), a numpy dtype,
+    or a string (including the short aliases "fp8"/"bf16"/...); all
+    normalize to the short numpy name ("float32", "int8",
+    "float8_e4m3fn", ...) instead of the raw ``<class
+    'jax.numpy.float32'>`` repr, so dispatch-plan reports and test
+    asserts are stable.
+    """
+    if isinstance(dtype, str):
+        dtype = _DTYPE_DISPLAY_ALIASES.get(dtype.strip().lower(), dtype)
+    return jnp.dtype(dtype).name

@@ -248,9 +248,10 @@ def supports_fp8(backend: str) -> bool:
 def dtype_name(dtype) -> str:
     """Canonical dtype name for dispatch reasons, reports, and cache keys.
 
-    ``dtype`` may be a jnp scalar type (``jnp.float32``), a numpy dtype,
-    or a string; all normalize to the short numpy name ("float32",
-    "int8", ...) instead of the raw ``<class 'jax.numpy.float32'>``
-    repr, so dispatch-plan reports and test asserts are stable.
+    Delegates to :func:`repro.kernels.reasons.dtype_name` — the ONE
+    dtype-display canonicalization table — and stays exported here for
+    back-compat (the engine, benchmarks, and tests import it from the
+    registry).
     """
-    return jax.numpy.dtype(dtype).name
+    from repro.kernels import reasons
+    return reasons.dtype_name(dtype)

@@ -85,6 +85,9 @@ def main():
     ap.add_argument("--lockstep", action="store_true",
                     help="ALSO run the pre-paging lockstep loop on the "
                          "same trace and print the comparison")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the static dispatch-plan audit for these "
+                         "flags (weight-free; no serving run)")
     args = ap.parse_args()
     if args.static_scales and not args.quantize:
         ap.error("--static-scales requires --quantize int8|fp8")
@@ -111,8 +114,19 @@ def main():
         kv_blocks=args.kv_blocks, kv_qdtype=args.kv_quantize,
         admission=args.admission, prefill_chunk=args.prefill_chunk)
 
-    cfg = spec.apply_to(
-        get_smoke_config(args.arch) if args.smoke else get_config(args.arch))
+    base_cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.explain:
+        # static plan audit: what will the engine run for these flags,
+        # and why does anything fall off the kernel tier — no weights,
+        # no serving loop (see python -m repro.launch.audit)
+        from repro.analysis import audit_model
+        backend = (args.kernel_backend if args.kernel_backend != "auto"
+                   else "tpu")
+        audit = audit_model(base_cfg, spec, backend=backend, arch=args.arch)
+        print("\n".join(audit.summary_lines()))
+        return
+
+    cfg = spec.apply_to(base_cfg)
     params = init_params(jax.random.PRNGKey(0), cfg)
     calib_tokens = None
     if args.static_scales:

@@ -155,6 +155,19 @@ class Prepared:
                 backend=self.spec.backend, autotune=self.spec.autotune))
             yield self
 
+    def audit(self, backend: str = "tpu"):
+        """Static plan audit of this prepared model's (cfg, spec) pair
+        (:func:`repro.analysis.audit_model`) — the weight-free
+        counterpart of :meth:`dispatch_report`, with reason codes and
+        lint findings instead of display lines.  Requires ``cfg`` (full
+        -model preparation)."""
+        if self.cfg is None:
+            raise ValueError("Prepared.audit() needs a full-model "
+                             "preparation (prepare(..., cfg=cfg))")
+        from repro.analysis import audit_model
+        return audit_model(self.cfg, self.spec, backend=backend,
+                           arch=getattr(self.cfg, "name", ""))
+
     def dispatch_report(self, batches: Optional[Tuple[int, ...]] = None):
         """Engine-decision lines for this tree (see
         :func:`repro.kernels.dispatch.dispatch_report`)."""

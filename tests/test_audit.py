@@ -1,0 +1,190 @@
+"""Static plan auditor: golden reason-code surfaces, lint ladder, CI gate.
+
+Three layers of coverage:
+
+1. **Golden manifests** — every committed budget manifest under
+   ``experiments/audit/`` re-audits clean (the exact check CI runs), and
+   each execution class carries the reason codes that define it
+   (kernel-tier serving, grad autodiff, spgemm activation-skip, fused
+   requant, ...).
+2. **Lint regressions** — the unfittable-quantized-tile ERROR, the
+   rowwise requant-drop WARN, expert/attention INFO downgrades.
+3. **The gate itself** — a perturbed manifest fails ``--check`` with
+   exit 1; ``AUDIT_OVERRIDE`` downgrades it to a report (exit 0).
+"""
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import pytest
+
+from repro.analysis import (
+    audit_from_manifest,
+    audit_model,
+    compare,
+    load_manifest,
+    manifest_from,
+    save_manifest,
+)
+from repro.configs import get_smoke_config
+from repro.kernels.reasons import ReasonCode
+from repro.launch.audit import main as audit_main
+from repro.serving import ServingSpec
+
+MANIFEST_DIR = (pathlib.Path(__file__).resolve().parents[1]
+                / "experiments" / "audit")
+MANIFESTS = sorted(MANIFEST_DIR.glob("*.json"))
+
+# the reason codes that DEFINE each committed execution class — a
+# manifest losing one of these has stopped exercising its class
+GOLDEN_CODES = {
+    "dense.json": {"kernel-tier", "autodiff", "epilogue-fused"},
+    "compressed_2_4.json": {"kernel-tier", "autodiff", "epilogue-fused"},
+    "gather_1_4.json": {"kernel-tier", "autodiff"},
+    "rowwise.json": {"kernel-tier", "autodiff"},
+    "int8_static.json": {"kernel-tier", "autodiff", "requant-fused"},
+    "fp8.json": {"kernel-tier", "autodiff"},
+    "sharded_tp.json": {"kernel-tier", "no-shard-spec"},
+    "spgemm_moe.json": {"kernel-tier", "activation-skip"},
+}
+
+
+def test_manifest_set_is_the_expected_eight():
+    assert {p.name for p in MANIFESTS} == set(GOLDEN_CODES), MANIFESTS
+
+
+@pytest.mark.parametrize("path", MANIFESTS, ids=lambda p: p.stem)
+def test_manifest_reaudits_clean(path):
+    """The CI gate's core loop: recipe -> audit -> diff, no failures."""
+    manifest = load_manifest(str(path))
+    audit = audit_from_manifest(manifest)
+    diff = compare(audit, manifest, name=path.name)
+    assert diff.ok, diff.lines()
+    assert GOLDEN_CODES[path.name] <= set(audit.counts), audit.counts
+    # manifests must be reproducible across hosts: no raw blocks-
+    # provenance codes (autotune cache state), only the aggregate
+    assert not {"blocks-fitted", "blocks-tuned",
+                "blocks-pinned"} & set(audit.counts)
+
+
+def test_codes_are_catalog_members():
+    """Budget keys are frozen-catalog values (or the kernel aggregate)."""
+    valid = {c.value for c in ReasonCode} | {"kernel-tier"}
+    for path in MANIFESTS:
+        codes = set(load_manifest(str(path))["codes"])
+        assert codes <= valid, (path.name, codes - valid)
+
+
+def test_audit_is_fast_and_weight_free():
+    """Acceptance bound: one full three-phase audit in well under 5s."""
+    t0 = time.perf_counter()
+    audit = audit_model(
+        get_smoke_config("internlm2_1_8b"),
+        ServingSpec(layout="compressed", sparsity=(2, 4), qdtype="int8",
+                    static_scales=True))
+    assert time.perf_counter() - t0 < 5.0
+    assert audit.sites and audit.severity_counts()["ERROR"] == 0
+
+
+def test_grad_phase_is_expected_info_fallback():
+    audit = audit_model(get_smoke_config("internlm2_1_8b"),
+                        ServingSpec(layout="compressed", sparsity=(2, 4)))
+    grad = [s for s in audit.sites if s.phase == "grad"]
+    assert grad
+    assert all(s.decision.reason_code is ReasonCode.AUTODIFF for s in grad)
+    assert all(f.severity.name == "INFO" for f in audit.findings
+               if f.phase == "grad")
+
+
+def test_unfittable_quantized_tile_is_error():
+    """A d_model no block quantum divides: every quantized serving site
+    must surface as an ERROR (the silent-dequantize regression the
+    auditor exists to catch), never as a silent kernel plan."""
+    cfg = dataclasses.replace(get_smoke_config("internlm2_1_8b"),
+                              d_model=136, d_ff=136, vocab_size=272)
+    audit = audit_model(cfg, ServingSpec(layout="compressed",
+                                         sparsity=(2, 4), qdtype="int8"))
+    assert audit.counts["no-kernel-fits"] > 0
+    errors = [f for f in audit.findings if f.severity.name == "ERROR"]
+    assert errors and all(f.rule == "unfittable-tile" for f in errors)
+    # same shape, float: the 32-row quantum is a quantized-kernel
+    # constraint — float kernels tile 136 fine, so no ERROR and no
+    # no-kernel-fits at all
+    faudit = audit_model(cfg, ServingSpec(layout="compressed",
+                                          sparsity=(2, 4)))
+    assert faudit.severity_counts()["ERROR"] == 0
+    assert "no-kernel-fits" not in faudit.counts
+
+
+def test_rowwise_quantized_drops_producer_requant():
+    """Rowwise w_out consumers are tier dicts, not plannable linears:
+    the producer keeps emitting float rows and the audit says so."""
+    audit = audit_model(get_smoke_config("internlm2_1_8b"),
+                        ServingSpec(layout="rowwise", qdtype="int8",
+                                    static_scales=True))
+    assert audit.counts.get("requant-layout", 0) > 0
+    assert any(f.rule == "requant-dropped" for f in audit.findings)
+
+
+def test_mesh_audit_runs_without_devices():
+    """A 2x4 mesh audit on a 1-CPU host: the duck mesh carries the
+    shard math, hinted sites plan shard_map, expert/attention sites
+    downgrade to INFO."""
+    audit = audit_model(
+        get_smoke_config("qwen3_moe_235b_a22b"),
+        ServingSpec(layout="compressed", sparsity=(2, 4), mesh=(2, 4)))
+    sharded = [s for s in audit.sites
+               if s.decision.uses_kernel and s.decision.uses_shard_map]
+    assert sharded, "no hinted site planned shard_map under the mesh"
+    no_spec = [f for f in audit.findings
+               if f.code is ReasonCode.NO_SHARD_SPEC]
+    assert no_spec and all(f.severity.name == "INFO" for f in no_spec
+                           if "experts" in f.site or "attention" in f.site)
+
+
+def test_compare_flags_new_code_and_over_budget():
+    audit = audit_model(get_smoke_config("internlm2_1_8b"),
+                        ServingSpec(layout="compressed", sparsity=(2, 4)))
+    manifest = manifest_from(audit, arch="internlm2_1_8b")
+    assert compare(audit, manifest).ok
+    broken = json.loads(json.dumps(manifest))
+    broken["codes"].pop("autodiff")           # now an unbudgeted code
+    broken["codes"]["kernel-tier"] -= 1       # now over budget
+    diff = compare(audit, broken, name="broken")
+    assert not diff.ok
+    assert any("autodiff" in f for f in diff.failures)
+    assert any("kernel-tier" in f for f in diff.failures)
+
+
+def test_cli_gate_fails_on_perturbed_manifest(tmp_path, monkeypatch, capsys):
+    """End-to-end CI contract: an injected unexpected fallback budget
+    fails ``--check`` with exit 1; the override label reports instead."""
+    monkeypatch.delenv("AUDIT_OVERRIDE", raising=False)
+    src = load_manifest(str(MANIFEST_DIR / "compressed_2_4.json"))
+    good = tmp_path / "good.json"
+    save_manifest(str(good), src)
+    assert audit_main(["--check", str(good)]) == 0
+
+    bad = json.loads(json.dumps(src))
+    bad["codes"]["autodiff"] = 0              # grad fallbacks now illegal
+    bad["budget"]["ERROR"] = 0
+    bad_path = tmp_path / "bad.json"
+    save_manifest(str(bad_path), bad)
+    assert audit_main(["--check", str(bad_path)]) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+    monkeypatch.setenv("AUDIT_OVERRIDE", "1")
+    assert audit_main(["--check", str(bad_path)]) == 0
+    assert "AUDIT_OVERRIDE" in capsys.readouterr().out
+
+
+def test_cli_adhoc_and_json(capsys):
+    rc = audit_main(["--config", "internlm2_1_8b", "--smoke",
+                     "--sparsity", "2:4", "--quantize", "int8"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "plan audit: internlm2_1_8b" in out
+    rc = audit_main(["--config", "internlm2_1_8b", "--smoke", "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 0 and payload["counts"]["kernel-tier"] > 0
