@@ -26,6 +26,7 @@ from repro.analysis.audit import (  # noqa: F401
 )
 from repro.analysis.budget import (  # noqa: F401
     BudgetDiff,
+    audit_artifact,
     audit_from_manifest,
     compare,
     config_from_manifest,

@@ -29,6 +29,7 @@ __all__ = [
     "config_from_manifest",
     "spec_from_manifest",
     "audit_from_manifest",
+    "audit_artifact",
     "compare",
 ]
 
@@ -120,6 +121,29 @@ def audit_from_manifest(manifest: Dict[str, Any]):
                        phases=tuple(manifest.get("phases") or PHASES),
                        backend=manifest.get("backend", "tpu"),
                        arch=manifest["config"]["arch"])
+
+
+def audit_artifact(path_or_manifest, *, backend: str = "tpu",
+                   phases=None):
+    """Static plan audit of one conversion artifact.
+
+    Artifact manifests share the budget-manifest schema (``config`` +
+    ``spec`` blocks), so this is ``audit_model`` over the artifact's own
+    recipe — a converted checkpoint's fallback surface is budgetable
+    exactly like any config (``launch/convert.py --explain``).
+    """
+    from repro.analysis.audit import PHASES, audit_model
+
+    if isinstance(path_or_manifest, dict):
+        manifest = path_or_manifest
+    else:
+        from repro.checkpoint import artifact_manifest
+        manifest = artifact_manifest(path_or_manifest)
+    cfg = config_from_manifest(manifest)
+    spec = spec_from_manifest(manifest)
+    cfg = spec.apply_to(cfg)
+    return audit_model(cfg, spec, phases=tuple(phases or PHASES),
+                       backend=backend, arch=manifest["config"]["arch"])
 
 
 def compare(audit, manifest: Dict[str, Any], name: str = "") -> BudgetDiff:

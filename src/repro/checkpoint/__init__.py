@@ -1,3 +1,33 @@
-"""Checkpointing."""
+"""Checkpointing: training store + external import + conversion artifacts."""
 
-from .store import latest_step, restore, save
+from .convert import (
+    ConvertError,
+    TensorRule,
+    convert_hf,
+    export_hf,
+    fuse_gate_up,
+    fuse_in_proj,
+    fuse_qkv,
+    load_hf_checkpoint,
+    reshard,
+    rule_for,
+    save_hf_checkpoint,
+    split_gate_up,
+    split_in_proj,
+    split_qkv,
+    tp_merge,
+    tp_split,
+    validate_hf_config,
+    write_hf_config,
+)
+from .store import (
+    ARTIFACT_VERSION,
+    ArtifactError,
+    artifact_manifest,
+    latest_step,
+    load_artifact,
+    manifest_diff,
+    restore,
+    save,
+    save_artifact,
+)

@@ -1,0 +1,756 @@
+"""External (HF-style) checkpoint import/export + TP-rank bookkeeping.
+
+Serving real checkpoints means mapping an external layout onto the
+repo's stacked stage/slot param tree.  This module owns that mapping:
+
+- **naming scheme** — the canonical external tensor names are the
+  HF/transformers conventions (``model.layers.{i}.self_attn.q_proj.
+  weight`` in torch ``(out, in)`` orientation, RMSNorm weights stored
+  as the multiplicative ``w`` rather than the repo's ``1 + gamma``,
+  conv weights as ``(channels, 1, width)``).  Layer index ``i`` follows
+  the repo's apply order (stage -> super-block -> slot -> repeat; see
+  ``repro.models.transformer.build_layout``).
+- **fused-tensor rules** — fused QKV (``qkv_proj``: GQA-interleaved,
+  per kv group ``g`` query heads then one K then one V — the
+  internlm2 convention), fused gate-up (``gate_up_proj``: ``[gate;
+  up]``), and the Mamba ``in_proj`` (``[z; x; B; C; dt]``) all split /
+  re-fuse losslessly (:func:`split_qkv` / :func:`fuse_qkv` et al.).
+- **per-tensor partition-dim rules** — :func:`rule_for` classifies
+  every external tensor for tensor parallelism (column-parallel
+  projections partition dim 0 of the torch layout, row-parallel dim 1,
+  norms/scalars replicate; fused tensors carry per-segment or
+  group-quantum constraints so a TP split never slices through a kv
+  group or across the gate/up boundary).  :func:`tp_split` /
+  :func:`tp_merge` / :func:`reshard` are exact inverses — a 2-way ->
+  1-way -> 2-way round trip is bit-identical (property-tested).
+- **import/export** — :func:`convert_hf` builds the repo's dense param
+  tree from an external state dict (strict: every tensor consumed
+  exactly once); :func:`export_hf` is its inverse (and the synthetic-
+  fixture generator).  The offline prune/compress/quantize/calibrate
+  pipeline is NOT here — ``repro.serving.prepare`` runs it on the
+  converted dense tree, and ``repro.checkpoint.store.save_artifact``
+  freezes the result (see ``python -m repro.launch.convert``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "ConvertError",
+    "TensorRule",
+    "rule_for",
+    "tp_split",
+    "tp_merge",
+    "reshard",
+    "split_qkv",
+    "fuse_qkv",
+    "split_gate_up",
+    "fuse_gate_up",
+    "split_in_proj",
+    "fuse_in_proj",
+    "convert_hf",
+    "export_hf",
+    "load_hf_checkpoint",
+    "save_hf_checkpoint",
+    "write_hf_config",
+    "validate_hf_config",
+]
+
+INDEX_NAME = "model.npz.index.json"
+CONFIG_NAME = "config.json"
+
+
+class ConvertError(ValueError):
+    """A checkpoint does not map onto the requested config."""
+
+
+# ---------------------------------------------------------------------------
+# fused-tensor split / fuse (torch (out, in) orientation throughout)
+# ---------------------------------------------------------------------------
+
+def fuse_qkv(q: np.ndarray, k: np.ndarray, v: np.ndarray, cfg) -> np.ndarray:
+    """Interleave separate q/k/v projections into one fused ``qkv_proj``.
+
+    Layout per kv group: ``g`` query heads, then one K head, then one V
+    head — each ``head_dim`` rows — so a TP split along whole groups
+    keeps every rank self-contained (the internlm2 ``wqkv`` layout).
+    """
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    g = cfg.num_heads // hkv
+    d = q.shape[-1]
+    qg = q.reshape(hkv, g, hd, d)
+    kg = k.reshape(hkv, 1, hd, d)
+    vg = v.reshape(hkv, 1, hd, d)
+    return np.concatenate([qg, kg, vg], axis=1).reshape(hkv * (g + 2) * hd, d)
+
+
+def split_qkv(w: np.ndarray, cfg) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Inverse of :func:`fuse_qkv`: fused ``qkv_proj`` -> (q, k, v)."""
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    g = cfg.num_heads // hkv
+    d = w.shape[-1]
+    if w.shape[0] != hkv * (g + 2) * hd:
+        raise ConvertError(
+            f"fused qkv has {w.shape[0]} rows, config wants "
+            f"{hkv * (g + 2) * hd} ({hkv} kv groups x ({g}q+k+v) x {hd})")
+    wg = w.reshape(hkv, g + 2, hd, d)
+    q = wg[:, :g].reshape(hkv * g * hd, d)
+    k = wg[:, g].reshape(hkv * hd, d)
+    v = wg[:, g + 1].reshape(hkv * hd, d)
+    return q, k, v
+
+
+def fuse_gate_up(gate: np.ndarray, up: np.ndarray) -> np.ndarray:
+    """``[gate; up]`` along the out dim (the HF ``gate_up_proj`` layout)."""
+    return np.concatenate([gate, up], axis=0)
+
+
+def split_gate_up(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    if w.shape[0] % 2:
+        raise ConvertError(f"fused gate_up has odd row count {w.shape[0]}")
+    ff = w.shape[0] // 2
+    return w[:ff], w[ff:]
+
+
+def _in_proj_segments(cfg) -> Tuple[int, ...]:
+    return (cfg.d_inner, cfg.d_inner, cfg.ssm_state, cfg.ssm_state,
+            cfg.ssm_heads)
+
+
+def fuse_in_proj(z, x, B, C, dt) -> np.ndarray:
+    """Mamba-2 fused ``in_proj``: ``[z; x; B; C; dt]`` along the out dim."""
+    return np.concatenate([z, x, B, C, dt], axis=0)
+
+
+def split_in_proj(w: np.ndarray, cfg) -> Tuple[np.ndarray, ...]:
+    sizes = _in_proj_segments(cfg)
+    if w.shape[0] != sum(sizes):
+        raise ConvertError(
+            f"mamba in_proj has {w.shape[0]} rows, config wants "
+            f"{sum(sizes)} (z+x+B+C+dt = {sizes})")
+    out, start = [], 0
+    for s in sizes:
+        out.append(w[start:start + s])
+        start += s
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# per-tensor partition-dim rules + TP-rank resharding
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TensorRule:
+    """How one external tensor partitions across TP ranks.
+
+    ``partition_dim`` is in the tensor's own (torch) orientation; None
+    means replicated.  ``segments`` describes a fused tensor: each
+    segment along the partition dim splits independently and a rank
+    shard is the concatenation of its per-segment slices (the
+    gate/up and z/x/B/C/dt bookkeeping).  ``quantum`` is the smallest
+    indivisible row block (e.g. one GQA group of a fused qkv).
+    """
+
+    partition_dim: Optional[int]
+    segments: Optional[Tuple[int, ...]] = None
+    quantum: int = 1
+
+
+def rule_for(name: str, cfg) -> TensorRule:
+    """Partition-dim rule for one external tensor name."""
+    g = cfg.num_heads // max(cfg.num_kv_heads, 1)
+    if name.endswith(("embed_tokens.weight", "lm_head.weight")):
+        return TensorRule(0)
+    if name.endswith(".self_attn.qkv_proj.weight"):
+        return TensorRule(0, quantum=(g + 2) * cfg.head_dim)
+    if name.endswith((".self_attn.q_proj.weight", ".self_attn.k_proj.weight",
+                      ".self_attn.v_proj.weight")):
+        return TensorRule(0, quantum=cfg.head_dim)
+    if name.endswith(".self_attn.o_proj.weight"):
+        return TensorRule(1, quantum=cfg.head_dim)
+    if name.endswith(".mlp.gate_up_proj.weight") or name.endswith(
+            ".gate_up_proj.weight"):
+        ff = cfg.d_ff
+        return TensorRule(0, segments=(ff, ff))
+    if name.endswith((".gate_proj.weight", ".up_proj.weight")):
+        return TensorRule(0)
+    if name.endswith(".down_proj.weight"):
+        return TensorRule(1)
+    if name.endswith(".mamba.in_proj.weight"):
+        return TensorRule(0, segments=_in_proj_segments(cfg))
+    if name.endswith(".mamba.conv1d.weight"):
+        return TensorRule(0, segments=(cfg.d_inner, cfg.ssm_state,
+                                       cfg.ssm_state))
+    if name.endswith(".mamba.out_proj.weight"):
+        return TensorRule(1)
+    if name.endswith((".mamba.A_log", ".mamba.D", ".mamba.dt_bias")):
+        return TensorRule(None)
+    if name.endswith((".moe.router.weight", "norm.weight",
+                      "layernorm.weight", "frame_proj.weight")):
+        return TensorRule(None)
+    raise ConvertError(f"no partition rule for tensor {name!r}")
+
+
+def _check_div(size: int, tp: int, quantum: int, name: str) -> None:
+    if size % (tp * quantum):
+        raise ConvertError(
+            f"{name}: {size} rows cannot split {tp} ways "
+            f"(quantum {quantum})")
+
+
+def tp_split(arr: np.ndarray, rule: TensorRule, tp: int,
+             name: str = "tensor") -> List[np.ndarray]:
+    """Split one full tensor into ``tp`` rank shards under its rule."""
+    if tp == 1:
+        return [np.asarray(arr)]
+    if rule.partition_dim is None:
+        return [np.array(arr) for _ in range(tp)]
+    dim = rule.partition_dim
+    arr = np.moveaxis(np.asarray(arr), dim, 0)
+    if rule.segments is not None:
+        if sum(rule.segments) != arr.shape[0]:
+            raise ConvertError(
+                f"{name}: segments {rule.segments} do not cover "
+                f"{arr.shape[0]} rows")
+        segs, start = [], 0
+        for s in rule.segments:
+            _check_div(s, tp, 1, name)
+            segs.append(arr[start:start + s])
+            start += s
+        shards = [
+            np.concatenate([s[r * (s.shape[0] // tp):
+                              (r + 1) * (s.shape[0] // tp)] for s in segs])
+            for r in range(tp)
+        ]
+    else:
+        _check_div(arr.shape[0], tp, rule.quantum, name)
+        shards = np.split(arr, tp, axis=0)
+    return [np.moveaxis(s, 0, dim) for s in shards]
+
+
+def tp_merge(shards: Sequence[np.ndarray], rule: TensorRule,
+             name: str = "tensor") -> np.ndarray:
+    """Inverse of :func:`tp_split`: rank shards -> the full tensor."""
+    shards = [np.asarray(s) for s in shards]
+    if len(shards) == 1:
+        return shards[0]
+    if rule.partition_dim is None:
+        for s in shards[1:]:
+            if not np.array_equal(s, shards[0]):
+                raise ConvertError(
+                    f"{name}: replicated tensor differs across ranks")
+        return shards[0]
+    dim = rule.partition_dim
+    moved = [np.moveaxis(s, dim, 0) for s in shards]
+    if rule.segments is not None:
+        tp = len(shards)
+        per_seg: List[List[np.ndarray]] = [[] for _ in rule.segments]
+        for s in moved:
+            start = 0
+            for i, seg in enumerate(rule.segments):
+                n = seg // tp
+                per_seg[i].append(s[start:start + n])
+                start += n
+            if start != s.shape[0]:
+                raise ConvertError(
+                    f"{name}: rank shard rows {s.shape[0]} do not match "
+                    f"segments {rule.segments} / tp={tp}")
+        merged = np.concatenate([np.concatenate(p) for p in per_seg])
+    else:
+        merged = np.concatenate(moved)
+    return np.moveaxis(merged, 0, dim)
+
+
+def reshard(state_shards: Sequence[Dict[str, np.ndarray]], to_tp: int,
+            cfg) -> List[Dict[str, np.ndarray]]:
+    """Reshard a per-rank list of state dicts to ``to_tp`` ranks.
+
+    ``len(state_shards)`` is the source TP degree; every tensor merges
+    under its partition rule and re-splits, so any ``a -> b -> a``
+    round trip is bit-exact.
+    """
+    keys = set(state_shards[0])
+    for s in state_shards[1:]:
+        if set(s) != keys:
+            raise ConvertError("TP rank shards carry different tensor sets")
+    out: List[Dict[str, np.ndarray]] = [dict() for _ in range(to_tp)]
+    for name in sorted(keys):
+        rule = rule_for(name, cfg)
+        full = tp_merge([s[name] for s in state_shards], rule, name)
+        for r, shard in enumerate(tp_split(full, rule, to_tp, name)):
+            out[r][name] = shard
+    return out
+
+
+# ---------------------------------------------------------------------------
+# checkpoint directory IO (npz shards + HF-style index, TP rank dirs)
+# ---------------------------------------------------------------------------
+
+def _rank_dirs(path: Path) -> List[Path]:
+    return sorted(p for p in path.glob("tp-rank-*") if p.is_dir())
+
+
+def load_hf_checkpoint(path, cfg=None) -> Dict[str, np.ndarray]:
+    """Read an external checkpoint directory into a flat state dict.
+
+    Accepts a single ``model.npz``, an HF-style sharded layout
+    (``model-XXXXX-of-XXXXX.npz`` + ``model.npz.index.json`` with a
+    ``weight_map``), or ``tp-rank-XX-of-NN/`` subdirectories (each a
+    checkpoint of either flavor) which are merged under the partition
+    rules — merging needs ``cfg``.
+    """
+    path = Path(path)
+    if not path.exists():
+        raise ConvertError(f"checkpoint directory {path} does not exist")
+    ranks = _rank_dirs(path)
+    if ranks:
+        if cfg is None:
+            raise ConvertError(
+                "merging TP rank shards needs the model config "
+                "(load_hf_checkpoint(path, cfg))")
+        shards = [load_hf_checkpoint(r) for r in ranks]
+        merged = reshard(shards, 1, cfg)[0]
+        return merged
+    index = path / INDEX_NAME
+    state: Dict[str, np.ndarray] = {}
+    if index.exists():
+        weight_map = json.loads(index.read_text())["weight_map"]
+        for fname in sorted(set(weight_map.values())):
+            with np.load(path / fname, allow_pickle=False) as z:
+                for k in z.files:
+                    state[k] = z[k]
+        missing = set(weight_map) - set(state)
+        if missing:
+            raise ConvertError(
+                f"index lists tensors missing from shards: {sorted(missing)}")
+        return state
+    single = path / "model.npz"
+    if not single.exists():
+        raise ConvertError(
+            f"{path} holds neither model.npz, {INDEX_NAME}, nor "
+            f"tp-rank-* shards")
+    with np.load(single, allow_pickle=False) as z:
+        for k in z.files:
+            state[k] = z[k]
+    return state
+
+
+def save_hf_checkpoint(path, state: Dict[str, np.ndarray], *,
+                       shards: int = 1, tp: int = 0, cfg=None) -> Path:
+    """Write a state dict as an external checkpoint directory.
+
+    ``shards > 1`` writes an HF-style indexed multi-file layout;
+    ``tp > 0`` instead writes ``tp-rank-XX-of-NN/`` subdirectories split
+    under the partition rules (needs ``cfg``).
+    """
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    if tp:
+        if cfg is None:
+            raise ConvertError("TP-sharded save needs cfg")
+        for r, shard in enumerate(reshard([state], tp, cfg)):
+            save_hf_checkpoint(path / f"tp-rank-{r:02d}-of-{tp:02d}",
+                               shard, shards=1)
+        return path
+    keys = sorted(state)
+    if shards <= 1:
+        np.savez(path / "model.npz", **{k: state[k] for k in keys})
+        return path
+    groups: List[List[str]] = [[] for _ in range(shards)]
+    sizes = [0] * shards
+    for k in sorted(keys, key=lambda k_: -state[k_].nbytes):
+        i = sizes.index(min(sizes))        # greedy balance by bytes
+        groups[i].append(k)
+        sizes[i] += state[k].nbytes
+    weight_map = {}
+    for i, group in enumerate(groups):
+        fname = f"model-{i + 1:05d}-of-{shards:05d}.npz"
+        np.savez(path / fname, **{k: state[k] for k in sorted(group)})
+        for k in group:
+            weight_map[k] = fname
+    (path / INDEX_NAME).write_text(json.dumps(
+        {"weight_map": {k: weight_map[k] for k in sorted(weight_map)}},
+        indent=2, sort_keys=True) + "\n")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# HF-style config.json
+# ---------------------------------------------------------------------------
+
+_HF_FIELDS = (
+    ("hidden_size", "d_model"),
+    ("num_hidden_layers", "num_layers"),
+    ("num_attention_heads", "num_heads"),
+    ("num_key_value_heads", "num_kv_heads"),
+    ("head_dim", "head_dim"),
+    ("intermediate_size", "d_ff"),
+    ("vocab_size", "vocab_size"),
+    ("num_local_experts", "num_experts"),
+    ("num_experts_per_tok", "top_k"),
+    ("tie_word_embeddings", "tie_embeddings"),
+)
+
+
+def write_hf_config(path, cfg) -> Path:
+    """Emit an HF-style ``config.json`` for one ModelConfig."""
+    d = {"model_type": cfg.family,
+         "hidden_act": "silu" if cfg.act == "swiglu" else cfg.act,
+         "rope_theta": cfg.rope_theta}
+    for hf_key, our_key in _HF_FIELDS:
+        d[hf_key] = getattr(cfg, our_key)
+    if cfg.ssm_state:
+        d.update(mamba_d_state=cfg.ssm_state, mamba_expand=cfg.ssm_expand,
+                 mamba_head_dim=cfg.ssm_head_dim, mamba_d_conv=cfg.ssm_conv)
+    path = Path(path)
+    target = path / CONFIG_NAME if path.is_dir() else path
+    target.write_text(json.dumps(d, indent=2, sort_keys=True) + "\n")
+    return target
+
+
+def validate_hf_config(cfg, hf: Dict[str, Any]) -> None:
+    """Raise :class:`ConvertError` listing every dimension mismatch
+    between an external ``config.json`` and the target ModelConfig."""
+    bad = []
+    for hf_key, our_key in _HF_FIELDS:
+        if hf_key in hf and hf[hf_key] != getattr(cfg, our_key):
+            bad.append(f"{hf_key}={hf[hf_key]} vs config "
+                       f"{our_key}={getattr(cfg, our_key)}")
+    if bad:
+        raise ConvertError(
+            "external config.json does not match the target config: "
+            + "; ".join(bad))
+
+
+# ---------------------------------------------------------------------------
+# import: external state dict -> repo param tree
+# ---------------------------------------------------------------------------
+
+def _index_map(cfg) -> Dict[Tuple[int, int], List[List[int]]]:
+    """Global layer index per (stage, slot) -> [count][repeat], in the
+    exact order ``apply_stack`` walks layers."""
+    from repro.models.transformer import build_layout
+
+    layout = build_layout(cfg)
+    imap: Dict[Tuple[int, int], List[List[int]]] = {
+        (si, j): [[0] * sl.repeat for _ in range(st.count)]
+        for si, st in enumerate(layout) for j, sl in enumerate(st.slots)
+    }
+    i = 0
+    for si, st in enumerate(layout):
+        for c in range(st.count):
+            for j, sl in enumerate(st.slots):
+                for r in range(sl.repeat):
+                    imap[(si, j)][c][r] = i
+                    i += 1
+    return imap
+
+
+class _State:
+    """Consume-once view of the external state dict."""
+
+    def __init__(self, state: Dict[str, np.ndarray]):
+        self._d = dict(state)
+
+    def take(self, name: str) -> np.ndarray:
+        if name not in self._d:
+            raise ConvertError(f"checkpoint is missing tensor {name!r}")
+        return self._d.pop(name)
+
+    def has(self, name: str) -> bool:
+        return name in self._d
+
+    def leftovers(self) -> List[str]:
+        return sorted(self._d)
+
+
+def _lin(w: np.ndarray, dtype) -> Dict[str, Any]:
+    """(out, in) torch tensor -> dense SparseLinear leaf (K, O)."""
+    import jax.numpy as jnp
+    return {"w": jnp.asarray(np.ascontiguousarray(w.T), dtype)}
+
+
+def _gamma(w: np.ndarray) -> Dict[str, Any]:
+    import jax.numpy as jnp
+    return {"gamma": jnp.asarray(w, jnp.float32) - 1.0}
+
+
+def _import_attn(st: _State, i: int, cfg, dtype) -> Dict[str, Any]:
+    pre = f"model.layers.{i}.self_attn."
+    if st.has(pre + "qkv_proj.weight"):
+        q, k, v = split_qkv(st.take(pre + "qkv_proj.weight"), cfg)
+    else:
+        q = st.take(pre + "q_proj.weight")
+        k = st.take(pre + "k_proj.weight")
+        v = st.take(pre + "v_proj.weight")
+    for name, arr, rows in (("q_proj", q, cfg.attn_dim),
+                            ("k_proj", k, cfg.kv_dim),
+                            ("v_proj", v, cfg.kv_dim)):
+        if arr.shape != (rows, cfg.d_model):
+            raise ConvertError(
+                f"layer {i} {name}: shape {arr.shape} != "
+                f"({rows}, {cfg.d_model})")
+    return {"wq": _lin(q, dtype), "wk": _lin(k, dtype), "wv": _lin(v, dtype),
+            "wo": _lin(st.take(pre + "o_proj.weight"), dtype)}
+
+
+def _import_mlp_mats(st: _State, pre: str, cfg, dtype,
+                     take=None) -> Dict[str, Any]:
+    take = take or st.take
+    p: Dict[str, Any] = {}
+    if cfg.act == "swiglu":
+        if st.has(pre + "gate_up_proj.weight"):
+            gate, up = split_gate_up(take(pre + "gate_up_proj.weight"))
+        else:
+            gate, up = take(pre + "gate_proj.weight"), take(pre + "up_proj.weight")
+        p["w_gate"] = _lin(gate, dtype)
+    else:
+        up = take(pre + "up_proj.weight")
+    p["w_in"] = _lin(up, dtype)
+    p["w_out"] = _lin(take(pre + "down_proj.weight"), dtype)
+    return p
+
+
+def _import_moe(st: _State, i: int, cfg, dtype) -> Dict[str, Any]:
+    import jax
+    import jax.numpy as jnp
+    pre = f"model.layers.{i}.moe."
+    router = st.take(pre + "router.weight")
+    if router.shape != (cfg.num_experts, cfg.d_model):
+        raise ConvertError(
+            f"layer {i} router: shape {router.shape} != "
+            f"({cfg.num_experts}, {cfg.d_model})")
+    experts = [_import_mlp_mats(st, f"{pre}experts.{e}.", cfg, dtype)
+               for e in range(cfg.num_experts)]
+    p = jax.tree.map(lambda *xs: jnp.stack(xs), *experts)
+    p["router"] = jnp.asarray(router.T, jnp.float32)
+    return p
+
+
+def _import_mamba(st: _State, i: int, cfg, dtype) -> Dict[str, Any]:
+    import jax.numpy as jnp
+    pre = f"model.layers.{i}.mamba."
+    z, x, B, C, dt = split_in_proj(st.take(pre + "in_proj.weight"), cfg)
+    conv = st.take(pre + "conv1d.weight")
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    if conv.shape != (conv_ch, 1, cfg.ssm_conv):
+        raise ConvertError(
+            f"layer {i} conv1d: shape {conv.shape} != "
+            f"({conv_ch}, 1, {cfg.ssm_conv})")
+    return {"mamba": {
+        "wz": _lin(z, dtype),
+        "wx": _lin(x, dtype),
+        "wB": jnp.asarray(np.ascontiguousarray(B.T), dtype),
+        "wC": jnp.asarray(np.ascontiguousarray(C.T), dtype),
+        "wdt": jnp.asarray(np.ascontiguousarray(dt.T), dtype),
+        "dt_bias": jnp.asarray(st.take(pre + "dt_bias"), jnp.float32),
+        "A_log": jnp.asarray(st.take(pre + "A_log"), jnp.float32),
+        "D": jnp.asarray(st.take(pre + "D"), jnp.float32),
+        "conv_w": jnp.asarray(np.ascontiguousarray(conv[:, 0, :].T), dtype),
+        "w_out": _lin(st.take(pre + "out_proj.weight"), dtype),
+    }}
+
+
+def _import_slot(st: _State, i: int, slot, cfg, dtype) -> Dict[str, Any]:
+    p: Dict[str, Any] = {
+        "norm1": _gamma(st.take(f"model.layers.{i}.input_layernorm.weight"))}
+    if slot.mixer in ("attn", "attn_local"):
+        p["mixer"] = _import_attn(st, i, cfg, dtype)
+    else:
+        p["mixer"] = _import_mamba(st, i, cfg, dtype)
+    if slot.ffn != "none":
+        p["norm2"] = _gamma(
+            st.take(f"model.layers.{i}.post_attention_layernorm.weight"))
+        if slot.ffn == "moe":
+            p["ffn"] = _import_moe(st, i, cfg, dtype)
+        else:
+            p["ffn"] = _import_mlp_mats(st, f"model.layers.{i}.mlp.",
+                                        cfg, dtype)
+    return p
+
+
+def convert_hf(state: Dict[str, np.ndarray], cfg, *,
+               strict: bool = True) -> Dict[str, Any]:
+    """External HF-style state dict -> the repo's dense param tree.
+
+    The result structurally matches ``repro.models.init_params(key,
+    cfg)`` with dense ``{"w"}`` linears (stacked stage/slot leading
+    dims included) — hand it to ``repro.serving.prepare`` for the
+    offline prune -> compress -> quantize -> calibrate pipeline.
+    ``strict`` (default) raises on any tensor the mapping never
+    consumed, so a naming drift cannot silently drop weights.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.transformer import build_layout
+
+    dtype = cfg.jnp_dtype
+    st = _State(state)
+    params: Dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        params["frame_proj"] = jnp.asarray(
+            st.take("model.frame_proj.weight"), dtype)
+    else:
+        emb = st.take("model.embed_tokens.weight")
+        if emb.shape != (cfg.vocab_size, cfg.d_model):
+            raise ConvertError(
+                f"embed_tokens: shape {emb.shape} != "
+                f"({cfg.vocab_size}, {cfg.d_model})")
+        params["embed"] = jnp.asarray(emb, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = jnp.asarray(
+            np.ascontiguousarray(st.take("lm_head.weight").T), dtype)
+    params["final_norm"] = _gamma(st.take("model.norm.weight"))
+
+    layout = build_layout(cfg)
+    imap = _index_map(cfg)
+    stages: List[Dict[str, Any]] = []
+    for si, stage in enumerate(layout):
+        stage_p: Dict[str, Any] = {}
+        for j, slot in enumerate(stage.slots):
+            rows = [
+                jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[_import_slot(st, imap[(si, j)][c][r], slot, cfg, dtype)
+                      for r in range(slot.repeat)])
+                for c in range(stage.count)
+            ]
+            stage_p[f"slot{j}"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *rows)
+        stages.append(stage_p)
+    params["stages"] = stages
+
+    if strict and st.leftovers():
+        raise ConvertError(
+            f"checkpoint tensors the mapping never consumed: "
+            f"{st.leftovers()}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# export: repo param tree -> external state dict (fixture generator +
+# the round-trip half of the property tests)
+# ---------------------------------------------------------------------------
+
+def _np32(a) -> np.ndarray:
+    import jax
+    return np.asarray(jax.device_get(a)).astype(np.float32)
+
+
+def _dense_w(leaf, name: str) -> np.ndarray:
+    """(K, O) dense leaf -> (out, in) torch tensor."""
+    if not (isinstance(leaf, dict) and "w" in leaf):
+        raise ConvertError(
+            f"export_hf needs dense {{'w'}} weights at {name} — export "
+            f"before layout conversion/quantization, not after")
+    return np.ascontiguousarray(_np32(leaf["w"]).T)
+
+
+def _export_mlp_mats(out: Dict[str, np.ndarray], p, pre: str, cfg,
+                     fuse: bool) -> None:
+    up = _dense_w(p["w_in"], pre + "up")
+    down = _dense_w(p["w_out"], pre + "down")
+    if cfg.act == "swiglu":
+        gate = _dense_w(p["w_gate"], pre + "gate")
+        if fuse:
+            out[pre + "gate_up_proj.weight"] = fuse_gate_up(gate, up)
+        else:
+            out[pre + "gate_proj.weight"] = gate
+            out[pre + "up_proj.weight"] = up
+    else:
+        out[pre + "up_proj.weight"] = up
+    out[pre + "down_proj.weight"] = down
+
+
+def _export_slot(out: Dict[str, np.ndarray], lp, slot, i: int, cfg, *,
+                 fuse_qkv_: bool, fuse_gate_up_: bool) -> None:
+    out[f"model.layers.{i}.input_layernorm.weight"] = (
+        _np32(lp["norm1"]["gamma"]) + 1.0)
+    if slot.mixer in ("attn", "attn_local"):
+        pre = f"model.layers.{i}.self_attn."
+        q = _dense_w(lp["mixer"]["wq"], pre + "wq")
+        k = _dense_w(lp["mixer"]["wk"], pre + "wk")
+        v = _dense_w(lp["mixer"]["wv"], pre + "wv")
+        if fuse_qkv_:
+            out[pre + "qkv_proj.weight"] = fuse_qkv(q, k, v, cfg)
+        else:
+            out[pre + "q_proj.weight"] = q
+            out[pre + "k_proj.weight"] = k
+            out[pre + "v_proj.weight"] = v
+        out[pre + "o_proj.weight"] = _dense_w(lp["mixer"]["wo"], pre + "wo")
+    else:
+        m = lp["mixer"]["mamba"]
+        pre = f"model.layers.{i}.mamba."
+        out[pre + "in_proj.weight"] = fuse_in_proj(
+            _dense_w(m["wz"], pre + "wz"), _dense_w(m["wx"], pre + "wx"),
+            np.ascontiguousarray(_np32(m["wB"]).T),
+            np.ascontiguousarray(_np32(m["wC"]).T),
+            np.ascontiguousarray(_np32(m["wdt"]).T))
+        out[pre + "conv1d.weight"] = np.ascontiguousarray(
+            _np32(m["conv_w"]).T)[:, None, :]
+        out[pre + "A_log"] = _np32(m["A_log"])
+        out[pre + "D"] = _np32(m["D"])
+        out[pre + "dt_bias"] = _np32(m["dt_bias"])
+        out[pre + "out_proj.weight"] = _dense_w(m["w_out"], pre + "w_out")
+    if slot.ffn == "none":
+        return
+    out[f"model.layers.{i}.post_attention_layernorm.weight"] = (
+        _np32(lp["norm2"]["gamma"]) + 1.0)
+    if slot.ffn == "moe":
+        pre = f"model.layers.{i}.moe."
+        out[pre + "router.weight"] = np.ascontiguousarray(
+            _np32(lp["ffn"]["router"]).T)
+        import jax
+        for e in range(cfg.num_experts):
+            ep = jax.tree.map(lambda a: a[e],
+                              {k: v for k, v in lp["ffn"].items()
+                               if k != "router"})
+            _export_mlp_mats(out, ep, f"{pre}experts.{e}.", cfg,
+                             fuse_gate_up_)
+    elif slot.ffn == "mlp":
+        _export_mlp_mats(out, lp["ffn"], f"model.layers.{i}.mlp.", cfg,
+                         fuse_gate_up_)
+
+
+def export_hf(params: Dict[str, Any], cfg, *, fuse_qkv: bool = False,
+              fuse_gate_up: bool = False) -> Dict[str, np.ndarray]:
+    """Repo dense param tree -> external HF-style state dict (fp32).
+
+    Exact inverse of :func:`convert_hf` (property-tested bit-exact for
+    trees whose float values are representable in fp32 — bf16 always
+    is).  ``fuse_qkv`` / ``fuse_gate_up`` emit the fused-tensor
+    spellings so the split rules get exercised on import.
+    """
+    import jax
+
+    from repro.models.transformer import build_layout
+
+    out: Dict[str, np.ndarray] = {}
+    if cfg.frontend == "audio_frames":
+        out["model.frame_proj.weight"] = _np32(params["frame_proj"])
+    else:
+        out["model.embed_tokens.weight"] = _np32(params["embed"])
+    if not cfg.tie_embeddings:
+        out["lm_head.weight"] = np.ascontiguousarray(
+            _np32(params["unembed"]).T)
+    out["model.norm.weight"] = _np32(params["final_norm"]["gamma"]) + 1.0
+
+    layout = build_layout(cfg)
+    imap = _index_map(cfg)
+    for si, stage in enumerate(layout):
+        for j, slot in enumerate(stage.slots):
+            sp = params["stages"][si][f"slot{j}"]
+            for c in range(stage.count):
+                for r in range(slot.repeat):
+                    lp = jax.tree.map(lambda a: a[c][r], sp)
+                    _export_slot(out, lp, slot, imap[(si, j)][c][r], cfg,
+                                 fuse_qkv_=fuse_qkv,
+                                 fuse_gate_up_=fuse_gate_up)
+    return out

@@ -1,4 +1,6 @@
-"""Fault-tolerant checkpoint store (no external deps).
+"""Fault-tolerant checkpoint store + servable conversion artifacts.
+
+Training checkpoints:
 
 - params/opt-state/data-cursor serialized as flattened npz + a JSON
   manifest carrying the treedef, step, and mesh metadata.
@@ -9,6 +11,18 @@
   ``restore`` can place them onto ANY mesh (different DP/TP than the run
   that saved them) by passing target shardings.
 - async mode: the save runs on a background thread (training continues).
+- **integrity**: the manifest records a per-tensor crc32 over the stored
+  bytes; a flipped byte fails the restore loudly.
+
+Conversion artifacts (``save_artifact`` / ``load_artifact``): the output
+of the offline prune -> compress -> quantize -> calibrate pipeline
+(``python -m repro.launch.convert``).  Unlike a training checkpoint, an
+artifact is **self-describing**: a versioned ``manifest.json`` carries
+the model config recipe, the full ``ServingSpec`` dict (the same schema
+as the audit budget manifests, so ``repro.analysis.budget``'s
+``config_from_manifest``/``spec_from_manifest``/``compare`` work on it
+directly), per-linear-site layout/sparsity/dtype/scale records, and
+per-tensor checksums -- and it loads without a template tree.
 """
 
 from __future__ import annotations
@@ -17,13 +31,21 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 _SEP = "###"
+
+ARTIFACT_VERSION = 1
+ARTIFACT_FORMAT = "repro-artifact"
+
+
+class ArtifactError(RuntimeError):
+    """An artifact (or checkpoint) failed validation at load time."""
 
 
 def _flatten(tree) -> dict:
@@ -32,6 +54,27 @@ def _flatten(tree) -> dict:
         key = jax.tree_util.keystr(path)
         flat[key] = np.asarray(leaf)
     return flat
+
+
+def _encode(v: np.ndarray) -> Tuple[np.ndarray, str]:
+    """npz can't serialize ml_dtypes (bfloat16, fp8, int4 ...): store a
+    same-width integer view + the true dtype string."""
+    true_dt = str(v.dtype)
+    if v.dtype.kind not in "fiub" or true_dt == "bfloat16":
+        v = v.view(np.dtype(f"u{v.dtype.itemsize}"))
+    return v, true_dt
+
+
+def _decode(arr: np.ndarray, true_dt: Optional[str]) -> np.ndarray:
+    if true_dt and str(arr.dtype) != true_dt:
+        import ml_dtypes  # jax dependency; provides bfloat16 et al.
+
+        arr = arr.view(np.dtype(getattr(ml_dtypes, true_dt, true_dt)))
+    return arr
+
+
+def _crc(v: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(v).tobytes())
 
 
 def save(
@@ -55,21 +98,18 @@ def save(
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir()
-        # npz can't serialize ml_dtypes (bfloat16 etc.): store a same-width
-        # integer view + the true dtype in the manifest
-        arrays, dtypes = {}, {}
+        arrays, dtypes, checksums = {}, {}, {}
         for k, v in flat.items():
             kk = k.replace("/", _SEP)
-            dtypes[kk] = str(v.dtype)
-            if v.dtype.kind not in "fiub" or str(v.dtype) == "bfloat16":
-                v = v.view(np.dtype(f"u{v.dtype.itemsize}"))
-            arrays[kk] = v
+            arrays[kk], dtypes[kk] = _encode(v)
+            checksums[kk] = _crc(arrays[kk])
         np.savez(tmp / "arrays.npz", **arrays)
         manifest = {
             "step": step,
             "treedef": str(treedef),
             "keys": list(flat.keys()),
             "dtypes": dtypes,
+            "checksums": checksums,
             "extra": extra or {},
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -116,17 +156,19 @@ def restore(
     manifest = json.loads((d / "manifest.json").read_text())
     arrays = np.load(d / "arrays.npz")
     dtypes = manifest.get("dtypes", {})
+    # absent on checkpoints written before integrity checking existed
+    checksums = manifest.get("checksums", {})
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     flat_sh = jax.tree_util.tree_leaves(shardings) if shardings is not None else None
     for i, (path, leaf) in enumerate(paths):
         key = jax.tree_util.keystr(path).replace("/", _SEP)
         arr = arrays[key]
-        true_dt = dtypes.get(key)
-        if true_dt and str(arr.dtype) != true_dt:
-            import ml_dtypes  # jax dependency; provides bfloat16 et al.
-
-            arr = arr.view(np.dtype(getattr(ml_dtypes, true_dt, true_dt)))
+        if key in checksums and _crc(arr) != checksums[key]:
+            raise ArtifactError(
+                f"checkpoint tensor {key!r} is corrupted: stored bytes do "
+                f"not match the manifest checksum")
+        arr = _decode(arr, dtypes.get(key))
         assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         if flat_sh is not None:
             leaves.append(jax.device_put(arr, flat_sh[i]))
@@ -136,3 +178,279 @@ def restore(
         jax.tree_util.tree_structure(template), leaves
     )
     return tree, manifest.get("extra", {})
+
+
+# ---------------------------------------------------------------------------
+# conversion artifacts: versioned, self-describing, template-free
+# ---------------------------------------------------------------------------
+
+_PSEP = "::"           # artifact tree-path separator
+_IDX = "#"             # list-index marker within a path component
+
+ARTIFACT_MANIFEST = "manifest.json"
+ARTIFACT_ARRAYS = "arrays.npz"
+
+
+def _flatten_named(tree, prefix: str = "") -> Dict[str, np.ndarray]:
+    """Flatten a dict/list tree of arrays into ``a::b::#2::w`` keys that
+    rebuild the exact structure WITHOUT a template tree."""
+    flat: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            if _PSEP in k or k.startswith(_IDX):
+                raise ArtifactError(f"tree key {k!r} collides with the "
+                                    f"artifact path encoding")
+            flat.update(_flatten_named(tree[k], f"{prefix}{k}{_PSEP}"))
+        return flat
+    if isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            flat.update(_flatten_named(v, f"{prefix}{_IDX}{i}{_PSEP}"))
+        return flat
+    flat[prefix[:-len(_PSEP)]] = np.asarray(tree)
+    return flat
+
+
+def _unflatten_named(flat: Dict[str, np.ndarray]) -> Any:
+    root: Dict[str, Any] = {}
+    for key in sorted(flat):
+        parts = key.split(_PSEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = flat[key]
+
+    def _fix(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.startswith(_IDX) for k in node):
+            idx = sorted(int(k[len(_IDX):]) for k in node)
+            if idx != list(range(len(node))):
+                raise ArtifactError(f"artifact list indices {idx} are not "
+                                    f"contiguous — truncated artifact?")
+            return [_fix(node[f"{_IDX}{i}"]) for i in idx]
+        return {k: _fix(v) for k, v in node.items()}
+
+    return _fix(root)
+
+
+def _leaf_record(path: str, leaf: Dict[str, Any],
+                 sparsity: str) -> Dict[str, Any]:
+    """Manifest row for one SparseLinear leaf: layout, sparsity pattern,
+    storage dtype, value shape, scale/act_scale presence."""
+    if "meta_packed" in leaf:
+        layout, val = "compressed", leaf["values"]
+    elif "gather_idx" in leaf:
+        layout, val = "gather", leaf["values"]
+    else:
+        layout, val = "dense", leaf["w"]
+    rec = {
+        "path": path,
+        "layout": layout,
+        "sparsity": sparsity if layout != "dense" else "dense",
+        "dtype": str(np.asarray(val).dtype) if hasattr(val, "dtype")
+        else str(val.dtype),
+        "shape": list(val.shape),
+        "scale": list(leaf["scale"].shape) if "scale" in leaf else None,
+        "act_scale": float(np.asarray(leaf["act_scale"]).reshape(-1)[0])
+        if "act_scale" in leaf else None,
+    }
+    return rec
+
+
+def _iter_linear_sites(tree, path: str = ""):
+    """Yield (path, record-ready node) for every linear site, mirroring
+    ``core.quantize.map_linear_leaves``' structural traversal."""
+    from repro.core.quantize import is_linear_leaf
+
+    if isinstance(tree, dict):
+        if "rowwise" in tree:
+            yield path, tree
+            return
+        if is_linear_leaf(tree):
+            yield path, tree
+            return
+        for k in sorted(tree):
+            yield from _iter_linear_sites(tree[k], f"{path}{_PSEP}{k}"
+                                          if path else k)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _iter_linear_sites(v, f"{path}{_PSEP}{_IDX}{i}"
+                                          if path else f"{_IDX}{i}")
+
+
+def _layer_records(params, sparsity: str) -> List[Dict[str, Any]]:
+    records = []
+    for path, node in _iter_linear_sites(params):
+        if isinstance(node, dict) and "rowwise" in node:
+            for tier in sorted(node["rowwise"]):
+                rec = _leaf_record(f"{path}{_PSEP}rowwise{_PSEP}{tier}",
+                                   node["rowwise"][tier],
+                                   f"{tier[1:]}:{sparsity.split(':')[-1]}"
+                                   if ":" in sparsity else sparsity)
+                rec["layout"] = "rowwise"
+                records.append(rec)
+        else:
+            records.append(_leaf_record(path, node, sparsity))
+    return records
+
+
+def _sparsity_str(spec) -> str:
+    sp = getattr(spec, "sparsity", None)
+    return f"{sp[0]}:{sp[1]}" if sp else "dense"
+
+
+def _spec_dict(spec) -> Dict[str, Any]:
+    import dataclasses as _dc
+
+    def _clean(v):
+        if isinstance(v, tuple):
+            return [_clean(x) for x in v]
+        if isinstance(v, (list, dict)):
+            t = type(v)((k, _clean(x)) for k, x in v.items()) \
+                if isinstance(v, dict) else [_clean(x) for x in v]
+            return t
+        return v
+
+    return {k: _clean(v) for k, v in _dc.asdict(spec).items()}
+
+
+def save_artifact(out_dir, params, *, spec, config: Dict[str, Any],
+                  source: Optional[Dict[str, Any]] = None) -> Path:
+    """Freeze a converted+prepared param tree as a servable artifact.
+
+    ``spec`` is the ServingSpec the offline pipeline ran under;
+    ``config`` is the reproducible config recipe ``{"arch", "smoke",
+    "overrides"}`` (the same shape ``repro.analysis.budget.
+    config_from_manifest`` consumes).  Atomic: tmp dir + os.rename.
+    """
+    out_dir = Path(out_dir)
+    out_dir.parent.mkdir(parents=True, exist_ok=True)
+    tmp = out_dir.parent / f".tmp-{out_dir.name}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    flat = {k: np.asarray(jax.device_get(v))
+            for k, v in _flatten_named(params).items()}
+    arrays, tensors = {}, {}
+    for k, v in flat.items():
+        enc, true_dt = _encode(v)
+        arrays[k] = enc
+        tensors[k] = {"dtype": true_dt, "shape": list(v.shape),
+                      "crc32": _crc(enc)}
+    np.savez(tmp / ARTIFACT_ARRAYS, **arrays)
+    manifest = {
+        "artifact_version": ARTIFACT_VERSION,
+        "format": ARTIFACT_FORMAT,
+        "config": dict(config),
+        "spec": _spec_dict(spec),
+        "source": source or {},
+        "layers": _layer_records(params, _sparsity_str(spec)),
+        "tensors": {k: tensors[k] for k in sorted(tensors)},
+    }
+    (tmp / ARTIFACT_MANIFEST).write_text(
+        json.dumps(manifest, indent=2, sort_keys=True) + "\n")
+    if out_dir.exists():
+        shutil.rmtree(out_dir)
+    os.rename(tmp, out_dir)
+    return out_dir
+
+
+def artifact_manifest(path) -> Dict[str, Any]:
+    """Read + validate (version only) an artifact's manifest."""
+    path = Path(path)
+    mf = path / ARTIFACT_MANIFEST
+    if not mf.exists():
+        raise ArtifactError(f"{path} is not an artifact: no "
+                            f"{ARTIFACT_MANIFEST}")
+    try:
+        manifest = json.loads(mf.read_text())
+    except json.JSONDecodeError as e:
+        raise ArtifactError(f"artifact manifest {mf} is corrupted "
+                            f"(invalid JSON: {e})") from e
+    if "artifact_version" not in manifest:
+        raise ArtifactError(
+            f"artifact manifest {mf} has no 'artifact_version' field — "
+            f"not a conversion artifact, or written by a broken tool")
+    v = manifest["artifact_version"]
+    if v != ARTIFACT_VERSION:
+        raise ArtifactError(
+            f"artifact {path} has version {v}; this build reads only "
+            f"version {ARTIFACT_VERSION} — re-run "
+            f"`python -m repro.launch.convert` with this build")
+    return manifest
+
+
+def load_artifact(path):
+    """Load a conversion artifact -> ``(params, manifest)``.
+
+    Fails LOUDLY (``ArtifactError``) on: missing/invalid manifest,
+    missing version field, unknown version, unreadable/corrupted npz,
+    tensors missing vs the manifest (truncated write), stray extra
+    tensors, or any per-tensor crc32 mismatch (bit rot / flipped byte).
+    """
+    path = Path(path)
+    manifest = artifact_manifest(path)
+    expected = manifest.get("tensors", {})
+    try:
+        with np.load(path / ARTIFACT_ARRAYS, allow_pickle=False) as z:
+            stored = {k: z[k] for k in z.files}
+    except Exception as e:  # zipfile/OSError/ValueError — all mean corrupt
+        raise ArtifactError(
+            f"artifact arrays {path / ARTIFACT_ARRAYS} are unreadable "
+            f"({type(e).__name__}: {e}) — corrupted or truncated") from e
+    missing = sorted(set(expected) - set(stored))
+    if missing:
+        raise ArtifactError(
+            f"artifact {path} is truncated: manifest lists tensors the "
+            f"arrays file lacks: {missing[:5]}{'...' if len(missing) > 5 else ''}")
+    extra = sorted(set(stored) - set(expected))
+    if extra:
+        raise ArtifactError(
+            f"artifact {path} carries tensors the manifest does not "
+            f"record: {extra[:5]}{'...' if len(extra) > 5 else ''}")
+    flat = {}
+    for k, rec in expected.items():
+        arr = stored[k]
+        if _crc(arr) != rec["crc32"]:
+            raise ArtifactError(
+                f"artifact tensor {k!r} is corrupted: stored bytes do not "
+                f"match the manifest crc32")
+        arr = _decode(arr, rec.get("dtype"))
+        if list(arr.shape) != rec["shape"]:
+            raise ArtifactError(
+                f"artifact tensor {k!r} has shape {list(arr.shape)}, "
+                f"manifest says {rec['shape']}")
+        flat[k] = jax.numpy.asarray(arr)
+    return _unflatten_named(flat), manifest
+
+
+def manifest_diff(a: Dict[str, Any], b: Dict[str, Any],
+                  *, names=("a", "b")) -> List[str]:
+    """Stable, sorted, human-readable diff of two artifact manifests.
+
+    Deterministic: equal manifests diff to ``[]``, and the same pair
+    always produces the same lines in the same order.
+    """
+    def _flat(d, prefix=""):
+        out = {}
+        if isinstance(d, dict):
+            for k in sorted(d):
+                out.update(_flat(d[k], f"{prefix}.{k}" if prefix else str(k)))
+        elif isinstance(d, list):
+            for i, v in enumerate(d):
+                out.update(_flat(v, f"{prefix}[{i}]"))
+        else:
+            out[prefix] = d
+        return out
+
+    fa, fb = _flat(a), _flat(b)
+    lines = []
+    for k in sorted(set(fa) | set(fb)):
+        if k not in fb:
+            lines.append(f"- {k} = {fa[k]!r} (only in {names[0]})")
+        elif k not in fa:
+            lines.append(f"+ {k} = {fb[k]!r} (only in {names[1]})")
+        elif fa[k] != fb[k]:
+            lines.append(f"~ {k}: {fa[k]!r} -> {fb[k]!r}")
+    return lines

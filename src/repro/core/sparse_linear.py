@@ -305,6 +305,18 @@ def convert_layout(
     w = params["w"]
     if not cfg.is_sparse or target_mode == "dense":
         return _q({"w": w})
+    if w.ndim > 2:
+        # stacked-layer / stacked-expert dense leaves (checkpoint import
+        # produces these): convert each trailing (K, O) matrix exactly as
+        # the init path does per layer, then restore the leading dims —
+        # scales and metadata come out identical to per-layer conversion
+        import math
+        lead = w.shape[:-2]
+        wf = w.reshape((-1,) + w.shape[-2:])
+        mats = [convert_layout({"w": wf[i]}, cfg, target_mode, quantize)
+                for i in range(math.prod(lead))]
+        return jax.tree.map(
+            lambda *xs: jnp.stack(xs).reshape(lead + xs[0].shape), *mats)
     pruned, _ = nm.prune_nm(w, cfg.n, cfg.m)
     if target_mode == "compressed":
         c = nm.compress_nm(pruned, cfg.n, cfg.m)

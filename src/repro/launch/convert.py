@@ -1,0 +1,233 @@
+"""Offline checkpoint conversion CLI: external weights -> servable artifact.
+
+Convert an external HF-style checkpoint directory (``model.npz``,
+HF-sharded ``model-XXXXX-of-XXXXX.npz`` + index, or ``tp-rank-*``
+subdirectories) through the offline pipeline — import mapping ->
+prune -> N:M/rowwise compress -> quantize -> calibrate — and freeze the
+result as a versioned artifact ``repro.serving.prepare_from_artifact``
+(or ``launch/serve.py --artifact``) can stand up directly::
+
+    python -m repro.launch.convert --input /ckpts/hf_tiny \
+        --output /artifacts/tiny_2_4_int8 --arch internlm2_1_8b --smoke \
+        --mode compressed --sparsity 2:4 --quantize int8
+
+Artifact tooling on the emitted directory::
+
+    python -m repro.launch.convert --inspect /artifacts/tiny_2_4_int8
+    python -m repro.launch.convert --explain /artifacts/tiny_2_4_int8 \
+        --budget experiments/audit/converted.json     # the CI smoke step
+    python -m repro.launch.convert --diff ART_A ART_B
+
+``--explain`` runs the weight-free plan audit from the artifact's own
+manifest recipe and (with ``--budget``) diffs it against a committed
+fallback-budget manifest, exiting 1 on any overshoot unless
+``AUDIT_OVERRIDE`` is set — a converted checkpoint's fallback surface
+is gated exactly like any config.
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import sys
+from pathlib import Path
+
+
+def _parse_sparsity(s):
+    if s is None:
+        return None
+    n, m = s.split(":")
+    return int(n), int(m)
+
+
+def _override_active() -> bool:
+    return bool(os.environ.get("AUDIT_OVERRIDE", "").strip())
+
+
+def _summarize_layers(manifest) -> list:
+    by = collections.Counter(
+        (r["layout"], r["sparsity"], r["dtype"]) for r in manifest["layers"])
+    lines = []
+    for (layout, sparsity, dtype), n in sorted(by.items()):
+        lines.append(f"  {n:4d} site(s)  layout={layout} "
+                     f"sparsity={sparsity} dtype={dtype}")
+    calibrated = sum(1 for r in manifest["layers"]
+                     if r.get("act_scale") is not None)
+    if calibrated:
+        lines.append(f"  {calibrated:4d} site(s) carry calibrated static "
+                     f"activation scales")
+    return lines
+
+
+def _do_convert(args) -> int:
+    import jax
+
+    from repro import serving
+    from repro.checkpoint import (convert_hf, load_hf_checkpoint,
+                                  save_artifact, validate_hf_config)
+    from repro.configs import get_config, get_smoke_config
+
+    spec = serving.ServingSpec(
+        layout=args.mode, sparsity=_parse_sparsity(args.sparsity),
+        qdtype=args.quantize, static_scales=args.static_scales,
+        kv_qdtype=args.kv_quantize, slots=args.slots,
+        max_len=args.max_len, block_len=args.block_len,
+        prefill_chunk=args.prefill_chunk)
+    base_cfg = (get_smoke_config(args.arch) if args.smoke
+                else get_config(args.arch))
+
+    cfg_json = Path(args.input) / "config.json"
+    if cfg_json.exists():
+        import json
+        validate_hf_config(base_cfg, json.loads(cfg_json.read_text()))
+
+    state = load_hf_checkpoint(args.input, cfg=base_cfg)
+    print(f"loaded {len(state)} tensor(s) from {args.input}")
+    cfg = spec.apply_to(base_cfg)
+    params = convert_hf(state, cfg)
+
+    calib_tokens = None
+    if args.static_scales:
+        # deterministic synthetic calibration batch: the offline pipeline
+        # must be reproducible from the artifact manifest alone
+        calib_tokens = jax.random.randint(
+            jax.random.PRNGKey(2),
+            (spec.slots, min(args.calib_len, spec.max_len)),
+            1, cfg.vocab_size)
+    prepared = serving.prepare(params, spec, cfg=cfg,
+                               calib_tokens=calib_tokens)
+
+    out = save_artifact(
+        args.output, prepared.params, spec=spec,
+        config={"arch": args.arch, "smoke": bool(args.smoke),
+                "overrides": {}},
+        source={"input": str(args.input), "tensors": len(state),
+                "calibrated_sites": prepared.calibrated_sites})
+    from repro.checkpoint import artifact_manifest
+    manifest = artifact_manifest(out)
+    nbytes = sum(x.size * x.dtype.itemsize
+                 for x in jax.tree.leaves(prepared.params))
+    print(f"wrote artifact {out} ({nbytes / 1e6:.1f} MB weights, "
+          f"version {manifest['artifact_version']})")
+    for line in _summarize_layers(manifest):
+        print(line)
+    return 0
+
+
+def _do_inspect(args) -> int:
+    from repro.checkpoint import artifact_manifest
+
+    manifest = artifact_manifest(args.inspect)
+    mc, spec = manifest["config"], manifest["spec"]
+    print(f"artifact {args.inspect}")
+    print(f"  version {manifest['artifact_version']} "
+          f"({manifest.get('format', '?')})")
+    print(f"  config  {mc['arch']}{' [smoke]' if mc.get('smoke') else ''}"
+          f"{' ' + str(mc['overrides']) if mc.get('overrides') else ''}")
+    print(f"  spec    layout={spec['layout']} sparsity={spec['sparsity']} "
+          f"qdtype={spec['qdtype']} static_scales={spec['static_scales']} "
+          f"kv_qdtype={spec['kv_qdtype']}")
+    src = manifest.get("source") or {}
+    if src:
+        print(f"  source  {src}")
+    print(f"  {len(manifest['tensors'])} tensor(s), "
+          f"{len(manifest['layers'])} linear site record(s):")
+    for line in _summarize_layers(manifest):
+        print(line)
+    return 0
+
+
+def _do_explain(args) -> int:
+    from repro.analysis import audit_artifact
+    from repro.checkpoint import artifact_manifest
+
+    audit = audit_artifact(args.explain, backend=args.backend)
+    print("\n".join(audit.summary_lines()))
+    failed = bool(audit.severity_counts()["ERROR"])
+    if args.budget:
+        from repro.analysis import compare, load_manifest
+
+        diff = compare(audit, load_manifest(args.budget), name=args.budget)
+        print("\n".join(diff.lines()))
+        failed = failed or not diff.ok
+        # the artifact was converted under the same recipe the budget froze?
+        art_cfg = artifact_manifest(args.explain)["config"]
+        bud_cfg = load_manifest(args.budget).get("config", {})
+        if art_cfg != bud_cfg:
+            print(f"  note artifact config {art_cfg} != budget config "
+                  f"{bud_cfg}")
+    if failed and _override_active():
+        print("AUDIT_OVERRIDE set: failures reported but not enforced")
+        return 0
+    return 1 if failed else 0
+
+
+def _do_diff(args) -> int:
+    from repro.checkpoint import artifact_manifest, manifest_diff
+
+    a, b = args.diff
+    lines = manifest_diff(artifact_manifest(a), artifact_manifest(b),
+                          names=(a, b))
+    if not lines:
+        print(f"artifacts {a} and {b} have identical manifests")
+        return 0
+    print("\n".join(lines))
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.convert",
+        description="Offline checkpoint conversion: external HF-style "
+                    "weights -> servable artifact")
+    ap.add_argument("--input", default=None, metavar="CKPT_DIR",
+                    help="external checkpoint directory (model.npz, "
+                         "HF-sharded npz + index, or tp-rank-* subdirs)")
+    ap.add_argument("--output", default=None, metavar="ARTIFACT_DIR")
+    ap.add_argument("--arch", "--config", dest="arch", default=None,
+                    help="target arch id under repro.configs")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", "--layout", dest="mode", default="compressed",
+                    choices=["dense", "compressed", "gather", "rowwise"])
+    ap.add_argument("--sparsity", default=None, metavar="N:M")
+    ap.add_argument("--quantize", default=None, choices=["int8", "fp8"])
+    ap.add_argument("--static-scales", action="store_true")
+    ap.add_argument("--kv-quantize", default=None, choices=["int8", "fp8"])
+    ap.add_argument("--calib-len", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--block-len", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--inspect", default=None, metavar="ARTIFACT",
+                    help="print an artifact's manifest summary")
+    ap.add_argument("--explain", default=None, metavar="ARTIFACT",
+                    help="weight-free plan audit from the artifact's "
+                         "manifest recipe")
+    ap.add_argument("--budget", default=None, metavar="MANIFEST",
+                    help="with --explain: diff against a committed "
+                         "fallback-budget manifest (CI gate)")
+    ap.add_argument("--backend", default="tpu",
+                    choices=["tpu", "interpret", "jnp"])
+    ap.add_argument("--diff", nargs=2, default=None,
+                    metavar=("ART_A", "ART_B"),
+                    help="stable manifest diff of two artifacts "
+                         "(exit 1 when they differ)")
+    args = ap.parse_args(argv)
+
+    if args.inspect:
+        return _do_inspect(args)
+    if args.explain:
+        return _do_explain(args)
+    if args.diff:
+        return _do_diff(args)
+    if not (args.input and args.output and args.arch):
+        ap.error("conversion needs --input, --output, and --arch "
+                 "(or use --inspect/--explain/--diff)")
+    if args.static_scales and not args.quantize:
+        ap.error("--static-scales requires --quantize int8|fp8")
+    return _do_convert(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

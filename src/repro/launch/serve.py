@@ -37,7 +37,14 @@ import argparse
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--artifact", default=None, metavar="ARTIFACT_DIR",
+                    help="serve a converted checkpoint artifact "
+                         "(python -m repro.launch.convert) instead of "
+                         "random init; the artifact manifest supplies the "
+                         "config and ServingSpec — layout/quantize flags "
+                         "are ignored, --kernel-backend/--autotune/--mesh "
+                         "still override")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sparsity", default=None)
     ap.add_argument("--mode", default="compressed",
@@ -91,6 +98,9 @@ def main():
     args = ap.parse_args()
     if args.static_scales and not args.quantize:
         ap.error("--static-scales requires --quantize int8|fp8")
+    if not args.arch and not args.artifact:
+        ap.error("need --arch (random init) or --artifact (converted "
+                 "checkpoint)")
 
     import jax
 
@@ -98,52 +108,73 @@ def main():
     from repro.configs import get_config, get_smoke_config
     from repro.models import init_params
 
-    sparsity = None
-    if args.sparsity:
-        n, m = map(int, args.sparsity.split(":"))
-        sparsity = (n, m)
     mesh = None
     if args.mesh:
         d_, m_ = map(int, args.mesh.lower().split("x"))
         mesh = (d_, m_)
-    spec = serving.ServingSpec(
-        layout=args.mode, sparsity=sparsity, qdtype=args.quantize,
-        static_scales=args.static_scales, mesh=mesh,
-        backend=args.kernel_backend, autotune=args.autotune,
-        slots=args.batch, max_len=args.max_len, block_len=args.block_len,
-        kv_blocks=args.kv_blocks, kv_qdtype=args.kv_quantize,
-        admission=args.admission, prefill_chunk=args.prefill_chunk)
 
-    base_cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.explain:
-        # static plan audit: what will the engine run for these flags,
-        # and why does anything fall off the kernel tier — no weights,
-        # no serving loop (see python -m repro.launch.audit)
-        from repro.analysis import audit_model
+    if args.artifact:
         backend = (args.kernel_backend if args.kernel_backend != "auto"
-                   else "tpu")
-        audit = audit_model(base_cfg, spec, backend=backend, arch=args.arch)
-        print("\n".join(audit.summary_lines()))
-        return
+                   else None)
+        if args.explain:
+            from repro.analysis import audit_artifact
+            audit = audit_artifact(args.artifact, backend=backend or "tpu")
+            print("\n".join(audit.summary_lines()))
+            return
+        prepared = serving.prepare_from_artifact(
+            args.artifact, backend=backend,
+            autotune=args.autotune or None, mesh=mesh)
+        spec, cfg = prepared.spec, prepared.cfg
+        mesh = spec.mesh
+        print(f"artifact {args.artifact}: config {cfg.name}, spec "
+              f"{spec.layout}/{spec.sparsity}/{spec.qdtype}")
+    else:
+        sparsity = None
+        if args.sparsity:
+            n, m = map(int, args.sparsity.split(":"))
+            sparsity = (n, m)
+        spec = serving.ServingSpec(
+            layout=args.mode, sparsity=sparsity, qdtype=args.quantize,
+            static_scales=args.static_scales, mesh=mesh,
+            backend=args.kernel_backend, autotune=args.autotune,
+            slots=args.batch, max_len=args.max_len, block_len=args.block_len,
+            kv_blocks=args.kv_blocks, kv_qdtype=args.kv_quantize,
+            admission=args.admission, prefill_chunk=args.prefill_chunk)
 
-    cfg = spec.apply_to(base_cfg)
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    calib_tokens = None
-    if args.static_scales:
-        calib_tokens = jax.random.randint(
-            jax.random.PRNGKey(2), (args.batch, min(args.max_len, 32)),
-            1, cfg.vocab_size)
-    prepared = serving.prepare(params, spec, cfg=cfg,
-                               calib_tokens=calib_tokens)
+        base_cfg = (get_smoke_config(args.arch) if args.smoke
+                    else get_config(args.arch))
+        if args.explain:
+            # static plan audit: what will the engine run for these flags,
+            # and why does anything fall off the kernel tier — no weights,
+            # no serving loop (see python -m repro.launch.audit)
+            from repro.analysis import audit_model
+            backend = (args.kernel_backend if args.kernel_backend != "auto"
+                       else "tpu")
+            audit = audit_model(base_cfg, spec, backend=backend,
+                                arch=args.arch)
+            print("\n".join(audit.summary_lines()))
+            return
+
+        cfg = spec.apply_to(base_cfg)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        calib_tokens = None
+        if args.static_scales:
+            calib_tokens = jax.random.randint(
+                jax.random.PRNGKey(2), (args.batch, min(args.max_len, 32)),
+                1, cfg.vocab_size)
+        prepared = serving.prepare(params, spec, cfg=cfg,
+                                   calib_tokens=calib_tokens)
     if prepared.calibrated_sites:
         print(f"static activation scales calibrated for "
               f"{prepared.calibrated_sites} linear site(s) — decode skips "
               f"the per-row absmax pass")
     nbytes = sum(x.size * x.dtype.itemsize
                  for x in jax.tree.leaves(prepared.params))
+    sp_str = (f"{spec.sparsity[0]}:{spec.sparsity[1]}" if spec.sparsity
+              else "dense")
     print(f"serving {cfg.name}: {nbytes/1e6:.1f} MB weights "
-          f"({args.sparsity or 'dense'}/{args.mode}"
-          f"{'/' + args.quantize if args.quantize else ''})")
+          f"({sp_str}/{spec.layout}"
+          f"{'/' + spec.qdtype if spec.qdtype else ''})")
     if mesh:
         print(f"mesh installed: data={mesh[0]} x model={mesh[1]} "
               f"({prepared.mesh.devices.size} devices)")
@@ -155,7 +186,7 @@ def main():
 
         # the decode loop is jitted (tracers only): tune eagerly up front
         with prepared.activate():
-            tuned = kdispatch.pretune(prepared.params, args.batch,
+            tuned = kdispatch.pretune(prepared.params, spec.slots,
                                       cfg.sparsity, prepared.dispatch)
         if tuned:
             store = kautotune.store_path(resolve_backend(args.kernel_backend))

@@ -28,7 +28,7 @@ admission/eviction policy.
 from .baseline import run_lockstep
 from .engine import Engine, RequestStats, ServingReport, percentile
 from .scheduler import PagedScheduler, Request
-from .spec import Prepared, ServingSpec, prepare
+from .spec import Prepared, ServingSpec, prepare, prepare_from_artifact
 from .traffic import make_poisson_trace
 
 __all__ = [
@@ -42,5 +42,6 @@ __all__ = [
     "make_poisson_trace",
     "percentile",
     "prepare",
+    "prepare_from_artifact",
     "run_lockstep",
 ]

@@ -221,14 +221,29 @@ def prepare(
 
     calibrated = 0
     if spec.static_scales:
-        if cfg is None or calib_tokens is None:
-            raise ValueError(
-                "static_scales needs cfg= and calib_tokens= at prepare() "
-                "time (one representative prefill batch)")
-        from repro.core.quantize import _calibrate_activation_scales
-        from repro.models import forward
-        params, calibrated = _calibrate_activation_scales(
-            params, lambda p: forward(p, cfg, tokens=calib_tokens))
+        # a tree loaded from a conversion artifact already carries its
+        # calibrated act_scale leaves — count them instead of demanding
+        # calibration data the offline pipeline already consumed
+        from repro.core.quantize import has_static_scales, is_quantized
+        need, have = [0], [0]
+
+        def _scan(leaf):
+            if is_quantized(leaf):
+                (have if has_static_scales(leaf) else need)[0] += 1
+            return leaf
+
+        map_linear_leaves(params, _scan)
+        if need[0] == 0 and have[0] > 0:
+            calibrated = have[0]
+        else:
+            if cfg is None or calib_tokens is None:
+                raise ValueError(
+                    "static_scales needs cfg= and calib_tokens= at prepare() "
+                    "time (one representative prefill batch)")
+            from repro.core.quantize import _calibrate_activation_scales
+            from repro.models import forward
+            params, calibrated = _calibrate_activation_scales(
+                params, lambda p: forward(p, cfg, tokens=calib_tokens))
 
     axis_env = mesh = None
     if spec.mesh is not None:
@@ -248,3 +263,42 @@ def prepare(
     return Prepared(params=params, spec=spec, cfg=cfg, sp_cfg=sp_cfg,
                     dispatch=dcfg, axis_env=axis_env, mesh=mesh,
                     calibrated_sites=calibrated)
+
+
+def prepare_from_artifact(
+    path,
+    *,
+    backend: Optional[str] = None,
+    autotune: Optional[bool] = None,
+    mesh: Optional[Tuple[int, int]] = None,
+    calib_tokens=None,
+) -> Prepared:
+    """Load a conversion artifact (``python -m repro.launch.convert``)
+    and stand it up for serving.
+
+    The artifact's manifest is the recipe: the model config rebuilds
+    from its ``config`` block, the :class:`ServingSpec` from its
+    ``spec`` block, and the params tree comes back already pruned /
+    compressed / quantized / calibrated — :func:`prepare` then runs as
+    an idempotent pass (converted leaves pass through; artifact-borne
+    ``act_scale`` leaves satisfy ``static_scales`` without calibration
+    data).  ``backend`` / ``autotune`` / ``mesh`` override the frozen
+    spec for the serving machine at hand.
+    """
+    from repro.analysis.budget import config_from_manifest, spec_from_manifest
+    from repro.checkpoint import load_artifact
+
+    params, manifest = load_artifact(path)
+    cfg = config_from_manifest(manifest)
+    spec = spec_from_manifest(manifest)
+    over: dict = {}
+    if backend is not None:
+        over["backend"] = backend
+    if autotune is not None:
+        over["autotune"] = autotune
+    if mesh is not None:
+        over["mesh"] = tuple(mesh)
+    if over:
+        spec = dataclasses.replace(spec, **over)
+    cfg = spec.apply_to(cfg)
+    return prepare(params, spec, cfg=cfg, calib_tokens=calib_tokens)

@@ -1,0 +1,43 @@
+"""Regenerate the committed synthetic HF-style checkpoint fixture.
+
+    PYTHONPATH=src python tests/fixtures/make_hf_fixture.py
+
+Deterministic: internlm2 smoke config, seed-0 ``init_params``, exported
+with the FUSED tensor spellings (``qkv_proj`` / ``gate_up_proj``) so the
+import path's split rules get exercised, written as a 2-shard HF-style
+indexed layout plus ``config.json``.  The golden transcript in
+``tests/fixtures/golden/`` is derived from this fixture — regenerate it
+too (``REPRO_UPDATE_GOLDEN=1 pytest tests/test_checkpoint_golden.py``)
+whenever this changes.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+FIXTURE_DIR = pathlib.Path(__file__).parent / "hf_tiny"
+ARCH = "internlm2_1_8b"
+SEED = 0
+
+
+def main() -> int:
+    import jax
+
+    from repro.checkpoint import export_hf, save_hf_checkpoint, write_hf_config
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+
+    cfg = get_smoke_config(ARCH)
+    params = init_params(jax.random.PRNGKey(SEED), cfg)
+    state = export_hf(params, cfg, fuse_qkv=True, fuse_gate_up=True)
+    save_hf_checkpoint(FIXTURE_DIR, state, shards=2)
+    write_hf_config(FIXTURE_DIR, cfg)
+    total = sum(v.nbytes for v in state.values())
+    print(f"wrote {len(state)} tensor(s) ({total / 1e3:.0f} kB) "
+          f"to {FIXTURE_DIR}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

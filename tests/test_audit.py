@@ -48,10 +48,12 @@ GOLDEN_CODES = {
     "fp8.json": {"kernel-tier", "autodiff"},
     "sharded_tp.json": {"kernel-tier", "no-shard-spec"},
     "spgemm_moe.json": {"kernel-tier", "activation-skip"},
+    # the conversion smoke's 2:4/int8 recipe (launch/convert.py --explain)
+    "converted.json": {"kernel-tier", "autodiff", "epilogue-fused"},
 }
 
 
-def test_manifest_set_is_the_expected_eight():
+def test_manifest_set_is_the_expected_nine():
     assert {p.name for p in MANIFESTS} == set(GOLDEN_CODES), MANIFESTS
 
 

@@ -1,0 +1,199 @@
+"""Manifest schema + integrity tests for the conversion-artifact store.
+
+The satellite guarantees: the version field is required, an
+unknown-version load raises a clear error, a corrupted or truncated
+artifact fails loudly (never silently), per-tensor checksums catch a
+flipped byte in BOTH the artifact store and the training checkpoint
+store, and ``manifest_diff`` is stable.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.checkpoint import (
+    ArtifactError,
+    artifact_manifest,
+    load_artifact,
+    manifest_diff,
+    restore,
+    save,
+    save_artifact,
+)
+from repro.checkpoint.store import ARTIFACT_ARRAYS, ARTIFACT_MANIFEST
+from repro.configs import get_smoke_config
+from repro.models import init_params
+
+ARCH = "internlm2_1_8b"
+
+
+@pytest.fixture(scope="module")
+def artifact(tmp_path_factory):
+    """One prepared 2:4/int8 artifact shared by the read-only tests."""
+    spec = serving.ServingSpec(layout="compressed", sparsity=(2, 4),
+                               qdtype="int8")
+    cfg = spec.apply_to(get_smoke_config(ARCH))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prepared = serving.prepare(params, spec, cfg=cfg)
+    out = tmp_path_factory.mktemp("art") / "tiny"
+    save_artifact(out, prepared.params, spec=spec,
+                  config={"arch": ARCH, "smoke": True, "overrides": {}},
+                  source={"input": "unit-test"})
+    return out, prepared
+
+
+def _copy_artifact(src, dst):
+    import shutil
+    shutil.copytree(src, dst)
+    return dst
+
+
+def _edit_manifest(path, fn):
+    mf = path / ARTIFACT_MANIFEST
+    manifest = json.loads(mf.read_text())
+    fn(manifest)
+    mf.write_text(json.dumps(manifest))
+
+
+class TestManifestSchema:
+    def test_roundtrip_and_layer_records(self, artifact):
+        out, prepared = artifact
+        params, manifest = load_artifact(out)
+        flat = jax.tree.leaves(jax.tree.map(
+            lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
+            prepared.params, params))
+        assert all(flat) and flat
+        assert manifest["config"] == {"arch": ARCH, "smoke": True,
+                                      "overrides": {}}
+        layers = manifest["layers"]
+        assert layers, "manifest must record per-linear-site layout rows"
+        for rec in layers:
+            assert rec["layout"] == "compressed"
+            assert rec["sparsity"] == "2:4"
+            assert rec["dtype"] == "int8"
+            assert rec["scale"] is not None      # per-channel scale shape
+        # every tensor row carries dtype/shape/crc32
+        for rec in manifest["tensors"].values():
+            assert set(rec) == {"dtype", "shape", "crc32"}
+
+    def test_version_field_required(self, artifact, tmp_path):
+        out = _copy_artifact(artifact[0], tmp_path / "nover")
+        _edit_manifest(out, lambda m: m.pop("artifact_version"))
+        with pytest.raises(ArtifactError, match="artifact_version"):
+            load_artifact(out)
+
+    def test_unknown_version_clear_error(self, artifact, tmp_path):
+        out = _copy_artifact(artifact[0], tmp_path / "v99")
+        _edit_manifest(out, lambda m: m.update(artifact_version=99))
+        with pytest.raises(ArtifactError,
+                           match="version 99.*reads only version"):
+            artifact_manifest(out)
+
+    def test_invalid_json_fails_loudly(self, artifact, tmp_path):
+        out = _copy_artifact(artifact[0], tmp_path / "badjson")
+        (out / ARTIFACT_MANIFEST).write_text("{not json")
+        with pytest.raises(ArtifactError, match="invalid JSON"):
+            load_artifact(out)
+
+    def test_not_an_artifact(self, tmp_path):
+        with pytest.raises(ArtifactError, match="not an artifact"):
+            load_artifact(tmp_path)
+
+
+class TestIntegrity:
+    def test_truncated_arrays_fail_loudly(self, artifact, tmp_path):
+        out = _copy_artifact(artifact[0], tmp_path / "trunc")
+        with np.load(out / ARTIFACT_ARRAYS) as z:
+            arrays = {k: z[k] for k in z.files}
+        dropped = sorted(arrays)[0]
+        del arrays[dropped]
+        np.savez(out / ARTIFACT_ARRAYS, **arrays)
+        with pytest.raises(ArtifactError, match="truncated"):
+            load_artifact(out)
+
+    def test_stray_extra_tensor_fails(self, artifact, tmp_path):
+        out = _copy_artifact(artifact[0], tmp_path / "extra")
+        with np.load(out / ARTIFACT_ARRAYS) as z:
+            arrays = {k: z[k] for k in z.files}
+        arrays["sneaky"] = np.zeros(3)
+        np.savez(out / ARTIFACT_ARRAYS, **arrays)
+        with pytest.raises(ArtifactError, match="manifest does not record"):
+            load_artifact(out)
+
+    def test_unreadable_npz_fails_loudly(self, artifact, tmp_path):
+        out = _copy_artifact(artifact[0], tmp_path / "garbage")
+        (out / ARTIFACT_ARRAYS).write_bytes(b"\x00" * 64)
+        with pytest.raises(ArtifactError, match="unreadable"):
+            load_artifact(out)
+
+    def test_flipped_byte_caught_by_checksum(self, artifact, tmp_path):
+        out = _copy_artifact(artifact[0], tmp_path / "flip")
+        with np.load(out / ARTIFACT_ARRAYS) as z:
+            arrays = {k: z[k].copy() for k in z.files}
+        victim = sorted(arrays)[-1]
+        flat = arrays[victim].reshape(-1).view(np.uint8)
+        flat[len(flat) // 2] ^= 0xFF
+        np.savez(out / ARTIFACT_ARRAYS, **arrays)
+        with pytest.raises(ArtifactError, match="corrupted"):
+            load_artifact(out)
+
+    def test_training_store_flipped_byte_regression(self, tmp_path):
+        # the original store had NO integrity checking: a flipped byte
+        # restored silently.  It must now fail loudly.
+        tree = {"a": np.arange(16, dtype=np.float32).reshape(4, 4),
+                "b": {"c": np.ones(8, dtype=np.float32)}}
+        save(tmp_path, 1, tree)
+        d = tmp_path / "step-0000000001"
+        arrays = dict(np.load(d / "arrays.npz"))
+        key = sorted(arrays)[0]
+        buf = arrays[key].copy()
+        buf.reshape(-1).view(np.uint8)[0] ^= 0xFF
+        arrays[key] = buf
+        np.savez(d / "arrays.npz", **arrays)
+        with pytest.raises(ArtifactError, match="corrupted"):
+            restore(tmp_path, 1, tree)
+
+    def test_training_store_clean_roundtrip(self, tmp_path):
+        tree = {"a": np.arange(6, dtype=np.float32),
+                "b": jax.numpy.ones((2, 3), jax.numpy.bfloat16)}
+        save(tmp_path, 3, tree, extra={"note": "ok"})
+        got, extra = restore(tmp_path, 3, tree)
+        assert extra == {"note": "ok"}
+        assert np.array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+        assert got["b"].dtype == jax.numpy.bfloat16
+
+
+class TestManifestDiff:
+    def test_equal_manifests_diff_empty(self, artifact):
+        manifest = artifact_manifest(artifact[0])
+        assert manifest_diff(manifest, manifest) == []
+
+    def test_diff_is_stable_and_labeled(self, artifact, tmp_path):
+        a = artifact_manifest(artifact[0])
+        b = json.loads(json.dumps(a))
+        b["spec"]["qdtype"] = "fp8"
+        b["config"]["overrides"] = {"moe_expert_path": "spgemm"}
+        del b["source"]["input"]
+        lines1 = manifest_diff(a, b, names=("old", "new"))
+        lines2 = manifest_diff(a, b, names=("old", "new"))
+        assert lines1 == lines2                      # deterministic
+        assert lines1 == sorted(lines1, key=lambda l: l.split(" ", 1)[1])
+        joined = "\n".join(lines1)
+        assert "spec.qdtype: 'int8' -> 'fp8'" in joined
+        assert "only in old" in joined               # removed source.input
+        assert "only in new" in joined               # added override key
+
+    def test_diff_against_reconverted_artifact(self, artifact, tmp_path):
+        # same recipe, fresh save -> manifests identical (stable golden)
+        out, prepared = artifact
+        spec = serving.ServingSpec(layout="compressed", sparsity=(2, 4),
+                                   qdtype="int8")
+        out2 = tmp_path / "again"
+        save_artifact(out2, prepared.params, spec=spec,
+                      config={"arch": ARCH, "smoke": True, "overrides": {}},
+                      source={"input": "unit-test"})
+        assert manifest_diff(artifact_manifest(out),
+                             artifact_manifest(out2)) == []

@@ -1,0 +1,302 @@
+"""Property tests for the checkpoint converter's layout math.
+
+Covers the satellite guarantees: fused-tensor split ∘ re-fuse is the
+identity, partition-dim rules round-trip through a TP-rank reshard
+(2-way -> 1-way -> 2-way bit-exact) for every projection kind, and the
+export ∘ import pipeline reproduces ``init_params`` bit-exactly across
+dense, MoE, and SSM/hybrid configs.
+
+The bitwise export/import round trip relies on one fixture property
+worth stating: RMSNorm gammas convert through the HF spelling as
+``w = 1 + gamma`` / ``gamma = w - 1``, which is exact in fp32 whenever
+``gamma`` came from a bf16/fp32 value of magnitude << 1 (init gammas
+are zeros, and trained gammas are small perturbations) — the fp32
+intermediate has headroom for the add.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    ConvertError,
+    convert_hf,
+    export_hf,
+    fuse_gate_up,
+    fuse_in_proj,
+    fuse_qkv,
+    load_hf_checkpoint,
+    reshard,
+    rule_for,
+    save_hf_checkpoint,
+    split_gate_up,
+    split_in_proj,
+    split_qkv,
+    tp_merge,
+    tp_split,
+    validate_hf_config,
+    write_hf_config,
+)
+from repro.configs import get_smoke_config
+from repro.models import init_params
+
+# one per family class the converter maps: dense GQA, MoE, SSM, hybrid
+ARCHS = ("internlm2_1_8b", "qwen3_moe_235b_a22b", "mamba2_2_7b",
+         "jamba_1_5_large_398b")
+
+
+def _tree_bitequal(a, b):
+    flat = jax.tree.leaves(jax.tree.map(
+        lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b))
+    return all(flat) and len(flat) > 0
+
+
+def _state(arch, seed=0, **export_kw):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, params, export_hf(params, cfg, **export_kw)
+
+
+# ---------------------------------------------------------------------------
+# fused-tensor identities
+# ---------------------------------------------------------------------------
+
+class TestFusedSplits:
+    def test_qkv_split_fuse_identity(self):
+        cfg = get_smoke_config("internlm2_1_8b")
+        rng = np.random.RandomState(0)
+        q = rng.randn(cfg.attn_dim, cfg.d_model).astype(np.float32)
+        k = rng.randn(cfg.kv_dim, cfg.d_model).astype(np.float32)
+        v = rng.randn(cfg.kv_dim, cfg.d_model).astype(np.float32)
+        fused = fuse_qkv(q, k, v, cfg)
+        q2, k2, v2 = split_qkv(fused, cfg)
+        assert np.array_equal(q, q2)
+        assert np.array_equal(k, k2)
+        assert np.array_equal(v, v2)
+        # and fuse ∘ split is the identity on the fused tensor too
+        assert np.array_equal(fuse_qkv(q2, k2, v2, cfg), fused)
+
+    def test_qkv_interleaves_by_kv_group(self):
+        # per kv group: g query heads, then K, then V (internlm2 layout);
+        # a constant-per-head fill makes the interleave order visible
+        cfg = get_smoke_config("internlm2_1_8b")
+        hd, hkv = cfg.head_dim, cfg.num_kv_heads
+        g = cfg.num_heads // hkv
+        mark = lambda n, base: np.concatenate(
+            [np.full((hd, cfg.d_model), base + i, np.float32)
+             for i in range(n)])
+        fused = fuse_qkv(mark(cfg.num_heads, 0), mark(hkv, 100),
+                         mark(hkv, 200), cfg)
+        rows = fused[:, 0].reshape(hkv, g + 2, hd)[:, :, 0]
+        for kv in range(hkv):
+            assert list(rows[kv][:g]) == list(range(kv * g, kv * g + g))
+            assert rows[kv][g] == 100 + kv and rows[kv][g + 1] == 200 + kv
+
+    def test_qkv_shape_mismatch_raises(self):
+        cfg = get_smoke_config("internlm2_1_8b")
+        with pytest.raises(ConvertError, match="fused qkv"):
+            split_qkv(np.zeros((cfg.attn_dim + 1, cfg.d_model)), cfg)
+
+    def test_gate_up_split_fuse_identity(self):
+        rng = np.random.RandomState(1)
+        gate = rng.randn(96, 64).astype(np.float32)
+        up = rng.randn(96, 64).astype(np.float32)
+        g2, u2 = split_gate_up(fuse_gate_up(gate, up))
+        assert np.array_equal(gate, g2) and np.array_equal(up, u2)
+        with pytest.raises(ConvertError, match="odd row count"):
+            split_gate_up(np.zeros((97, 64)))
+
+    def test_in_proj_split_fuse_identity(self):
+        cfg = get_smoke_config("mamba2_2_7b")
+        rng = np.random.RandomState(2)
+        parts = [rng.randn(s, cfg.d_model).astype(np.float32)
+                 for s in (cfg.d_inner, cfg.d_inner, cfg.ssm_state,
+                           cfg.ssm_state, cfg.ssm_heads)]
+        back = split_in_proj(fuse_in_proj(*parts), cfg)
+        assert all(np.array_equal(a, b) for a, b in zip(parts, back))
+        with pytest.raises(ConvertError, match="in_proj"):
+            split_in_proj(np.zeros((3, cfg.d_model)), cfg)
+
+
+# ---------------------------------------------------------------------------
+# partition-dim rules + TP reshard
+# ---------------------------------------------------------------------------
+
+class TestPartitionRules:
+    def test_rules_for_every_projection_kind(self):
+        cfg = get_smoke_config("internlm2_1_8b")
+        col = ["model.layers.0.self_attn.q_proj.weight",
+               "model.layers.0.self_attn.k_proj.weight",
+               "model.layers.0.self_attn.v_proj.weight",
+               "model.layers.0.mlp.gate_proj.weight",
+               "model.layers.0.mlp.up_proj.weight",
+               "model.embed_tokens.weight", "lm_head.weight"]
+        row = ["model.layers.0.self_attn.o_proj.weight",
+               "model.layers.0.mlp.down_proj.weight"]
+        repl = ["model.norm.weight",
+                "model.layers.0.input_layernorm.weight",
+                "model.layers.0.post_attention_layernorm.weight"]
+        for n in col:
+            assert rule_for(n, cfg).partition_dim == 0, n
+        for n in row:
+            assert rule_for(n, cfg).partition_dim == 1, n
+        for n in repl:
+            assert rule_for(n, cfg).partition_dim is None, n
+        # fused tensors carry segment / quantum bookkeeping
+        qkv = rule_for("model.layers.0.self_attn.qkv_proj.weight", cfg)
+        g = cfg.num_heads // cfg.num_kv_heads
+        assert qkv.partition_dim == 0
+        assert qkv.quantum == (g + 2) * cfg.head_dim
+        gu = rule_for("model.layers.0.mlp.gate_up_proj.weight", cfg)
+        assert gu.segments == (cfg.d_ff, cfg.d_ff)
+
+    def test_rules_moe_and_mamba(self):
+        moe = get_smoke_config("qwen3_moe_235b_a22b")
+        assert rule_for("model.layers.1.moe.router.weight",
+                        moe).partition_dim is None
+        assert rule_for("model.layers.1.moe.experts.3.gate_proj.weight",
+                        moe).partition_dim == 0
+        assert rule_for("model.layers.1.moe.experts.3.down_proj.weight",
+                        moe).partition_dim == 1
+        ssm = get_smoke_config("mamba2_2_7b")
+        ip = rule_for("model.layers.0.mamba.in_proj.weight", ssm)
+        assert ip.partition_dim == 0
+        assert ip.segments == (ssm.d_inner, ssm.d_inner, ssm.ssm_state,
+                               ssm.ssm_state, ssm.ssm_heads)
+        assert rule_for("model.layers.0.mamba.out_proj.weight",
+                        ssm).partition_dim == 1
+        assert rule_for("model.layers.0.mamba.A_log",
+                        ssm).partition_dim is None
+        with pytest.raises(ConvertError, match="no partition rule"):
+            rule_for("model.layers.0.mystery.weight", moe)
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_tp_split_merge_roundtrip_every_tensor(self, arch):
+        cfg, _, state = _state(arch)
+        for name, arr in state.items():
+            rule = rule_for(name, cfg)
+            shards = tp_split(arr, rule, 2, name)
+            assert np.array_equal(tp_merge(shards, rule, name), arr), name
+            if rule.partition_dim is not None:
+                dim = rule.partition_dim
+                assert all(s.shape[dim] == arr.shape[dim] // 2
+                           for s in shards), name
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_reshard_2_1_2_bit_exact(self, arch):
+        cfg, _, state = _state(arch)
+        sh2 = reshard([state], 2, cfg)
+        back = reshard(reshard(sh2, 1, cfg), 2, cfg)
+        for r in range(2):
+            assert set(sh2[r]) == set(back[r])
+            for k in sh2[r]:
+                assert np.array_equal(sh2[r][k], back[r][k]), (r, k)
+        merged = reshard(sh2, 1, cfg)[0]
+        assert all(np.array_equal(merged[k], state[k]) for k in state)
+
+    def test_fused_qkv_splits_whole_kv_groups(self):
+        # a 2-way split of the fused qkv must hand each rank whole kv
+        # groups — rank 0's shard re-splits into exactly the first half
+        # of the kv heads
+        cfg, params, state = _state("internlm2_1_8b", fuse_qkv=True,
+                                    fuse_gate_up=True)
+        name = "model.layers.0.self_attn.qkv_proj.weight"
+        rule = rule_for(name, cfg)
+        shards = tp_split(state[name], rule, cfg.num_kv_heads, name)
+        q, k, v = split_qkv(state[name], cfg)
+        hd, hkv = cfg.head_dim, cfg.num_kv_heads
+        g = cfg.num_heads // hkv
+        for r, shard in enumerate(shards):
+            blk = shard.reshape(1, g + 2, hd, cfg.d_model)
+            assert np.array_equal(
+                blk[0, g], k.reshape(hkv, hd, -1)[r]), r
+            assert np.array_equal(
+                blk[0, g + 1], v.reshape(hkv, hd, -1)[r]), r
+
+    def test_indivisible_split_raises(self):
+        cfg = get_smoke_config("internlm2_1_8b")
+        name = "model.layers.0.self_attn.q_proj.weight"
+        with pytest.raises(ConvertError, match="cannot split"):
+            tp_split(np.zeros((cfg.attn_dim, cfg.d_model)),
+                     rule_for(name, cfg), 3, name)
+
+    def test_replicated_mismatch_raises(self):
+        cfg = get_smoke_config("internlm2_1_8b")
+        rule = rule_for("model.norm.weight", cfg)
+        with pytest.raises(ConvertError, match="replicated"):
+            tp_merge([np.zeros(4), np.ones(4)], rule, "model.norm.weight")
+
+
+# ---------------------------------------------------------------------------
+# export ∘ import is the identity on init_params (all families)
+# ---------------------------------------------------------------------------
+
+class TestExportImportRoundtrip:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_unfused_roundtrip_bitexact(self, arch):
+        cfg, params, state = _state(arch)
+        assert _tree_bitequal(params, convert_hf(state, cfg))
+
+    def test_fused_roundtrip_bitexact(self):
+        cfg, params, state = _state("internlm2_1_8b", fuse_qkv=True,
+                                    fuse_gate_up=True)
+        assert any(k.endswith("qkv_proj.weight") for k in state)
+        assert any(k.endswith("gate_up_proj.weight") for k in state)
+        assert _tree_bitequal(params, convert_hf(state, cfg))
+
+    def test_missing_tensor_raises_by_name(self):
+        cfg, _, state = _state("internlm2_1_8b")
+        del state["model.layers.1.self_attn.o_proj.weight"]
+        with pytest.raises(ConvertError,
+                           match="layers.1.self_attn.o_proj"):
+            convert_hf(state, cfg)
+
+    def test_leftover_tensor_raises(self):
+        cfg, _, state = _state("internlm2_1_8b")
+        state["model.layers.9.mystery.weight"] = np.zeros(3, np.float32)
+        with pytest.raises(ConvertError, match="never consumed"):
+            convert_hf(state, cfg)
+        # strict=False drops the stray tensor instead
+        convert_hf(dict(state), cfg, strict=False)
+
+    def test_wrong_shape_raises(self):
+        cfg, _, state = _state("internlm2_1_8b")
+        state["model.embed_tokens.weight"] = np.zeros((7, 7), np.float32)
+        with pytest.raises(ConvertError, match="embed_tokens"):
+            convert_hf(state, cfg)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint directory IO + config validation
+# ---------------------------------------------------------------------------
+
+class TestCheckpointIO:
+    def test_sharded_and_tp_layouts_roundtrip(self, tmp_path):
+        cfg, _, state = _state("internlm2_1_8b")
+        save_hf_checkpoint(tmp_path / "sharded", state, shards=3)
+        s2 = load_hf_checkpoint(tmp_path / "sharded")
+        assert set(s2) == set(state)
+        assert all(np.array_equal(s2[k], state[k]) for k in state)
+        save_hf_checkpoint(tmp_path / "tp", state, tp=2, cfg=cfg)
+        s3 = load_hf_checkpoint(tmp_path / "tp", cfg=cfg)
+        assert all(np.array_equal(s3[k], state[k]) for k in state)
+
+    def test_tp_load_without_cfg_raises(self, tmp_path):
+        cfg, _, state = _state("internlm2_1_8b")
+        save_hf_checkpoint(tmp_path / "tp", state, tp=2, cfg=cfg)
+        with pytest.raises(ConvertError, match="config"):
+            load_hf_checkpoint(tmp_path / "tp")
+
+    def test_missing_dir_raises(self, tmp_path):
+        with pytest.raises(ConvertError, match="does not exist"):
+            load_hf_checkpoint(tmp_path / "nope")
+
+    def test_config_json_validation(self, tmp_path):
+        import json
+        cfg = get_smoke_config("internlm2_1_8b")
+        path = write_hf_config(tmp_path / "config.json", cfg)
+        hf = json.loads(path.read_text())
+        validate_hf_config(cfg, hf)           # self-consistent
+        hf["hidden_size"] = 999
+        with pytest.raises(ConvertError, match="hidden_size=999"):
+            validate_hf_config(cfg, hf)

@@ -25,11 +25,12 @@ def _blocks(path: pathlib.Path):
 
 
 def test_docs_exist_with_examples():
-    """The six guides exist and each carries at least one executable
+    """The seven guides exist and each carries at least one executable
     example (the acceptance contract for the docs subsystem)."""
     names = {p.name for p in DOCS}
     assert {"architecture.md", "quantization.md", "sharding.md",
-            "serving.md", "paper-mapping.md", "analysis.md"} <= names, names
+            "serving.md", "paper-mapping.md", "analysis.md",
+            "checkpoints.md"} <= names, names
     for p in DOCS:
         assert _blocks(p), f"{p.name} has no ```python examples"
 
